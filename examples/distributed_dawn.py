@@ -1,0 +1,53 @@
+"""Sharded DAWN APSP over virtual devices — the multi-pod execution path
+at demo scale (8 host-platform devices, mesh (2, 4)).
+
+MUST run as its own process (device count is locked at jax init):
+
+    PYTHONPATH=src python examples/distributed_dawn.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import time  # noqa: E402
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import bfs_queue_numpy, make_sharded_msbfs, shard_inputs \
+    # noqa: E402
+from repro.graph import generators as gen  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
+
+
+def main():
+    mesh = make_mesh((2, 4), ("data", "model"))
+    print(f"mesh: {dict(mesh.shape)} over {mesh.devices.size} devices")
+
+    g = gen.rmat(10, 8, directed=False, seed=7)
+    n_pad = 1024
+    adj = jnp.asarray(np.asarray(g.to_dense_padded(n_pad)), jnp.int8)
+    sources = jnp.arange(32, dtype=jnp.int32)
+
+    for schedule, bitpack in [("psum", False), ("allgather", False),
+                              ("allgather", True)]:
+        fn = make_sharded_msbfs(mesh, schedule=schedule, bitpack=bitpack)
+        a, s = shard_inputs(mesh, adj, sources, schedule)
+        out = fn(a, s)                      # compile
+        t0 = time.perf_counter()
+        out = fn(a, s)
+        out.dist.block_until_ready()
+        dt = time.perf_counter() - t0
+        tag = f"{schedule}{'+bitpack' if bitpack else ''}"
+        print(f"{tag:20s}: 32-source sweep set in {dt * 1e3:.1f} ms "
+              f"({int(out.sweeps)} sweeps)")
+
+    dist = np.asarray(out.dist)[:, :g.n_nodes]
+    refs = np.stack([bfs_queue_numpy(g, i) for i in range(32)])
+    assert (dist == refs).all()
+    print("distances verified against queue-BFS oracle ✓")
+
+
+if __name__ == "__main__":
+    main()

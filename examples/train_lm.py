@@ -1,0 +1,72 @@
+"""End-to-end training driver: ~100M-param LM for a few hundred steps with
+checkpointing and (simulated) fault tolerance.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import tokens as DT
+from repro.models import transformer as T
+from repro.train import checkpoint as C
+from repro.train import optimizer as O
+from repro.train.train_loop import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = T.LMConfig(
+        name="lm100m", n_layers=args.layers, d_model=args.d_model,
+        n_heads=args.d_model // 64, n_kv=max(1, args.d_model // 128),
+        d_head=64, d_ff=4 * args.d_model, vocab=32768, act="swiglu")
+    print(f"params: {cfg.n_params() / 1e6:.1f}M")
+
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    opt = O.adamw(peak_lr=3e-4,
+                  schedule=O.cosine_schedule(3e-4, warmup=20,
+                                             total=args.steps))
+    state = opt.init(params)
+    step = jax.jit(make_train_step(
+        lambda p, b: T.loss_fn(p, b, cfg), opt, accum=2),
+        donate_argnums=(0, 1))
+
+    start = 0
+    if C.latest_step(args.ckpt_dir):
+        s = C.latest_step(args.ckpt_dir)
+        restored, _ = C.restore(args.ckpt_dir, s,
+                                {"params": params, "opt": state})
+        params, state = restored["params"], restored["opt"]
+        start = s
+        print(f"resumed from step {s}")
+
+    ck = C.CheckpointHook(args.ckpt_dir, interval=50)
+    it = DT.lm_iterator(global_batch=args.batch, seq_len=args.seq,
+                        vocab=cfg.vocab, start_step=start)
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, state, m = step(params, state, batch)
+        ck(i, params, state, m)
+        if (i + 1) % 20 == 0:
+            toks = args.batch * args.seq * (i + 1 - start)
+            print(f"step {i + 1}: loss {float(m['loss']):.3f} "
+                  f"lr {float(m['lr']):.2e} "
+                  f"({toks / (time.time() - t0):.0f} tok/s)")
+    ck.flush()
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

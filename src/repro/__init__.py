@@ -1,0 +1,2 @@
+"""repro — DAWN (matrix-operation shortest paths) as a production JAX framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,12 @@
+"""arctic-480b — MoE LM: 128 experts top-2 + dense residual MLP.
+[hf:Snowflake/snowflake-arctic-base; hf]  35L d_model=7168 56H (GQA kv=8)
+d_ff=4864 vocab=32000, MoE 128e top-2."""
+from ..models.layers import MoEConfig
+from ..models.transformer import LMConfig
+
+CONFIG = LMConfig(
+    name="arctic-480b", n_layers=35, d_model=7168, n_heads=56, n_kv=8,
+    d_head=128, d_ff=4864, vocab=32000, act="swiglu",
+    moe=MoEConfig(n_experts=128, top_k=2, d_model=7168, d_ff=4864,
+                  dense_residual_ff=4864, act="swiglu"),
+    n_dense_layers=0)

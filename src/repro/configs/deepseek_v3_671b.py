@@ -1,0 +1,15 @@
+"""deepseek-v3-671b — MoE LM with MLA, 1 shared + 256 routed top-8, MTP.
+[arXiv:2412.19437; hf]  61L d_model=7168 128H d_ff=2048(expert)
+vocab=129280; first 3 layers dense (d_ff=18432)."""
+from ..models.layers import MLAConfig, MoEConfig
+from ..models.transformer import LMConfig
+
+CONFIG = LMConfig(
+    name="deepseek-v3-671b", n_layers=61, d_model=7168, n_heads=128,
+    n_kv=128, d_head=128, d_ff=18432, vocab=129280, act="swiglu",
+    moe=MoEConfig(n_experts=256, top_k=8, d_model=7168, d_ff=2048,
+                  shared_expert_ff=2048, act="swiglu"),
+    n_dense_layers=3,
+    mla=MLAConfig(d_model=7168, n_heads=128, q_lora_rank=1536,
+                  kv_lora_rank=512, d_nope=128, d_rope=64, d_v=128),
+    mtp=True)

@@ -1,0 +1,7 @@
+"""dien — sequential-behaviour CTR model with AUGRU interest evolution.
+[arXiv:1809.03672; unverified]  embed=18 seq=100 gru=108 mlp=200-80."""
+from ..models.recsys import DIENConfig
+
+CONFIG = DIENConfig(
+    name="dien", embed_dim=18, seq_len=100, gru_dim=108, mlp=(200, 80),
+    n_items=8_000_000, n_cats=100_000, n_profile=1_000_000)

@@ -1,0 +1,7 @@
+"""equiformer-v2 — eSCN equivariant graph attention.
+[arXiv:2306.12059; unverified]  12L d_hidden=128 l_max=6 m_max=2 8H."""
+from ..models.gnn import EqV2Config
+
+CONFIG = EqV2Config(
+    name="equiformer-v2", n_layers=12, d_hidden=128, l_max=6, m_max=2,
+    n_heads=8)

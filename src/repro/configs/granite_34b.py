@@ -1,0 +1,7 @@
+"""granite-34b — dense LM, llama-arch code model, MQA (kv=1).
+[arXiv:2405.04324; hf]  88L d_model=6144 48H (GQA kv=1) d_ff=24576 vocab=49152."""
+from ..models.transformer import LMConfig
+
+CONFIG = LMConfig(
+    name="granite-34b", n_layers=88, d_model=6144, n_heads=48, n_kv=1,
+    d_head=128, d_ff=24576, vocab=49152, act="gelu")

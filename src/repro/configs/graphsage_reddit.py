@@ -1,0 +1,7 @@
+"""graphsage-reddit — sampled GNN, mean aggregator.
+[arXiv:1706.02216; paper]  2L d_hidden=128 sample 25-10."""
+from ..models.gnn import SAGEConfig
+
+CONFIG = SAGEConfig(
+    name="graphsage-reddit", n_layers=2, d_hidden=128, fanouts=(25, 10),
+    d_in=602, n_classes=41)

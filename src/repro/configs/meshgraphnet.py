@@ -1,0 +1,6 @@
+"""meshgraphnet — encode-process-decode mesh GNN.
+[arXiv:2010.03409; unverified]  15L d_hidden=128 sum-agg 2-layer MLPs."""
+from ..models.gnn import MGNConfig
+
+CONFIG = MGNConfig(
+    name="meshgraphnet", n_layers=15, d_hidden=128, mlp_layers=2)

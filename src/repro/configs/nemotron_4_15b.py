@@ -1,0 +1,8 @@
+"""nemotron-4-15b — dense LM, GQA kv=8, squared-ReLU MLP.
+[arXiv:2402.16819; unverified]  32L d_model=6144 48H (GQA kv=8) d_ff=24576
+vocab=256000."""
+from ..models.transformer import LMConfig
+
+CONFIG = LMConfig(
+    name="nemotron-4-15b", n_layers=32, d_model=6144, n_heads=48, n_kv=8,
+    d_head=128, d_ff=24576, vocab=256000, act="relu2")

@@ -1,0 +1,8 @@
+"""qwen2-72b — dense LM, GQA kv=8, QKV bias.
+[arXiv:2407.10671; hf]  80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064."""
+from ..models.transformer import LMConfig
+
+CONFIG = LMConfig(
+    name="qwen2-72b", n_layers=80, d_model=8192, n_heads=64, n_kv=8,
+    d_head=128, d_ff=29568, vocab=152064, act="swiglu", qkv_bias=True,
+    rope_theta=1e6)

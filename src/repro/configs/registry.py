@@ -1,0 +1,45 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from . import (arctic_480b, dawn, deepseek_v3_671b, dien, equiformer_v2,
+               granite_34b, graphsage_reddit, meshgraphnet, nemotron_4_15b,
+               qwen2_72b, schnet)
+from .shapes import GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES
+
+_ARCHS = {
+    "granite-34b": ("lm", granite_34b.CONFIG),
+    "qwen2-72b": ("lm", qwen2_72b.CONFIG),
+    "nemotron-4-15b": ("lm", nemotron_4_15b.CONFIG),
+    "arctic-480b": ("lm", arctic_480b.CONFIG),
+    "deepseek-v3-671b": ("lm", deepseek_v3_671b.CONFIG),
+    "equiformer-v2": ("gnn", equiformer_v2.CONFIG),
+    "meshgraphnet": ("gnn", meshgraphnet.CONFIG),
+    "graphsage-reddit": ("gnn", graphsage_reddit.CONFIG),
+    "schnet": ("gnn", schnet.CONFIG),
+    "dien": ("recsys", dien.CONFIG),
+}
+
+_SHAPES = {"lm": LM_SHAPES, "gnn": GNN_SHAPES, "recsys": RECSYS_SHAPES}
+
+
+def list_archs():
+    return sorted(_ARCHS)
+
+
+def get_arch(arch_id: str):
+    """Returns (family, config)."""
+    if arch_id not in _ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {list_archs()}")
+    return _ARCHS[arch_id]
+
+
+def shapes_for(arch_id: str) -> Dict[str, Any]:
+    family, _ = get_arch(arch_id)
+    return _SHAPES[family]
+
+
+def all_cells():
+    """Every (arch, shape) pair — the 40-cell dry-run matrix."""
+    return [(a, s) for a in list_archs() for s in shapes_for(a)]

@@ -1,0 +1,6 @@
+"""schnet — continuous-filter convolutions.
+[arXiv:1706.08566; paper]  3 interactions d_hidden=64 rbf=300 cutoff=10."""
+from ..models.gnn import SchNetConfig
+
+CONFIG = SchNetConfig(
+    name="schnet", n_interactions=3, d_hidden=64, n_rbf=300, cutoff=10.0)

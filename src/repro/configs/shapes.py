@@ -1,0 +1,76 @@
+"""Input-shape sets per architecture family (from the assignment brief)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class LMShape:
+    shape_id: str
+    kind: str                 # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+LM_SHAPES = {
+    "train_4k": LMShape("train_4k", "train", 4096, 256),
+    "prefill_32k": LMShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": LMShape("decode_32k", "decode", 32768, 128),
+    "long_500k": LMShape("long_500k", "decode", 524288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNShape:
+    shape_id: str
+    kind: str                 # "full" | "sampled" | "batched"
+    n_nodes: int
+    n_edges: int
+    d_feat: int
+    batch_nodes: int = 0
+    fanout: Tuple[int, ...] = ()
+    n_graphs: int = 1
+
+
+GNN_SHAPES = {
+    "full_graph_sm": GNNShape("full_graph_sm", "full", 2_708, 10_556, 1_433),
+    "minibatch_lg": GNNShape("minibatch_lg", "sampled", 232_965,
+                             114_615_892, 602, batch_nodes=1_024,
+                             fanout=(15, 10)),
+    "ogb_products": GNNShape("ogb_products", "full", 2_449_029,
+                             61_859_140, 100),
+    "molecule": GNNShape("molecule", "batched", 30, 64, 8, n_graphs=128),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysShape:
+    shape_id: str
+    kind: str                 # "train" | "serve" | "retrieval"
+    batch: int
+    n_candidates: int = 0
+
+
+RECSYS_SHAPES = {
+    "train_batch": RecsysShape("train_batch", "train", 65_536),
+    "serve_p99": RecsysShape("serve_p99", "serve", 512),
+    "serve_bulk": RecsysShape("serve_bulk", "serve", 262_144),
+    "retrieval_cand": RecsysShape("retrieval_cand", "retrieval", 1,
+                                  n_candidates=1_000_000),
+}
+
+
+def pad_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def sampled_sizes(shape: GNNShape) -> Tuple[int, int]:
+    """(sub_nodes, sub_edges) of the fanout-sampled subgraph."""
+    n, e = shape.batch_nodes, 0
+    layer = shape.batch_nodes
+    for f in shape.fanout:
+        layer *= f
+        n += layer
+        e += layer
+    return n, e

@@ -1,0 +1,25 @@
+"""DAWN core — matrix-operation shortest paths (the paper's contribution)."""
+from .frontier import (UNREACHED, pack_bits, unpack_bits, popcount,
+                       one_hot_frontier, packed_width)
+from .bovm import bovm_sweep, bovm_msbfs, bovm_sssp, DawnState
+from .sovm import sovm_sweep, sovm_sssp, sovm_msbfs, SovmState, reconstruct_path
+from .bfs import bfs_queue_numpy, bfs_scipy, bfs_level_sync_jax
+from .sssp import sssp, multi_source, apsp, apsp_dense, SsspResult
+from .wcc import wcc, wcc_stats, WccResult
+from .distributed import make_sharded_msbfs, shard_inputs, ShardedDawnResult
+from .weighted import (minplus_sssp, bucketed_sssp, expand_integer_weights,
+                       dijkstra_oracle, WeightedResult)
+from .centrality import closeness, harmonic, eccentricity_sample
+
+__all__ = [
+    "UNREACHED", "pack_bits", "unpack_bits", "popcount", "one_hot_frontier",
+    "packed_width", "bovm_sweep", "bovm_msbfs", "bovm_sssp", "DawnState",
+    "sovm_sweep", "sovm_sssp", "sovm_msbfs", "SovmState", "reconstruct_path",
+    "bfs_queue_numpy", "bfs_scipy", "bfs_level_sync_jax",
+    "sssp", "multi_source", "apsp", "apsp_dense", "SsspResult",
+    "wcc", "wcc_stats", "WccResult",
+    "make_sharded_msbfs", "shard_inputs", "ShardedDawnResult",
+    "minplus_sssp", "bucketed_sssp", "expand_integer_weights",
+    "dijkstra_oracle", "WeightedResult",
+    "closeness", "harmonic", "eccentricity_sample",
+]

@@ -1,0 +1,106 @@
+"""BOVM — Boolean Vector/Matrix Operation (paper Alg. 1), TPU form.
+
+The paper walks CSC columns with a per-element early exit.  The TPU-native
+equivalent is a {0,1}-valued matmul: a sweep computes
+
+    counts = F @ A        (S sources batched; MXU-friendly)
+    hits   = counts > 0
+    new    = hits & ~visited          # Theorem 3.2 skip
+    dist   = where(new, step, dist)   # first hit IS the shortest path
+
+and the per-element early exit becomes tile-level skipping inside the
+Pallas kernel (kernels/bovm).  Values are exact: counts ≤ n < 2^24 so f32
+accumulation is lossless; int8 inputs with int32 accumulation are also
+supported.
+
+Convergence is Fact 1: a sweep that discovers nothing terminates the loop —
+expressed as a scalar reduction usable as a `lax.while_loop` predicate.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .frontier import UNREACHED, one_hot_frontier
+
+
+class DawnState(NamedTuple):
+    frontier: jax.Array   # (S, n) bool — discovered in the previous sweep
+    dist: jax.Array       # (S, n) int32, UNREACHED = -1
+    step: jax.Array       # scalar int32, current path length
+    done: jax.Array       # scalar bool — Fact 1 fired
+    edges_touched: jax.Array  # scalar int64-ish float — work counter (Eq. 5)
+
+
+def bovm_sweep(adj: jax.Array, frontier: jax.Array, visited: jax.Array,
+               *, accum_dtype=jnp.float32,
+               matmul_fn=None) -> jax.Array:
+    """One boolean sweep: new = (frontier @ adj > 0) & ~visited.
+
+    adj      : (n, n) int8/bool dense adjacency (row = src, col = dst)
+    frontier : (S, n) bool
+    visited  : (S, n) bool
+    matmul_fn: optional kernel override (e.g. the Pallas tile-skip kernel),
+               signature (F_int, A_int) -> counts.
+    """
+    if matmul_fn is None:
+        f = frontier.astype(accum_dtype)
+        a = adj.astype(accum_dtype)
+        counts = jax.lax.dot_general(
+            f, a, (((1,), (0,)), ((), ())),
+            preferred_element_type=accum_dtype)
+    else:
+        counts = matmul_fn(frontier, adj)
+    hits = counts > 0
+    return hits & ~visited
+
+
+@partial(jax.jit, static_argnames=("max_steps", "accum_dtype"))
+def bovm_msbfs(adj: jax.Array, sources: jax.Array, *,
+               max_steps: Optional[int] = None,
+               accum_dtype=jnp.float32) -> DawnState:
+    """Multi-source DAWN over a dense adjacency.
+
+    adj     : (n, n) int8 dense adjacency
+    sources : (S,) int32
+    returns : DawnState with dist (S, n); dist[s, sources[s]] = 0.
+    """
+    n = adj.shape[0]
+    s = sources.shape[0]
+    max_steps = n if max_steps is None else max_steps
+
+    f0 = one_hot_frontier(sources, n)
+    dist0 = jnp.where(f0, 0, jnp.full((s, n), UNREACHED))
+    state = DawnState(frontier=f0, dist=dist0,
+                      step=jnp.int32(0), done=jnp.bool_(False),
+                      edges_touched=jnp.float32(0.0))
+
+    deg = jnp.sum(adj.astype(jnp.float32), axis=1)  # out-degrees
+
+    def cond(st: DawnState):
+        return (~st.done) & (st.step < max_steps)
+
+    def body(st: DawnState):
+        step = st.step + 1
+        visited = st.dist >= 0
+        new = bovm_sweep(adj, st.frontier, visited, accum_dtype=accum_dtype)
+        dist = jnp.where(new, step, st.dist)
+        any_new = jnp.any(new)
+        touched = st.edges_touched + jnp.sum(
+            st.frontier.astype(jnp.float32) * deg[None, :])
+        return DawnState(frontier=new, dist=dist, step=step,
+                         done=~any_new, edges_touched=touched)
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+def bovm_sssp(adj: jax.Array, source, **kw) -> DawnState:
+    """Single-source convenience wrapper (S = 1)."""
+    src = jnp.atleast_1d(jnp.asarray(source, jnp.int32))
+    st = bovm_msbfs(adj, src, **kw)
+    return DawnState(frontier=st.frontier[0], dist=st.dist[0],
+                     step=st.step, done=st.done,
+                     edges_touched=st.edges_touched)

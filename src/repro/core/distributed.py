@@ -1,0 +1,127 @@
+"""Distributed DAWN under shard_map — the multi-pod execution path.
+
+Layout (DESIGN.md §6):
+  * sources sharded over the data-parallel axes (``pod`` × ``data``) —
+    APSP source blocks are embarrassingly parallel;
+  * adjacency sharded over ``model``;
+  * per-sweep collective stitches the frontier back together.
+
+Two collective schedules are provided (compared in EXPERIMENTS.md §Perf):
+
+  ``schedule="psum"``        adjacency row-sharded; every sweep psums f32
+                             partial counts of shape (S_local, n) — the
+                             naive SUMMA-style schedule, 4·S_l·n bytes/sweep.
+  ``schedule="allgather"``   adjacency column-sharded; every sweep
+                             all-gathers the *boolean* local hit block
+                             (S_l · n/C bytes), optionally bit-packed
+                             (``bitpack=True`` → S_l · n/(8C) bytes) —
+                             32·C× fewer collective bytes than psum.
+
+Both run the identical DAWN sweep semantics (Thm 3.2 skip + Fact 1 stop).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .frontier import UNREACHED, one_hot_frontier, pack_bits, unpack_bits
+
+
+class ShardedDawnResult(NamedTuple):
+    dist: jax.Array      # (S, n) int32
+    sweeps: jax.Array    # scalar int32
+
+
+def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def make_sharded_msbfs(mesh: Mesh, *, schedule: str = "allgather",
+                       bitpack: bool = True, max_steps: int = 0):
+    """Build a jitted multi-source DAWN for ``mesh``.
+
+    Returns fn(adj (n, n) int8, sources (S,) int32) -> ShardedDawnResult.
+    ``n`` must divide by mesh model-axis size × 32 (bitpack) and ``S`` by
+    the data-parallel extent.
+    """
+    dp = _dp_axes(mesh)
+    model_ax = "model"
+    c = mesh.shape[model_ax]
+
+    adj_spec = P(model_ax, None) if schedule == "psum" else P(None, model_ax)
+    f_spec = P(dp, None)
+
+    def run_local(adj_l, f0_l, dist0_l, steps):
+        s_l, n = f0_l.shape
+
+        def cond(carry):
+            _, _, step, done = carry
+            return (~done) & (step < steps)
+
+        def body(carry):
+            f, dist, step, done = carry
+            if schedule == "psum":
+                # adj_l: (n/C, n); f slice for my rows
+                row0 = jax.lax.axis_index(model_ax) * adj_l.shape[0]
+                f_rows = jax.lax.dynamic_slice_in_dim(f, row0, adj_l.shape[0], 1)
+                part = jax.lax.dot_general(
+                    f_rows.astype(jnp.float32), adj_l.astype(jnp.float32),
+                    (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                counts = jax.lax.psum(part, model_ax)        # (S_l, n) f32
+                hits = counts > 0
+            else:
+                # adj_l: (n, n/C) — local columns
+                counts = jax.lax.dot_general(
+                    f.astype(jnp.float32), adj_l.astype(jnp.float32),
+                    (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                hits_l = counts > 0                          # (S_l, n/C)
+                if bitpack:
+                    packed = pack_bits(hits_l)               # (S_l, n/(32C))
+                    gathered = jax.lax.all_gather(
+                        packed, model_ax, axis=1, tiled=True)
+                    hits = unpack_bits(gathered, n)
+                else:
+                    hits = jax.lax.all_gather(
+                        hits_l, model_ax, axis=1, tiled=True)
+            new = hits & (dist == UNREACHED)
+            step = step + 1
+            dist = jnp.where(new, step, dist)
+            any_new = jax.lax.psum(
+                jnp.any(new).astype(jnp.int32), dp + (model_ax,)) > 0
+            return new, dist, step, ~any_new
+
+        f, dist, step, done = jax.lax.while_loop(
+            cond, body, (f0_l, dist0_l, jnp.int32(0), jnp.bool_(False)))
+        return dist, step
+
+    sharded = jax.shard_map(
+        run_local, mesh=mesh,
+        in_specs=(adj_spec, f_spec, f_spec, P()),
+        out_specs=(f_spec, P()),
+        check_vma=False)
+
+    @jax.jit
+    def msbfs(adj: jax.Array, sources: jax.Array) -> ShardedDawnResult:
+        n = adj.shape[0]
+        steps = jnp.int32(max_steps if max_steps else n)
+        f0 = one_hot_frontier(sources, n)
+        dist0 = jnp.where(f0, 0, jnp.full(f0.shape, UNREACHED))
+        dist, sweeps = sharded(adj, f0, dist0, steps)
+        return ShardedDawnResult(dist, sweeps)
+
+    return msbfs
+
+
+def shard_inputs(mesh: Mesh, adj: jax.Array, sources: jax.Array,
+                 schedule: str = "allgather"):
+    """Device-put inputs with the layout make_sharded_msbfs expects."""
+    adj_spec = P("model", None) if schedule == "psum" else P(None, "model")
+    adj = jax.device_put(adj, NamedSharding(mesh, adj_spec))
+    sources = jax.device_put(sources, NamedSharding(mesh, P(_dp_axes(mesh))))
+    return adj, sources

@@ -1,0 +1,77 @@
+"""Public SSSP/APSP drivers — the paper's user-facing API.
+
+``sssp(graph, source, method="auto")`` picks the execution path:
+
+  * ``sovm``  — edge-parallel sparse sweep (paper Alg. 2), best for sparse
+                graphs / single sources (default for density < 1%).
+  * ``bovm``  — dense boolean matmul sweeps (paper Alg. 1 / MXU path),
+                best for dense graphs or batched sources.
+  * ``auto``  — density- and batch-driven dispatch (the paper's own BOVM vs
+                SOVM guidance, §3.3).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph.csr import CSRGraph
+from .bovm import bovm_msbfs
+from .sovm import sovm_msbfs, sovm_sssp
+
+
+class SsspResult(NamedTuple):
+    dist: jax.Array          # (n,) or (S, n) int32; -1 unreachable
+    eccentricity: jax.Array  # sweeps executed that discovered something
+    edges_touched: jax.Array
+
+
+def _density(g: CSRGraph) -> float:
+    return g.n_edges / max(g.n_nodes * g.n_nodes, 1)
+
+
+def _pick(g: CSRGraph, n_sources: int, method: str) -> str:
+    if method != "auto":
+        return method
+    # dense matmul path pays off when the adjacency fits comfortably and
+    # either the graph is dense or many sources amortize the O(n^2) sweeps.
+    if g.n_nodes <= 4096 and (_density(g) > 0.01 or n_sources >= 32):
+        return "bovm"
+    return "sovm"
+
+
+def sssp(g: CSRGraph, source: int, *, method: str = "auto") -> SsspResult:
+    m = _pick(g, 1, method)
+    if m == "bovm":
+        st = bovm_msbfs(g.to_dense(), jnp.asarray([source], jnp.int32))
+        return SsspResult(st.dist[0], st.step - 1, st.edges_touched)
+    st = sovm_sssp(g, source)
+    return SsspResult(st.dist, st.sweeps, st.edges_touched)
+
+
+def multi_source(g: CSRGraph, sources: Sequence[int] | jax.Array, *,
+                 method: str = "auto") -> SsspResult:
+    sources = jnp.asarray(sources, jnp.int32)
+    m = _pick(g, int(sources.shape[0]), method)
+    if m == "bovm":
+        st = bovm_msbfs(g.to_dense(), sources)
+        return SsspResult(st.dist, st.step - 1, st.edges_touched)
+    st = sovm_msbfs(g, sources)
+    return SsspResult(st.dist, jnp.max(st.sweeps), jnp.sum(st.edges_touched))
+
+
+def apsp(g: CSRGraph, *, block: int = 128, method: str = "auto"):
+    """All-pairs via blocked multi-source sweeps.  Yields (sources, dist)
+    blocks to avoid materializing the full (n, n) matrix for large n."""
+    n = g.n_nodes
+    for lo in range(0, n, block):
+        srcs = jnp.arange(lo, min(lo + block, n), dtype=jnp.int32)
+        yield srcs, multi_source(g, srcs, method=method).dist
+
+
+def apsp_dense(g: CSRGraph, *, block: int = 128, method: str = "auto"):
+    """Materialized APSP (small graphs / tests)."""
+    rows = [np.asarray(d) for _, d in apsp(g, block=block, method=method)]
+    return np.concatenate(rows, axis=0)

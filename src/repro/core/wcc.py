@@ -1,0 +1,63 @@
+"""Weakly connected components via min-label propagation.
+
+Provides S_wcc / E_wcc(i) — the quantities in DAWN's complexity bounds
+(Eqs. 10-12) — using the same scatter machinery as SOVM.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph.csr import CSRGraph
+
+
+class WccResult(NamedTuple):
+    labels: jax.Array      # (n,) int32 — component id = min node id in comp
+    iters: jax.Array
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def wcc(g: CSRGraph, *, max_iters=None) -> WccResult:
+    n = g.n_nodes
+    max_iters = n if max_iters is None else max_iters
+    labels0 = jnp.concatenate([jnp.arange(n, dtype=jnp.int32),
+                               jnp.full(1, n, jnp.int32)])
+
+    def cond(c):
+        labels, it, done = c
+        return (~done) & (it < max_iters)
+
+    def body(c):
+        labels, it, _ = c
+        # undirected propagation: push min label along both directions
+        fwd = labels.at[g.dst].min(labels[g.src])
+        new = fwd.at[g.src].min(fwd[g.dst])
+        done = jnp.all(new == labels)
+        return new, it + 1, done
+
+    labels, iters, _ = jax.lax.while_loop(
+        cond, body, (labels0, jnp.int32(0), jnp.bool_(False)))
+    return WccResult(labels[:n], iters)
+
+
+def wcc_stats(g: CSRGraph):
+    """Host-side S_wcc, E_wcc and per-node component sizes (numpy)."""
+    labels = np.asarray(wcc(g).labels)
+    src, dst = g.edge_arrays_np()
+    comp_ids, counts = np.unique(labels, return_counts=True)
+    edge_comp = labels[src]
+    edge_counts = {int(c): int((edge_comp == c).sum()) for c in comp_ids}
+    node_counts = {int(c): int(k) for c, k in zip(comp_ids, counts)}
+    largest = max(node_counts, key=lambda c: node_counts[c])
+    return {
+        "labels": labels,
+        "S_wcc": node_counts[largest],
+        "E_wcc": edge_counts.get(largest, 0),
+        "S_wcc_of": lambda i: node_counts[int(labels[i])],
+        "E_wcc_of": lambda i: edge_counts.get(int(labels[i]), 0),
+        "n_components": len(comp_ids),
+    }

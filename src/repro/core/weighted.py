@@ -1,0 +1,110 @@
+"""Weighted-graph DAWN — the paper's §5 future-work direction.
+
+The paper closes with "addressing the balance between optimizing matrix
+operations and managing the consumption of (min,+) operations … to expand
+the applicability of DAWN on weighted graphs".  We implement that
+extension two ways, both keeping DAWN's matrix-operation character:
+
+1. ``minplus_sssp``  — (min,+) edge-parallel relaxation sweeps (tropical
+   semiring analogue of the boolean sweep): each sweep relaxes every edge
+   with scatter-min; Fact 1 generalizes to "no distance improved".  Exact
+   for arbitrary non-negative float weights; sweep count ≤ the longest
+   shortest path's hop count (Bellman-Ford depth), so the work bound is
+   O(hops·m) — the direct generalization of BOVM's O(ε·m).
+
+2. ``bucketed_sssp`` — for small integer weights w ∈ {1..W} (the regime
+   of Galil-Margalit-style algorithms the paper cites): expand each
+   weight-w edge into w unit hops through (w-1) virtual nodes, then run
+   the UNWEIGHTED SOVM sweep machinery unchanged.  This preserves DAWN's
+   boolean-sweep inner loop (Thm 3.2 skipping included) at the cost of
+   O(W·m) virtual edges — the matrix-op/(min,+) trade the paper
+   anticipates, made explicit.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph.csr import CSRGraph
+from .sovm import sovm_sssp
+
+INF = jnp.float32(jnp.inf)
+
+
+class WeightedResult(NamedTuple):
+    dist: jax.Array          # (n,) float32; inf = unreachable
+    sweeps: jax.Array
+
+
+@partial(jax.jit, static_argnames=("max_sweeps",))
+def minplus_sssp(g: CSRGraph, weights: jax.Array, source, *,
+                 max_sweeps: Optional[int] = None) -> WeightedResult:
+    """(min,+) sweep SSSP.  weights (m_pad,) float32 ≥ 0 (padded entries
+    ignored via the sentinel row)."""
+    n = g.n_nodes
+    max_sweeps = n if max_sweeps is None else max_sweeps
+    src_id = jnp.asarray(source, jnp.int32)
+    dist0 = jnp.full(n + 1, INF).at[src_id].set(0.0)
+
+    w = jnp.where(g.src < n, weights, INF)
+
+    def cond(c):
+        _, sweeps, done = c
+        return (~done) & (sweeps < max_sweeps)
+
+    def body(c):
+        dist, sweeps, _ = c
+        cand = dist[g.src] + w                     # (m_pad,)
+        new = dist.at[g.dst].min(cand)
+        improved = jnp.any(new < dist)
+        return new, sweeps + 1, ~improved
+
+    dist, sweeps, _ = jax.lax.while_loop(
+        cond, body, (dist0, jnp.int32(0), jnp.bool_(False)))
+    return WeightedResult(dist[:n], sweeps - 1)
+
+
+def expand_integer_weights(g: CSRGraph, weights: np.ndarray) -> CSRGraph:
+    """Unit-hop expansion: a weight-w edge (u→v) becomes a path
+    u → x₁ → … → x_{w-1} → v of unit edges (host-side construction)."""
+    src, dst = g.edge_arrays_np()
+    weights = np.asarray(weights[: g.n_edges], dtype=np.int64)
+    assert (weights >= 1).all(), "integer weights must be ≥ 1"
+    n = g.n_nodes
+    new_src, new_dst = [], []
+    next_virtual = n
+    for u, v, w in zip(src, dst, weights):
+        if w == 1:
+            new_src.append(u); new_dst.append(v)
+            continue
+        chain = [u] + list(range(next_virtual, next_virtual + w - 1)) + [v]
+        next_virtual += w - 1
+        for a, b in zip(chain[:-1], chain[1:]):
+            new_src.append(a); new_dst.append(b)
+    return CSRGraph.from_edges(np.asarray(new_src), np.asarray(new_dst),
+                               next_virtual, dedup=False)
+
+
+def bucketed_sssp(g: CSRGraph, weights: np.ndarray, source: int
+                  ) -> WeightedResult:
+    """Small-integer-weight SSSP through the unweighted SOVM machinery."""
+    eg = expand_integer_weights(g, weights)
+    st = sovm_sssp(eg, source)
+    dist = jnp.where(st.dist[: g.n_nodes] < 0, INF,
+                     st.dist[: g.n_nodes].astype(jnp.float32))
+    return WeightedResult(dist, st.sweeps)
+
+
+def dijkstra_oracle(g: CSRGraph, weights: np.ndarray,
+                    source: int) -> np.ndarray:
+    """scipy Dijkstra reference for tests."""
+    import scipy.sparse as sp
+    import scipy.sparse.csgraph as csgraph
+    src, dst = g.edge_arrays_np()
+    mat = sp.csr_matrix((np.asarray(weights[: g.n_edges], np.float64),
+                         (src, dst)), shape=(g.n_nodes, g.n_nodes))
+    return csgraph.dijkstra(mat, indices=source, directed=True)

@@ -1,0 +1,1 @@
+from . import tokens, graphs, recsys, pipeline

@@ -1,0 +1,51 @@
+"""Host→device pipeline: sharded placement + background prefetch.
+
+``shard_batch`` places a host batch according to a PartitionSpec pytree
+(each host would materialize only its addressable shard in a multi-host
+deployment — here single-host, full placement).  ``Prefetcher`` overlaps
+host batch synthesis with device compute via a worker thread and a small
+queue (depth 2 keeps one batch in flight without unbounded memory)."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def shard_batch(mesh: Mesh, batch: Dict[str, np.ndarray],
+                specs: Dict[str, PartitionSpec]):
+    return {
+        k: jax.device_put(v, NamedSharding(mesh, specs.get(
+            k, PartitionSpec())))
+        for k, v in batch.items()}
+
+
+class Prefetcher:
+    def __init__(self, it: Iterator, *, depth: int = 2,
+                 place: Optional[Callable] = None):
+        self.it = it
+        self.place = place or (lambda x: x)
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self.done = False
+        self.thread = threading.Thread(target=self._work, daemon=True)
+        self.thread.start()
+
+    def _work(self):
+        try:
+            for item in self.it:
+                self.q.put(self.place(item))
+        finally:
+            self.q.put(StopIteration)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self.q.get()
+        if item is StopIteration:
+            raise StopIteration
+        return item

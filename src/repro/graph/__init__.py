@@ -1,0 +1,4 @@
+from .csr import CSRGraph, symmetrize
+from . import generators, partition, sampler, io
+
+__all__ = ["CSRGraph", "symmetrize", "generators", "partition", "sampler", "io"]

@@ -1,0 +1,170 @@
+"""Fixed-shape CSR/CSC graph containers for JAX.
+
+JAX has no CSR/CSC sparse support (BCOO only), and DAWN's SOVM operates on
+CSR adjacency while BOVM operates on CSC.  We therefore carry *both* layouts
+as padded, fixed-shape integer arrays registered as a pytree, so graphs can
+flow through jit/shard_map/scan without retracing on content changes.
+
+Padding convention: edge arrays are padded to ``m_pad`` entries; padded slots
+hold ``src = dst = n_nodes`` (a sentinel row).  All frontier / distance
+buffers are sized ``n_nodes + 1`` internally so the sentinel scatters into a
+dead row that is dropped on exit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["indptr", "indices", "src", "dst",
+                      "indptr_t", "indices_t"],
+         meta_fields=["n_nodes", "n_edges", "m_pad"])
+@dataclasses.dataclass(frozen=True)
+class CSRGraph:
+    """Padded CSR (+ COO + transpose/CSC) adjacency.
+
+    Attributes
+    ----------
+    indptr    : (n+1,) int32       row pointers (CSR, out-edges)
+    indices   : (m_pad,) int32     column ids (dst), padded with ``n_nodes``
+    src       : (m_pad,) int32     COO source per edge, padded with ``n_nodes``
+    dst       : (m_pad,) int32     alias of indices (kept explicit for segment ops)
+    indptr_t  : (n+1,) int32       CSC column pointers (in-edges)
+    indices_t : (m_pad,) int32     CSC row ids, padded with ``n_nodes``
+    n_nodes   : int (static)
+    n_edges   : int (static)       true edge count (directed)
+    m_pad     : int (static)       padded edge-array length
+    """
+
+    indptr: jax.Array
+    indices: jax.Array
+    src: jax.Array
+    dst: jax.Array
+    indptr_t: jax.Array
+    indices_t: jax.Array
+    n_nodes: int
+    n_edges: int
+    m_pad: int
+
+    # -- constructors ------------------------------------------------------
+
+    @staticmethod
+    def from_edges(src: np.ndarray, dst: np.ndarray, n_nodes: int,
+                   *, dedup: bool = True, remove_self_loops: bool = True,
+                   pad_to: int | None = None) -> "CSRGraph":
+        """Build from host-side COO edge arrays (numpy)."""
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        if remove_self_loops:
+            keep = src != dst
+            src, dst = src[keep], dst[keep]
+        if dedup and len(src):
+            key = src * n_nodes + dst
+            _, uniq = np.unique(key, return_index=True)
+            src, dst = src[uniq], dst[uniq]
+        order = np.lexsort((dst, src))
+        src, dst = src[order], dst[order]
+        m = len(src)
+        m_pad = pad_to if pad_to is not None else max(_round_up(max(m, 1), 128), 128)
+        assert m_pad >= m, f"pad_to={m_pad} < m={m}"
+
+        indptr = np.zeros(n_nodes + 1, dtype=np.int32)
+        np.add.at(indptr, src + 1, 1)
+        indptr = np.cumsum(indptr).astype(np.int32)
+
+        # transpose (CSC) — in-edges sorted by dst
+        order_t = np.lexsort((src, dst))
+        src_t, dst_t = src[order_t], dst[order_t]
+        indptr_t = np.zeros(n_nodes + 1, dtype=np.int32)
+        np.add.at(indptr_t, dst_t + 1, 1)
+        indptr_t = np.cumsum(indptr_t).astype(np.int32)
+
+        def pad(a):
+            out = np.full(m_pad, n_nodes, dtype=np.int32)
+            out[:m] = a
+            return out
+
+        return CSRGraph(
+            indptr=jnp.asarray(indptr),
+            indices=jnp.asarray(pad(dst)),
+            src=jnp.asarray(pad(src)),
+            dst=jnp.asarray(pad(dst)),
+            indptr_t=jnp.asarray(indptr_t),
+            indices_t=jnp.asarray(pad(src_t)),
+            n_nodes=int(n_nodes),
+            n_edges=int(m),
+            m_pad=int(m_pad),
+        )
+
+    @staticmethod
+    def from_scipy(mat, **kw) -> "CSRGraph":
+        coo = mat.tocoo()
+        return CSRGraph.from_edges(coo.row, coo.col, mat.shape[0], **kw)
+
+    # -- views -------------------------------------------------------------
+
+    def to_dense(self, dtype=jnp.int8) -> jax.Array:
+        """Dense (n, n) adjacency — BOVM / MXU path.  Padded edges drop out."""
+        n = self.n_nodes
+        a = jnp.zeros((n + 1, n + 1), dtype=dtype)
+        a = a.at[self.src, self.dst].set(1)
+        return a[:n, :n]
+
+    def to_dense_padded(self, n_pad: int, dtype=jnp.int8) -> jax.Array:
+        """Dense adjacency zero-padded to (n_pad, n_pad) (tile-aligned)."""
+        n = self.n_nodes
+        assert n_pad >= n
+        a = jnp.zeros((max(n_pad, n + 1), max(n_pad, n + 1)), dtype=dtype)
+        a = a.at[self.src, self.dst].set(
+            jnp.where(self.src < n, jnp.ones_like(self.src, dtype=dtype), 0))
+        return a[:n_pad, :n_pad]
+
+    def out_degrees(self) -> jax.Array:
+        return self.indptr[1:] - self.indptr[:-1]
+
+    def in_degrees(self) -> jax.Array:
+        return self.indptr_t[1:] - self.indptr_t[:-1]
+
+    def reverse(self) -> "CSRGraph":
+        """Transpose view as a first-class CSRGraph (shares buffers)."""
+        return CSRGraph(
+            indptr=self.indptr_t, indices=self.indices_t,
+            src=self.dst, dst=self.src,
+            indptr_t=self.indptr, indices_t=self.indices,
+            n_nodes=self.n_nodes, n_edges=self.n_edges, m_pad=self.m_pad)
+
+    # -- host helpers ------------------------------------------------------
+
+    def edge_arrays_np(self) -> Tuple[np.ndarray, np.ndarray]:
+        src = np.asarray(self.src)[: self.n_edges]
+        dst = np.asarray(self.dst)[: self.n_edges]
+        return src, dst
+
+    def to_scipy(self):
+        import scipy.sparse as sp
+        src, dst = self.edge_arrays_np()
+        return sp.csr_matrix(
+            (np.ones(len(src), dtype=np.int8), (src, dst)),
+            shape=(self.n_nodes, self.n_nodes))
+
+    def memory_bytes(self, *, boolean_frontier: bool = True) -> int:
+        """DAWN's memory model (paper §3.4): CSR + distance + 2 bool arrays."""
+        n, m = self.n_nodes, self.n_edges
+        csr = 4 * m  # 4m for column indices (indptr amortized into n terms)
+        if boolean_frontier:
+            return csr + 3 * n          # distance-as-byte + two bool arrays
+        return csr + 8 * n              # BFS: 4n distance + 4n queue
+
+
+def symmetrize(src: np.ndarray, dst: np.ndarray):
+    return (np.concatenate([src, dst]), np.concatenate([dst, src]))

@@ -1,0 +1,54 @@
+"""Minimal graph IO: whitespace edge lists and MatrixMarket pattern files."""
+from __future__ import annotations
+
+import numpy as np
+
+from .csr import CSRGraph, symmetrize
+
+
+def load_edgelist(path: str, *, undirected: bool = False,
+                  zero_indexed: bool = True) -> CSRGraph:
+    src, dst = [], []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith(("#", "%")):
+                continue
+            a, b = line.split()[:2]
+            src.append(int(a)); dst.append(int(b))
+    src = np.asarray(src); dst = np.asarray(dst)
+    if not zero_indexed:
+        src -= 1; dst -= 1
+    n = int(max(src.max(), dst.max())) + 1 if len(src) else 1
+    if undirected:
+        src, dst = symmetrize(src, dst)
+    return CSRGraph.from_edges(src, dst, n)
+
+
+def load_mtx(path: str) -> CSRGraph:
+    """MatrixMarket coordinate pattern/real square matrices as graphs."""
+    with open(path) as f:
+        header = f.readline()
+        symmetric = "symmetric" in header
+        line = f.readline()
+        while line.startswith("%"):
+            line = f.readline()
+        n_rows, n_cols, _ = (int(x) for x in line.split()[:3])
+        src, dst = [], []
+        for line in f:
+            parts = line.split()
+            if len(parts) < 2:
+                continue
+            src.append(int(parts[0]) - 1); dst.append(int(parts[1]) - 1)
+    src = np.asarray(src); dst = np.asarray(dst)
+    if symmetric:
+        src, dst = symmetrize(src, dst)
+    return CSRGraph.from_edges(src, dst, max(n_rows, n_cols))
+
+
+def save_edgelist(g: CSRGraph, path: str) -> None:
+    src, dst = g.edge_arrays_np()
+    with open(path, "w") as f:
+        f.write(f"# nodes={g.n_nodes} edges={g.n_edges}\n")
+        for s, d in zip(src, dst):
+            f.write(f"{s} {d}\n")

@@ -1,0 +1,66 @@
+"""Graph partitioning for distributed DAWN.
+
+Two layouts, matched to the two DAWN execution paths:
+
+1. ``block_dense``  — (R, C) grid of dense adjacency tiles for the BOVM /
+   MXU path.  Tile (r, c) holds edges src∈row-block r, dst∈col-block c.
+   Used by ``core.distributed`` under shard_map: each device owns one
+   (or a strip of) tiles.
+
+2. ``edge_partition`` — per-shard padded COO, partitioned by *destination*
+   block so the scatter in the SOVM step is shard-local and the only
+   collective is the frontier broadcast/psum.
+
+Both produce fixed shapes (max-padded per shard) so they are shard_map-able.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .csr import CSRGraph, _round_up
+
+
+def block_dense(g: CSRGraph, r_blocks: int, c_blocks: int,
+                dtype=jnp.int8) -> Tuple[jnp.ndarray, int]:
+    """Dense (R, C, nb, nb) tile grid.  Returns (tiles, nb)."""
+    n = g.n_nodes
+    nb = _round_up((n + max(r_blocks, c_blocks) - 1) // max(r_blocks, c_blocks), 128)
+    n_pad = nb * max(r_blocks, c_blocks)
+    nb_r = n_pad // r_blocks
+    nb_c = n_pad // c_blocks
+    dense = np.zeros((n_pad, n_pad), dtype=np.int8)
+    src, dst = g.edge_arrays_np()
+    dense[src, dst] = 1
+    tiles = dense.reshape(r_blocks, nb_r, c_blocks, nb_c).transpose(0, 2, 1, 3)
+    return jnp.asarray(tiles, dtype=dtype), nb_r
+
+
+def edge_partition(g: CSRGraph, n_parts: int):
+    """Partition COO edges by dst block. Returns dict of stacked padded arrays:
+
+      src  (P, e_pad) int32   global source ids (sentinel n)
+      dst  (P, e_pad) int32   *local* destination ids within the part
+      n_local (int)           nodes per part (last part padded)
+    """
+    n = g.n_nodes
+    n_local = (n + n_parts - 1) // n_parts
+    src, dst = g.edge_arrays_np()
+    part = dst // n_local
+    e_pad = max(_round_up(int(max((part == p).sum() for p in range(n_parts))), 128), 128)
+    src_out = np.full((n_parts, e_pad), n, dtype=np.int32)
+    dst_out = np.full((n_parts, e_pad), n_local, dtype=np.int32)
+    for p in range(n_parts):
+        sel = part == p
+        k = int(sel.sum())
+        src_out[p, :k] = src[sel]
+        dst_out[p, :k] = dst[sel] - p * n_local
+    return {
+        "src": jnp.asarray(src_out),
+        "dst": jnp.asarray(dst_out),
+        "n_local": n_local,
+        "n_parts": n_parts,
+        "n_nodes": n,
+    }

@@ -1,0 +1,47 @@
+"""Fanout neighbor sampler (GraphSAGE) built on DAWN frontier machinery.
+
+A fanout sample IS a randomized sub-frontier expansion: hop ``h`` draws
+``fanout[h]`` neighbors per frontier node from the CSR row — exactly the
+SOVM row-gather (paper Alg. 2 line 4-5) with a random subset instead of the
+full row.  Fixed shapes throughout: each hop yields (batch · prod(fanouts))
+node ids with repeats allowed (standard GraphSAGE semantics); zero-degree
+nodes self-loop.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .csr import CSRGraph
+
+
+@partial(jax.jit, static_argnames=("fanout",))
+def sample_hop(g: CSRGraph, nodes: jax.Array, key: jax.Array,
+               fanout: int) -> jax.Array:
+    """Sample ``fanout`` neighbors for each node. (B,) -> (B, fanout)."""
+    start = g.indptr[jnp.minimum(nodes, g.n_nodes - 1)]
+    deg = g.indptr[jnp.minimum(nodes, g.n_nodes - 1) + 1] - start
+    r = jax.random.randint(key, (nodes.shape[0], fanout), 0, jnp.iinfo(jnp.int32).max)
+    # r mod deg, guarding deg==0 → self-loop
+    safe_deg = jnp.maximum(deg, 1)
+    offs = r % safe_deg[:, None]
+    eidx = start[:, None] + offs
+    nbrs = g.indices[jnp.clip(eidx, 0, g.m_pad - 1)]
+    return jnp.where(deg[:, None] > 0, nbrs, nodes[:, None])
+
+
+def sample_subgraph(g: CSRGraph, seeds: jax.Array, key: jax.Array,
+                    fanouts: Sequence[int]) -> Tuple[jax.Array, ...]:
+    """Multi-hop fanout sample. Returns tuple of per-hop node-id arrays:
+    layer 0 = seeds (B,), layer h = (B * prod(fanouts[:h]),)."""
+    layers = [seeds]
+    cur = seeds
+    for h, f in enumerate(fanouts):
+        key, sub = jax.random.split(key)
+        nbrs = sample_hop(g, cur, sub, int(f))
+        cur = nbrs.reshape(-1)
+        layers.append(cur)
+    return tuple(layers)

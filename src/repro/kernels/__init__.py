@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the paper's compute hot spots (validated with
+interpret=True on CPU)."""
+from . import bovm

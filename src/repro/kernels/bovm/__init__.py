@@ -1,0 +1,4 @@
+from .ops import (sweep, msbfs_kernel, msbfs_packed, pack_adjacency_pull,
+                  KernelDawnResult)
+from .kernel import fused_sweep, packed_pull_sweep
+from .ref import sweep_ref, packed_pull_ref

@@ -1,0 +1,98 @@
+"""Jitted wrappers + full DAWN drivers built on the Pallas sweep kernels.
+
+On CPU (this container) the kernels execute under ``interpret=True``; on a
+real TPU set ``interpret=False`` (the default flips on backend detection).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ...core.frontier import UNREACHED, one_hot_frontier, pack_bits
+from . import kernel as K
+from . import ref as R
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+class KernelDawnResult(NamedTuple):
+    dist: jax.Array
+    sweeps: jax.Array
+
+
+def sweep(frontier, adj, dist, step, *, use_kernel: bool = True,
+          interpret: bool | None = None, **tiles):
+    """Single fused sweep — kernel when shapes allow, oracle otherwise."""
+    if interpret is None:
+        interpret = _default_interpret()
+    s, n = frontier.shape
+    bs = tiles.get("bs", 128)
+    bn = tiles.get("bn", 128)
+    bk = tiles.get("bk", 512)
+    if (not use_kernel or s % bs or n % bn or n % bk):
+        return R.sweep_ref(frontier, adj, dist, step)
+    return K.fused_sweep(frontier, adj, dist, step, interpret=interpret,
+                         **tiles)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_steps", "interpret", "bs", "bn", "bk"))
+def msbfs_kernel(adj: jax.Array, sources: jax.Array, *, max_steps: int,
+                 interpret: bool = True, bs: int = 128, bn: int = 128,
+                 bk: int = 512) -> KernelDawnResult:
+    """Full multi-source DAWN with the fused Pallas sweep in the loop body."""
+    n = adj.shape[0]
+    s = sources.shape[0]
+    f0 = one_hot_frontier(sources, n, dtype=jnp.int8)
+    dist0 = jnp.where(f0 > 0, 0, jnp.full((s, n), UNREACHED))
+
+    def cond(c):
+        _, _, step, done = c
+        return (~done) & (step < max_steps)
+
+    def body(c):
+        f, dist, step, _ = c
+        new, dist = K.fused_sweep(f, adj, dist, step + 1, bs=bs, bn=bn,
+                                  bk=bk, interpret=interpret)
+        return new, dist, step + 1, ~jnp.any(new > 0)
+
+    _, dist, step, _ = jax.lax.while_loop(
+        cond, body, (f0, dist0, jnp.int32(0), jnp.bool_(False)))
+    return KernelDawnResult(dist, step)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "max_steps", "interpret",
+                                    "bs", "bn", "wk"))
+def msbfs_packed(adj_in_packed: jax.Array, sources: jax.Array, n: int, *,
+                 max_steps: int, interpret: bool = True, bs: int = 8,
+                 bn: int = 128, wk: int = 128) -> KernelDawnResult:
+    """Pull-direction DAWN over the bit-packed in-neighbour matrix."""
+    s = sources.shape[0]
+    f0 = one_hot_frontier(sources, n, dtype=jnp.bool_)
+    dist0 = jnp.where(f0, 0, jnp.full((s, n), UNREACHED))
+
+    def cond(c):
+        _, _, step, done = c
+        return (~done) & (step < max_steps)
+
+    def body(c):
+        fp, dist, step, _ = c
+        new, dist = K.packed_pull_sweep(fp, adj_in_packed, dist, step + 1,
+                                        bs=bs, bn=bn, wk=wk,
+                                        interpret=interpret)
+        return pack_bits(new > 0), dist, step + 1, ~jnp.any(new > 0)
+
+    _, dist, step, _ = jax.lax.while_loop(
+        cond, body, (pack_bits(f0), dist0, jnp.int32(0), jnp.bool_(False)))
+    return KernelDawnResult(dist, step)
+
+
+def pack_adjacency_pull(adj: jax.Array) -> jax.Array:
+    """(n, n) dense adjacency -> (n, W) uint32 packed in-neighbour rows."""
+    return pack_bits(adj.T != 0)

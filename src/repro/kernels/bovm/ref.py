@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the fused DAWN sweep kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sweep_ref(frontier: jnp.ndarray, adj: jnp.ndarray, dist: jnp.ndarray,
+              step) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Reference fused sweep.
+
+    frontier : (S, n) int8/bool — current frontier
+    adj      : (n, n) int8 dense adjacency
+    dist     : (S, n) int32, -1 = unreached
+    step     : int32 — path length being assigned this sweep
+
+    returns (new_frontier int8 (S, n), dist int32 (S, n))
+    """
+    counts = frontier.astype(jnp.float32) @ adj.astype(jnp.float32)
+    visited = dist >= 0
+    new = (counts > 0) & ~visited
+    return new.astype(jnp.int8), jnp.where(new, jnp.int32(step), dist)
+
+
+def packed_pull_ref(frontier_packed: jnp.ndarray, adj_in_packed: jnp.ndarray,
+                    dist: jnp.ndarray, step) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Reference for the bit-packed pull sweep.
+
+    frontier_packed : (S, W) uint32 — packed frontier rows (W = ceil(n/32))
+    adj_in_packed   : (n, W) uint32 — row j = packed in-neighbour set of j
+    dist            : (S, n) int32
+
+    hits[s, j] = any_w(frontier_packed[s, w] & adj_in_packed[j, w])
+    """
+    inter = frontier_packed[:, None, :] & adj_in_packed[None, :, :]
+    hits = jnp.any(inter != 0, axis=-1)
+    visited = dist >= 0
+    new = hits & ~visited
+    return new.astype(jnp.int8), jnp.where(new, jnp.int32(step), dist)

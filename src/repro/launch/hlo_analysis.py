@@ -1,0 +1,337 @@
+"""Static analysis of post-SPMD HLO text: exact per-device FLOPs, memory
+traffic, and collective wire bytes with loop-trip multiplicities.
+
+Why: ``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified:
+a scan of 8 matmuls reports 1 matmul of FLOPs), which under-counts scanned
+layer stacks by ~100×.  This module rebuilds the numbers from the HLO text:
+
+  * computations are parsed into instruction lists;
+  * a call graph (while/fusion/call/conditional/to_apply) is walked from
+    ENTRY with multiplicities — while bodies multiply by their trip count,
+    recovered from the constant bound in the loop condition;
+  * FLOPs: 2 · prod(result dims) · prod(contracting dims) per dot
+    (counted inside fusions too);
+  * bytes: operand + result bytes of every *scheduled* instruction (entry,
+    while bodies, conditional branches) — fusion internals excluded, the
+    fusion call-site I/O counted instead, matching what actually moves
+    through HBM;
+  * collectives: result bytes converted to per-device wire bytes with ring
+    factors (AG/RS: (n-1)/n; AR: 2(n-1)/n; A2A: (n-1)/n).
+
+Shapes in post-SPMD HLO are per-partition, so every number is per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import gzip
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
+                "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# result type is either a tuple "(... /*index=5*/ ...)" (lazy-matched up to
+# the first ") opcode(") or a single shape token
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(.*?\)|\S+?)\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->")
+_ATTR_SINGLE_RE = re.compile(
+    r"(?:body|condition|to_apply|calls)=%?([\w\.\-]+)")
+_ATTR_LIST_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUP_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUP_RE2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "after-all", "iota", "partition-id",
+                   "replica-id"}
+
+_WIRE_FACTOR = {
+    "all-gather": lambda n: (n - 1) / n,
+    "all-gather-start": lambda n: (n - 1) / n,
+    "reduce-scatter": lambda n: (n - 1) / n,
+    "all-reduce": lambda n: 2 * (n - 1) / n,
+    "all-reduce-start": lambda n: 2 * (n - 1) / n,
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+    "collective-permute-start": lambda n: 1.0,
+}
+
+
+def _shape_dims(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_type: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]          # instr name -> result type text
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for line in hlo.splitlines():
+        stripped = line.rstrip()
+        # computation header: "%name (args...) -> type {" (args may nest)
+        if stripped.endswith("{") and "->" in stripped and \
+                (stripped.startswith("%") or stripped.startswith("ENTRY")):
+            m = re.search(r"%([\w\.\-]+)", stripped)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                if stripped.startswith("ENTRY"):
+                    entry_name = cur.name
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi:
+            name, rtype, opcode = mi.groups()
+            cur.instrs.append(Instr(name, opcode, rtype, line.strip()))
+            cur.shapes[name] = rtype
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _operands(line: str) -> List[str]:
+    """Operand names inside the first balanced paren group after the '='."""
+    i = line.find("(")
+    if i < 0:
+        return []
+    depth = 0
+    for j in range(i, len(line)):
+        if line[j] == "(":
+            depth += 1
+        elif line[j] == ")":
+            depth -= 1
+            if depth == 0:
+                inner = line[i + 1:j]
+                return re.findall(r"%([\w\.\-]+)", inner)
+    return []
+
+
+def _called_comps(line: str) -> List[str]:
+    out = [m.group(1) for m in _ATTR_SINGLE_RE.finditer(line)]
+    for m in _ATTR_LIST_RE.finditer(line):
+        out.extend(re.findall(r"%?([\w\.\-]+)", m.group(1)))
+    return out
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    consts = []
+    for ins in cond.instrs:
+        m = re.search(r"constant\((\d+)\)", ins.line)
+        if m:
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def multiplicities(comps: Dict[str, Computation]) -> Dict[str, float]:
+    """Execution count per computation, walking from ENTRY."""
+    mult: Dict[str, float] = {}
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {}
+
+    def visit(comp: Computation, m: float):
+        mult[comp.name] = mult.get(comp.name, 0.0) + m
+        for ins in comp.instrs:
+            called = _called_comps(ins.line)
+            if not called:
+                continue
+            if ins.opcode == "while":
+                body_cond = re.search(
+                    r"condition=%?([\w\.\-]+), body=%?([\w\.\-]+)", ins.line)
+                if body_cond:
+                    cond_n, body_n = body_cond.groups()
+                    trip = _trip_count(comps, cond_n)
+                    if body_n in comps:
+                        visit(comps[body_n], m * trip)
+                    if cond_n in comps:
+                        visit(comps[cond_n], m * (trip + 1))
+                continue
+            for cn in called:
+                if cn in comps:
+                    visit(comps[cn], m)
+
+    visit(entry, 1.0)
+    return mult
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    shapes = _shape_dims(ins.result_type)
+    if not shapes:
+        return 0.0
+    _, rdims = shapes[0]
+    out = 1
+    for d in rdims:
+        out *= d
+    ops = _operands(ins.line)
+    if not ops:
+        return 0.0
+    lhs_type = comp.shapes.get(ops[0], "")
+    lhs_shapes = _shape_dims(lhs_type)
+    m = _CONTRACT_RE.search(ins.line)
+    k = 1
+    if lhs_shapes and m:
+        _, ldims = lhs_shapes[0]
+        for ds in m.group(1).split(","):
+            if ds and int(ds) < len(ldims):
+                k *= ldims[int(ds)]
+    return 2.0 * out * k
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float
+    bytes_accessed: float
+    wire_bytes: float
+    collective_ops: List[dict]
+    trip_counts: Dict[str, float]
+
+
+def analyze(hlo: str) -> HloStats:
+    comps = parse_module(hlo)
+    mult = multiplicities(comps)
+    entry = comps.get("__entry__")
+    entry_name = entry.name if entry else ""
+
+    # which computations are "scheduled" (their instruction I/O is HBM
+    # traffic): entry + while bodies/conds + conditional branches + call
+    scheduled = {entry_name}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode in ("while", "conditional", "call"):
+                scheduled.update(_called_comps(ins.line))
+
+    def _instr_bytes(comp: Computation, ins: Instr) -> float:
+        """HBM traffic of one scheduled instruction — slice-aware:
+        slicing ops touch the slice, not the (possibly huge, stacked)
+        operand; in-place updates touch the update region twice."""
+        ops = _operands(ins.line)
+        if ins.opcode in ("dynamic-slice", "slice", "gather"):
+            return 2.0 * _shape_bytes(ins.result_type)
+        if ins.opcode == "dynamic-update-slice":
+            upd = comp.shapes.get(ops[1], "") if len(ops) > 1 else ""
+            return 2.0 * _shape_bytes(upd)
+        if ins.opcode == "scatter":
+            upd = comp.shapes.get(ops[2], "") if len(ops) > 2 else ""
+            return 3.0 * _shape_bytes(upd)
+        if ins.opcode == "fusion":
+            called = _called_comps(ins.line)
+            body = comps.get(called[0]) if called else None
+            if body is not None:
+                return _fusion_bytes(body, comp, ops, ins)
+        b = _shape_bytes(ins.result_type)
+        for op in ops:
+            b += _shape_bytes(comp.shapes.get(op, ""))
+        return b
+
+    def _fusion_bytes(body: Computation, caller: Computation,
+                      call_operands: List[str], ins: Instr) -> float:
+        """Fusion I/O with slice-awareness: a fusion parameter consumed
+        only by slice/gather ops inside the body is charged at the slice
+        size; a fusion whose root is a dynamic-update-slice is charged at
+        the update size (in-place stacked-buffer update)."""
+        # parameter index -> body param name
+        param_names = {}
+        for bi in body.instrs:
+            if bi.opcode == "parameter":
+                mnum = re.search(r"parameter\((\d+)\)", bi.line)
+                if mnum:
+                    param_names[int(mnum.group(1))] = bi.name
+        total = 0.0
+        for idx, opname in enumerate(call_operands):
+            full = _shape_bytes(caller.shapes.get(opname, ""))
+            pname = param_names.get(idx)
+            if pname is None:
+                total += full
+                continue
+            uses = [bi for bi in body.instrs
+                    if pname in _operands(bi.line)]
+            if uses and all(u.opcode in ("dynamic-slice", "slice", "gather")
+                            for u in uses):
+                total += sum(_shape_bytes(u.result_type) for u in uses)
+            else:
+                total += full
+        # output side
+        root = body.instrs[-1] if body.instrs else None
+        if root is not None and root.opcode == "dynamic-update-slice":
+            rops = _operands(root.line)
+            upd = body.shapes.get(rops[1], "") if len(rops) > 1 else ""
+            total += 2.0 * _shape_bytes(upd)
+        else:
+            total += _shape_bytes(ins.result_type)
+        return total
+
+    flops = 0.0
+    nbytes = 0.0
+    wire = 0.0
+    coll_ops: List[dict] = []
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m <= 0 or comp.name == "__entry__":
+            continue
+        is_sched = comp.name in scheduled or comp.name == entry_name
+        for ins in comp.instrs:
+            if ins.opcode in ("dot", "convolution"):
+                flops += _dot_flops(comp, ins) * m
+            if is_sched and ins.opcode not in _SKIP_BYTES_OPS:
+                nbytes += _instr_bytes(comp, ins) * m
+            if ins.opcode in _WIRE_FACTOR or ins.opcode in _COLLECTIVES:
+                g = _GROUP_RE.search(ins.line)
+                if g:
+                    group = len(g.group(1).split(","))
+                else:
+                    g2 = _GROUP_RE2.search(ins.line)
+                    group = int(g2.group(2)) if g2 else 1
+                rb = _shape_bytes(ins.result_type)
+                factor = _WIRE_FACTOR.get(
+                    ins.opcode, lambda n: 1.0)(max(group, 1))
+                wire += rb * factor * m
+                coll_ops.append({"op": ins.opcode, "bytes": rb,
+                                 "group_size": group, "mult": m,
+                                 "comp": comp.name})
+
+    trips = {c: mult[c] for c in mult if mult[c] > 1}
+    return HloStats(flops=flops, bytes_accessed=nbytes, wire_bytes=wire,
+                    collective_ops=coll_ops, trip_counts=trips)
+
+
+def analyze_file(path: str) -> HloStats:
+    opener = gzip.open if path.endswith(".gz") else open
+    with opener(path, "rt") as f:
+        return analyze(f.read())

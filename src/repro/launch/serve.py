@@ -1,0 +1,75 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id>``.
+
+Runs the continuous-batching engine over a reduced config of the selected
+LM (or the DIEN scorer for recsys) and reports latency percentiles +
+throughput — the local, runnable face of the decode/prefill paths the
+dry-run lowers at production scale.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..configs import get_arch
+from ..models import recsys as R
+from ..models import transformer as T
+from ..serve.engine import Request, ServingEngine
+from .train import reduced_lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-72b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    family, cfg = get_arch(args.arch)
+    key = jax.random.PRNGKey(0)
+    rng = np.random.default_rng(0)
+
+    if family == "recsys":
+        import dataclasses
+        cfg = dataclasses.replace(cfg, n_items=5000, n_cats=100,
+                                  n_profile=1000, seq_len=20)
+        params = R.dien_init(key, cfg)
+        from ..data.recsys import click_batch
+        fwd = jax.jit(lambda p, b: R.dien_forward(p, b, cfg)[0])
+        lat = []
+        for i in range(args.requests):
+            b = {k: np.asarray(v) for k, v in
+                 click_batch(i, cfg, batch=args.slots).items()}
+            t0 = time.perf_counter()
+            fwd(params, b)[0].block_until_ready()
+            lat.append(time.perf_counter() - t0)
+        lat_ms = np.array(lat) * 1e3
+        print(f"[dien] {args.requests} batches of {args.slots}: "
+              f"p50 {np.percentile(lat_ms, 50):.1f}ms "
+              f"p99 {np.percentile(lat_ms, 99):.1f}ms")
+        return
+
+    cfg = reduced_lm(cfg)
+    params = T.init_params(key, cfg)
+    eng = ServingEngine(params, cfg, slots=args.slots, max_len=256)
+    t0 = time.monotonic()
+    for r in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab, size=rng.integers(4, 24))
+        eng.submit(Request(rid=r, prompt=prompt.astype(np.int32),
+                           max_new=args.max_new))
+    done = eng.run_to_completion()
+    wall = time.monotonic() - t0
+    ttft = [d.t_first - d.t_submit for d in done]
+    total_toks = sum(len(d.out) for d in done)
+    print(f"[{args.arch} reduced] {len(done)} requests, "
+          f"{total_toks} tokens in {wall:.1f}s "
+          f"({total_toks / wall:.1f} tok/s); "
+          f"TTFT p50 {np.percentile(ttft, 50)*1e3:.0f}ms "
+          f"p99 {np.percentile(ttft, 99)*1e3:.0f}ms")
+
+
+if __name__ == "__main__":
+    main()

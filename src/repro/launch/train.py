@@ -1,0 +1,138 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs a *reduced* config of the selected architecture end-to-end on the
+local devices (CPU here; the same code path drives the production mesh on
+real hardware), with checkpointing, fault-tolerance hooks, and metrics.
+The full-size configs are exercised by the dry-run (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_arch
+from ..data import graphs as DG
+from ..data import recsys as DR
+from ..data import tokens as DTok
+from ..models import gnn as G
+from ..models import recsys as R
+from ..models import transformer as T
+from ..train import optimizer as O
+from ..train.checkpoint import CheckpointHook, latest_step, restore
+from ..train.train_loop import make_train_step, train
+
+
+def reduced_lm(cfg: T.LMConfig) -> T.LMConfig:
+    moe = None
+    if cfg.moe is not None:
+        moe = dataclasses.replace(cfg.moe, n_experts=8, top_k=2,
+                                  d_model=128, d_ff=128, n_groups=1,
+                                  shared_expert_ff=min(
+                                      cfg.moe.shared_expert_ff, 128),
+                                  dense_residual_ff=min(
+                                      cfg.moe.dense_residual_ff, 128))
+    mla = None
+    if cfg.mla is not None:
+        mla = dataclasses.replace(cfg.mla, d_model=128, n_heads=4,
+                                  q_lora_rank=64, kv_lora_rank=32,
+                                  d_nope=16, d_rope=16, d_v=16)
+    return dataclasses.replace(
+        cfg, n_layers=2, d_model=128, n_heads=4, n_kv=min(cfg.n_kv, 2),
+        d_head=32, d_ff=256, vocab=512, moe=moe,
+        n_dense_layers=min(cfg.n_dense_layers, 1), mla=mla)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    args = ap.parse_args()
+
+    family, cfg = get_arch(args.arch)
+    key = jax.random.PRNGKey(0)
+    hooks = []
+    if args.ckpt_dir:
+        hooks.append(CheckpointHook(args.ckpt_dir, args.ckpt_every))
+
+    if family == "lm":
+        cfg = reduced_lm(cfg)
+        params = T.init_params(key, cfg)
+        opt = O.adamw(peak_lr=args.lr,
+                      schedule=O.cosine_schedule(args.lr, warmup=10,
+                                                 total=args.steps))
+        step = jax.jit(make_train_step(
+            lambda p, b: T.loss_fn(p, b, cfg), opt))
+        it = ({"tokens": jnp.asarray(b["tokens"]),
+               "labels": jnp.asarray(b["labels"])}
+              for b in DTok.lm_iterator(global_batch=args.batch,
+                                        seq_len=args.seq, vocab=cfg.vocab))
+    elif family == "gnn":
+        g = DG.demo_graph("small")
+        batch_np = DG.full_graph_batch(g, d_feat=64, seed=0)
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        if args.arch == "graphsage-reddit":
+            cfg = dataclasses.replace(cfg, d_in=64)
+            params = G.sage_init(key, cfg)
+            loss = lambda p, b: G.sage_loss(p, b, cfg)
+        elif args.arch == "meshgraphnet":
+            cfg = dataclasses.replace(cfg, n_layers=3, d_node_in=64)
+            params = G.mgn_init(key, cfg)
+            loss = lambda p, b: G.mgn_loss(p, b, cfg)
+        elif args.arch == "schnet":
+            cfg = dataclasses.replace(cfg, n_rbf=32)
+            params = G.schnet_init(key, cfg)
+            loss = lambda p, b: G.schnet_loss(p, b, cfg, 1)
+        else:
+            cfg = dataclasses.replace(cfg, n_layers=2, d_hidden=16, l_max=2)
+            params = G.eqv2_init(key, cfg)
+            loss = lambda p, b: G.eqv2_loss(p, b, cfg, 1)
+        opt = O.adamw(peak_lr=args.lr)
+        step = jax.jit(make_train_step(loss, opt))
+        it = iter(lambda: batch, None)  # same full-graph batch each step
+        it = (batch for _ in range(10**9))
+    else:
+        cfg = dataclasses.replace(cfg, n_items=5000, n_cats=100,
+                                  n_profile=1000, seq_len=20)
+        params = R.dien_init(key, cfg)
+        opt = O.adamw(peak_lr=args.lr)
+        step = jax.jit(make_train_step(
+            lambda p, b: R.dien_loss(p, b, cfg), opt))
+        it = ({k: jnp.asarray(v) for k, v in
+               DR.click_batch(i, cfg, batch=args.batch).items()}
+              for i in range(10**9))
+
+    opt_state = opt.init(params)
+    start = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir):
+        s = latest_step(args.ckpt_dir)
+        (restored, _) = restore(args.ckpt_dir, s,
+                                {"params": params, "opt": opt_state})[0], s
+        params, opt_state = restored["params"], restored["opt"]
+        start = s
+        print(f"resumed from step {s}")
+
+    t0 = time.time()
+    params, opt_state, metrics = train(
+        params, opt_state, step, it, n_steps=args.steps, hooks=hooks,
+        start_step=start)
+    for h in hooks:
+        if hasattr(h, "flush"):
+            h.flush()
+    dt = time.time() - t0
+    print(f"[{args.arch}] {args.steps - start} steps in {dt:.1f}s; "
+          f"final metrics: "
+          f"{ {k: float(np.asarray(v)) for k, v in metrics.items()} }")
+
+
+if __name__ == "__main__":
+    main()

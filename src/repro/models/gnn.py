@@ -1,0 +1,490 @@
+"""GNN architectures: GraphSAGE, MeshGraphNet, SchNet, EquiformerV2 (eSCN).
+
+Message passing is built on ``jax.ops.segment_sum``-style scatter over edge
+index arrays (JAX has no CSR SpMM) — the same primitive family DAWN's SOVM
+uses (DESIGN.md §4).  All batches are fixed-shape dicts:
+
+    feat (N, d) | pos (N, 3) | species (N,) | src/dst (E,) int32 (sentinel N)
+    node_mask (N,) bool | labels / targets
+
+Scatters go into N+1 rows; the sentinel row is dropped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import spherical as sph
+from .layers import linear, linear_init, _normal
+
+Params = Dict[str, Any]
+
+
+# -- segment primitives -------------------------------------------------------
+
+def seg_sum(data: jax.Array, seg: jax.Array, n: int) -> jax.Array:
+    """Scatter-add rows of data by segment id; returns (n, ...)."""
+    out = jnp.zeros((n + 1,) + data.shape[1:], data.dtype).at[seg].add(data)
+    return out[:n]
+
+
+def seg_mean(data: jax.Array, seg: jax.Array, n: int) -> jax.Array:
+    s = seg_sum(data, seg, n)
+    cnt = seg_sum(jnp.ones((data.shape[0], 1), data.dtype), seg, n)
+    return s / jnp.maximum(cnt, 1)
+
+
+def seg_softmax(logits: jax.Array, seg: jax.Array, n: int) -> jax.Array:
+    """Per-destination softmax over edges. logits (E, H) -> weights (E, H)."""
+    mx = jnp.full((n + 1,) + logits.shape[1:], -jnp.inf, logits.dtype
+                  ).at[seg].max(logits)
+    ex = jnp.exp(logits - mx[seg])
+    den = jnp.zeros((n + 1,) + logits.shape[1:], logits.dtype).at[seg].add(ex)
+    return ex / jnp.maximum(den[seg], 1e-20)
+
+
+def _mlp_init(key, dims, dtype=jnp.float32, layernorm=False):
+    ks = jax.random.split(key, len(dims) - 1)
+    p = {"layers": [linear_init(k, a, b, bias=True, dtype=dtype)
+                    for k, a, b in zip(ks, dims[:-1], dims[1:])]}
+    if layernorm:
+        p["ln_g"] = jnp.ones((dims[-1],), dtype)
+        p["ln_b"] = jnp.zeros((dims[-1],), dtype)
+    return p
+
+
+def _mlp(p, x, act=jax.nn.relu):
+    h = x
+    for i, lp in enumerate(p["layers"]):
+        h = linear(lp, h)
+        if i < len(p["layers"]) - 1:
+            h = act(h)
+    if "ln_g" in p:
+        mu = h.mean(-1, keepdims=True)
+        var = ((h - mu) ** 2).mean(-1, keepdims=True)
+        h = (h - mu) * jax.lax.rsqrt(var + 1e-6) * p["ln_g"] + p["ln_b"]
+    return h
+
+
+# ==============================================================================
+# GraphSAGE  (mean aggregator, 2 layers) — arXiv:1706.02216
+# ==============================================================================
+
+@dataclasses.dataclass(frozen=True)
+class SAGEConfig:
+    name: str = "graphsage-reddit"
+    n_layers: int = 2
+    d_in: int = 602
+    d_hidden: int = 128
+    n_classes: int = 41
+    fanouts: tuple = (25, 10)
+
+
+def sage_init(key, cfg: SAGEConfig) -> Params:
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    layers = []
+    d = cfg.d_in
+    for i in range(cfg.n_layers):
+        out = cfg.d_hidden
+        layers.append({
+            "self": linear_init(ks[i], d, out, bias=True, dtype=jnp.float32),
+            "neigh": linear_init(jax.random.fold_in(ks[i], 1), d, out,
+                                 dtype=jnp.float32)})
+        d = out
+    return {"layers": layers,
+            "head": linear_init(ks[-1], d, cfg.n_classes, bias=True,
+                                dtype=jnp.float32)}
+
+
+def sage_forward(params: Params, batch: Dict[str, jax.Array],
+                 cfg: SAGEConfig) -> jax.Array:
+    """Full-graph / subgraph forward. Returns logits (N, n_classes)."""
+    h = batch["feat"]
+    n = h.shape[0]
+    src, dst = batch["src"], batch["dst"]
+    for lp in params["layers"]:
+        msg = h[jnp.minimum(src, n - 1)]
+        msg = jnp.where((src < n)[:, None], msg, 0)
+        agg = seg_mean(msg, dst, n)
+        h = jax.nn.relu(linear(lp["self"], h) + linear(lp["neigh"], agg))
+        h = h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6)
+    return linear(params["head"], h)
+
+
+def sage_loss(params, batch, cfg: SAGEConfig) -> jax.Array:
+    logits = sage_forward(params, batch, cfg)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][:, None], -1)[:, 0]
+    mask = batch["node_mask"].astype(jnp.float32)
+    return jnp.sum((lse - gold) * mask) / jnp.maximum(mask.sum(), 1)
+
+
+# ==============================================================================
+# MeshGraphNet (encode-process-decode, 15 MP layers) — arXiv:2010.03409
+# ==============================================================================
+
+@dataclasses.dataclass(frozen=True)
+class MGNConfig:
+    name: str = "meshgraphnet"
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    d_node_in: int = 8     # node type one-hot + velocity
+    d_edge_in: int = 4     # relative pos (3) + norm (1)
+    d_out: int = 2
+
+
+def mgn_init(key, cfg: MGNConfig) -> Params:
+    ks = jax.random.split(key, 2 * cfg.n_layers + 3)
+    h = cfg.d_hidden
+    hidden = [h] * cfg.mlp_layers
+    proc = []
+    for i in range(cfg.n_layers):
+        proc.append({
+            "edge": _mlp_init(ks[2 * i], [3 * h] + hidden + [h],
+                              layernorm=True),
+            "node": _mlp_init(ks[2 * i + 1], [2 * h] + hidden + [h],
+                              layernorm=True)})
+    return {
+        "enc_node": _mlp_init(ks[-3], [cfg.d_node_in] + hidden + [h],
+                              layernorm=True),
+        "enc_edge": _mlp_init(ks[-2], [cfg.d_edge_in] + hidden + [h],
+                              layernorm=True),
+        "dec": _mlp_init(ks[-1], [h] + hidden + [cfg.d_out]),
+        "proc": proc,
+    }
+
+
+def mgn_forward(params: Params, batch: Dict[str, jax.Array],
+                cfg: MGNConfig) -> jax.Array:
+    n = batch["feat"].shape[0]
+    src, dst = batch["src"], batch["dst"]
+    s_safe = jnp.minimum(src, n - 1)
+    d_safe = jnp.minimum(dst, n - 1)
+    rel = batch["pos"][d_safe] - batch["pos"][s_safe]
+    e_in = jnp.concatenate(
+        [rel, jnp.linalg.norm(rel, axis=-1, keepdims=True)], -1)
+    h = _mlp(params["enc_node"], batch["feat"])
+    e = _mlp(params["enc_edge"], e_in)
+    e = jnp.where((src < n)[:, None], e, 0)
+    for lp in params["proc"]:
+        e = e + _mlp(lp["edge"],
+                     jnp.concatenate([e, h[s_safe], h[d_safe]], -1))
+        e = jnp.where((src < n)[:, None], e, 0)
+        h = h + _mlp(lp["node"],
+                     jnp.concatenate([h, seg_sum(e, dst, n)], -1))
+    return _mlp(params["dec"], h)
+
+
+def mgn_loss(params, batch, cfg: MGNConfig) -> jax.Array:
+    pred = mgn_forward(params, batch, cfg)
+    mask = batch["node_mask"][:, None].astype(jnp.float32)
+    return jnp.sum(((pred - batch["targets"]) ** 2) * mask) \
+        / jnp.maximum(mask.sum(), 1)
+
+
+# ==============================================================================
+# SchNet (3 interactions, cfconv with RBF filters) — arXiv:1706.08566
+# ==============================================================================
+
+@dataclasses.dataclass(frozen=True)
+class SchNetConfig:
+    name: str = "schnet"
+    n_interactions: int = 3
+    d_hidden: int = 64
+    n_rbf: int = 300
+    cutoff: float = 10.0
+    n_species: int = 100
+
+
+def _ssp(x):  # shifted softplus
+    return jax.nn.softplus(x) - jnp.log(2.0)
+
+
+def schnet_init(key, cfg: SchNetConfig) -> Params:
+    ks = jax.random.split(key, cfg.n_interactions + 3)
+    h = cfg.d_hidden
+    inter = []
+    for i in range(cfg.n_interactions):
+        kk = jax.random.split(ks[i], 5)
+        inter.append({
+            "in": linear_init(kk[0], h, h, dtype=jnp.float32),
+            "filt": _mlp_init(kk[1], [cfg.n_rbf, h, h]),
+            "out1": linear_init(kk[2], h, h, bias=True, dtype=jnp.float32),
+            "out2": linear_init(kk[3], h, h, bias=True, dtype=jnp.float32)})
+    return {
+        "embed": _normal(ks[-3], (cfg.n_species, h), 0.1, jnp.float32),
+        "inter": inter,
+        "head": _mlp_init(ks[-1], [h, h // 2, 1]),
+    }
+
+
+def schnet_forward(params: Params, batch: Dict[str, jax.Array],
+                   cfg: SchNetConfig, n_graphs: int = 1) -> jax.Array:
+    """Returns per-graph energies (n_graphs,) via graph_id segment sum.
+    ``n_graphs`` is static (close over it in the step factory)."""
+    n = batch["species"].shape[0]
+    src, dst = batch["src"], batch["dst"]
+    s_safe, d_safe = jnp.minimum(src, n - 1), jnp.minimum(dst, n - 1)
+    d_ij = jnp.linalg.norm(batch["pos"][d_safe] - batch["pos"][s_safe] + 1e-9,
+                           axis=-1)
+    centers = jnp.linspace(0.0, cfg.cutoff, cfg.n_rbf)
+    gamma = 10.0
+    rbf = jnp.exp(-gamma * (d_ij[:, None] - centers) ** 2)
+    # cosine cutoff envelope
+    env = 0.5 * (jnp.cos(jnp.pi * jnp.minimum(d_ij / cfg.cutoff, 1.0)) + 1.0)
+    x = params["embed"][jnp.minimum(batch["species"], cfg.n_species - 1)]
+    for lp in params["inter"]:
+        h = linear(lp["in"], x)
+        w = _mlp(lp["filt"], rbf, act=_ssp) * env[:, None]
+        msg = h[s_safe] * w
+        msg = jnp.where((src < n)[:, None], msg, 0)
+        agg = seg_sum(msg, dst, n)
+        v = linear(lp["out2"], _ssp(linear(lp["out1"], agg)))
+        x = x + v
+    atom_e = _mlp(params["head"], x, act=_ssp)[:, 0]
+    atom_e = jnp.where(batch["node_mask"], atom_e, 0)
+    return seg_sum(atom_e[:, None], batch["graph_id"], n_graphs)[:, 0]
+
+
+def schnet_loss(params, batch, cfg: SchNetConfig, n_graphs: int = 1) -> jax.Array:
+    e = schnet_forward(params, batch, cfg, n_graphs)
+    return jnp.mean((e - batch["energy"]) ** 2)
+
+
+# ==============================================================================
+# EquiformerV2 (eSCN SO(2) equivariant graph attention) — arXiv:2306.12059
+# ==============================================================================
+
+@dataclasses.dataclass(frozen=True)
+class EqV2Config:
+    name: str = "equiformer-v2"
+    n_layers: int = 12
+    d_hidden: int = 128          # sphere channels
+    l_max: int = 6
+    m_max: int = 2
+    n_heads: int = 8
+    n_rbf: int = 64
+    n_species: int = 100
+    cutoff: float = 10.0
+    edge_chunk: Optional[int] = None   # scan over edge chunks (memory bound)
+
+    @property
+    def n_coeffs(self) -> int:
+        return sph.n_coeffs(self.l_max)
+
+
+def _so2_init(key, cfg: EqV2Config, dtype=jnp.float32) -> Params:
+    """SO(2) linear weights per |m| (the eSCN O(L³) parameterization)."""
+    c = cfg.d_hidden
+    p = {}
+    for m in range(cfg.m_max + 1):
+        nl = cfg.l_max + 1 - m
+        k1, k2, key = jax.random.split(key, 3)
+        scale = (nl * c) ** -0.5
+        p[f"w{m}_r"] = _normal(k1, (nl * c, nl * c), scale, dtype)
+        if m > 0:
+            p[f"w{m}_i"] = _normal(k2, (nl * c, nl * c), scale, dtype)
+    return p
+
+
+def eqv2_init(key, cfg: EqV2Config) -> Params:
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    c = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        kk = jax.random.split(ks[i], 6)
+        layers.append({
+            "so2": _so2_init(kk[0], cfg),
+            "attn_mlp": _mlp_init(kk[1], [c + cfg.n_rbf, c, cfg.n_heads]),
+            "val_proj": linear_init(kk[2], c, c, dtype=jnp.float32),
+            "ffn_gate": linear_init(kk[3], c, c, bias=True,
+                                    dtype=jnp.float32),
+            "ffn1": linear_init(kk[4], c, c, dtype=jnp.float32),
+            "ffn2": linear_init(kk[5], c, c, dtype=jnp.float32)})
+    return {
+        "embed": _normal(ks[-3], (cfg.n_species, c), 0.2, jnp.float32),
+        "rbf_mlp": _mlp_init(ks[-2], [cfg.n_rbf, c, c]),
+        "head": _mlp_init(ks[-1], [c, c, 1]),
+        "layers": layers,
+    }
+
+
+def _eq_layernorm(x: jax.Array, cfg: EqV2Config) -> jax.Array:
+    """Equivariant RMS norm: per-l, per-channel norm over m."""
+    outs = []
+    for lo, hi in sph.irrep_slices(cfg.l_max):
+        blk = x[:, lo:hi, :]
+        rms = jnp.sqrt(jnp.mean(blk * blk, axis=(1,), keepdims=True) + 1e-6)
+        outs.append(blk / rms)
+    return jnp.concatenate(outs, axis=1)
+
+
+def _so2_conv(p: Params, x_edge: jax.Array, cfg: EqV2Config) -> jax.Array:
+    """SO(2) restricted linear in the edge frame.  x_edge (E, M, C)."""
+    e, m_tot, c = x_edge.shape
+    pos_idx, neg_idx = sph.m_indices(cfg.l_max)
+    out = jnp.zeros_like(x_edge)
+    # m = 0
+    nl = cfg.l_max + 1
+    x0 = x_edge[:, jnp.asarray(pos_idx[0]), :].reshape(e, nl * c)
+    out = out.at[:, jnp.asarray(pos_idx[0]), :].set(
+        (x0 @ p["w0_r"]).reshape(e, nl, c))
+    for m in range(1, cfg.m_max + 1):
+        nl = cfg.l_max + 1 - m
+        ip = jnp.asarray(pos_idx[m])
+        im = jnp.asarray(neg_idx[m])
+        xp = x_edge[:, ip, :].reshape(e, nl * c)
+        xm = x_edge[:, im, :].reshape(e, nl * c)
+        yr = xp @ p[f"w{m}_r"] - xm @ p[f"w{m}_i"]
+        yi = xp @ p[f"w{m}_i"] + xm @ p[f"w{m}_r"]
+        out = out.at[:, ip, :].set(yr.reshape(e, nl, c))
+        out = out.at[:, im, :].set(yi.reshape(e, nl, c))
+    return out
+
+
+def _eqv2_messages(lp, x, rbf, wig, wig_inv, s_safe, edge_valid, cfg):
+    """Per-edge eSCN attention messages. Returns (E, M, C) and (E, H)."""
+    x_src = x[s_safe]                                   # (E, M, C)
+    x_rot = jnp.einsum("enm,emc->enc", wig, x_src)
+    msg = _so2_conv(lp["so2"], x_rot, cfg)
+    # invariant (l=0) part drives attention logits
+    inv = msg[:, 0, :]                                  # (E, C)
+    logits = _mlp(lp["attn_mlp"], jnp.concatenate([inv, rbf], -1))
+    logits = jnp.where(edge_valid[:, None], logits, -1e30)
+    msg = jnp.einsum("enm,emc->enc", wig_inv, msg)      # rotate back
+    msg = linear(lp["val_proj"], msg)
+    return msg, logits
+
+
+def _eqv2_layer_chunked(lp, x, batch, cfg: EqV2Config, n: int,
+                        chunk: int):
+    """Edge-chunked two-pass segment-softmax layer (§Perf: bounds the
+    per-edge Wigner/message buffers to one chunk; 61.8M-edge graphs drop
+    from ~1.9 TiB of edge intermediates to chunk-sized transients).
+
+    Sharding contract: node tensors ride replicated-over-data /
+    channel-sharded-over-model; edge chunks shard over data."""
+    e_cnt = batch["src"].shape[0]
+    nc = e_cnt // chunk
+    c = cfg.d_hidden
+    m_tot = cfg.n_coeffs
+    h_heads = cfg.n_heads
+    ch = c // h_heads
+
+    def chunk_arrays(i):
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * chunk, chunk)
+        src_c, dst_c = sl(batch["src"]), sl(batch["dst"])
+        s_safe = jnp.minimum(src_c, n - 1)
+        d_safe = jnp.minimum(dst_c, n - 1)
+        valid = src_c < n
+        vec = batch["pos"][d_safe] - batch["pos"][s_safe]
+        dist = jnp.linalg.norm(vec + 1e-9, axis=-1)
+        centers = jnp.linspace(0.0, cfg.cutoff, cfg.n_rbf)
+        rbf = jnp.exp(-10.0 * (dist[:, None] - centers) ** 2)
+        rot = sph.align_to_z(vec)
+        wig = sph.wigner_d(rot, cfg.l_max)
+        return s_safe, d_safe, valid, rbf, wig
+
+    def messages(i):
+        s_safe, d_safe, valid, rbf, wig = chunk_arrays(i)
+        wig_inv = jnp.swapaxes(wig, -1, -2)
+        msg, logits = _eqv2_messages(lp, x, rbf, wig, wig_inv, s_safe,
+                                     valid, cfg)
+        return msg, logits, d_safe, valid
+
+    # pass 1: per-destination logit max
+    def p1(carry, i):
+        mx = carry
+        _, logits, d_safe, valid = messages(i)
+        mx = mx.at[d_safe].max(jnp.where(valid[:, None], logits, -jnp.inf))
+        return mx, None
+
+    mx0 = jnp.full((n, h_heads), -jnp.inf, jnp.float32)
+    mx, _ = jax.lax.scan(p1, mx0, jnp.arange(nc))
+
+    # pass 2: accumulate exp-weighted messages + denominators
+    def p2(carry, i):
+        num, den = carry
+        msg, logits, d_safe, valid = messages(i)
+        ex = jnp.where(valid[:, None],
+                       jnp.exp(logits - mx[d_safe]), 0.0)     # (ck, H)
+        den = den.at[d_safe].add(ex)
+        wmsg = (msg.reshape(chunk, m_tot, h_heads, ch)
+                * ex[:, None, :, None]).reshape(chunk, m_tot, c)
+        num = num.at[d_safe].add(wmsg)
+        return (num, den), None
+
+    num0 = jnp.zeros((n, m_tot, c), jnp.float32)
+    den0 = jnp.zeros((n, h_heads), jnp.float32)
+    (num, den), _ = jax.lax.scan(p2, (num0, den0), jnp.arange(nc))
+    den_c = jnp.repeat(jnp.maximum(den, 1e-20), ch, axis=1)   # (n, C)
+    return num / den_c[:, None, :]
+
+
+def eqv2_forward(params: Params, batch: Dict[str, jax.Array],
+                 cfg: EqV2Config, n_graphs: int = 1) -> jax.Array:
+    n = batch["species"].shape[0]
+    src, dst = batch["src"], batch["dst"]
+    e_cnt = src.shape[0]
+    chunked = cfg.edge_chunk is not None and e_cnt > cfg.edge_chunk
+    if not chunked:
+        s_safe, d_safe = jnp.minimum(src, n - 1), jnp.minimum(dst, n - 1)
+        edge_valid = src < n
+        vec = batch["pos"][d_safe] - batch["pos"][s_safe]
+        dist = jnp.linalg.norm(vec + 1e-9, axis=-1)
+        centers = jnp.linspace(0.0, cfg.cutoff, cfg.n_rbf)
+        rbf = jnp.exp(-10.0 * (dist[:, None] - centers) ** 2)
+        rot = sph.align_to_z(vec)                        # (E, 3, 3)
+        wig = sph.wigner_d(rot, cfg.l_max)               # (E, M, M)
+        wig_inv = jnp.swapaxes(wig, -1, -2)              # orthogonal
+
+    c = cfg.d_hidden
+    m_tot = cfg.n_coeffs
+    x = jnp.zeros((n, m_tot, c), jnp.float32)
+    x = x.at[:, 0, :].set(
+        params["embed"][jnp.minimum(batch["species"], cfg.n_species - 1)])
+
+    h = cfg.n_heads
+    ch = c // h
+    for lp in params["layers"]:
+        xn = _eq_layernorm(x, cfg)
+        if chunked:
+            agg = _eqv2_layer_chunked(lp, xn, batch, cfg, n,
+                                      cfg.edge_chunk)
+            x = x + agg
+            xn2 = _eq_layernorm(x, cfg)
+            scal = xn2[:, 0, :]
+            gate = jax.nn.sigmoid(linear(lp["ffn_gate"], scal))
+            y = linear(lp["ffn1"], xn2) * gate[:, None, :]
+            y = y.at[:, 0, :].set(jax.nn.silu(y[:, 0, :]))
+            x = x + linear(lp["ffn2"], y)
+            continue
+        msg, logits = _eqv2_messages(lp, xn, rbf, wig, wig_inv, s_safe,
+                                     edge_valid, cfg)
+        w = seg_softmax(logits, dst, n)                  # (E, H)
+        wmsg = (msg.reshape(e_cnt, m_tot, h, ch)
+                * w[:, None, :, None]).reshape(e_cnt, m_tot, c)
+        wmsg = jnp.where(edge_valid[:, None, None], wmsg, 0)
+        agg = seg_sum(wmsg, dst, n)
+        x = x + agg
+        # gated equivariant FFN
+        xn = _eq_layernorm(x, cfg)
+        scal = xn[:, 0, :]
+        gate = jax.nn.sigmoid(linear(lp["ffn_gate"], scal))
+        y = linear(lp["ffn1"], xn)
+        y = y * gate[:, None, :]
+        y = y.at[:, 0, :].set(jax.nn.silu(y[:, 0, :]))
+        x = x + linear(lp["ffn2"], y)
+    # invariant readout
+    atom_e = _mlp(params["head"], x[:, 0, :], act=jax.nn.silu)[:, 0]
+    atom_e = jnp.where(batch["node_mask"], atom_e, 0)
+    return seg_sum(atom_e[:, None], batch["graph_id"], n_graphs)[:, 0]
+
+
+def eqv2_loss(params, batch, cfg: EqV2Config, n_graphs: int = 1) -> jax.Array:
+    e = eqv2_forward(params, batch, cfg, n_graphs)
+    return jnp.mean((e - batch["energy"]) ** 2)

@@ -1,0 +1,133 @@
+"""Real spherical harmonics + rotation (Wigner-D) machinery for eSCN.
+
+EquiformerV2's eSCN trick rotates each edge's irrep features into an
+edge-aligned frame where the SO(3) convolution reduces to SO(2) (only
+|m| ≤ m_max coefficients interact) — O(L^6) → O(L^3).
+
+We build the rotation matrices *numerically but exactly* (to fp precision):
+real SH are evaluated by associated-Legendre recursion; the block-diagonal
+Wigner-D matrix for rotation R is recovered by fitting SH coefficients on a
+fixed direction set:  D(R) = pinv(B) @ B_R,  B[i,·] = Y(u_i),
+B_R[i,·] = Y(Rᵀ u_i).  ``pinv(B)`` is a compile-time constant; the per-edge
+cost is one SH evaluation (K×M) and one (M×K)(K×M) matmul, M=(l_max+1)².
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def n_coeffs(l_max: int) -> int:
+    return (l_max + 1) ** 2
+
+
+def real_sph_harm(dirs: jax.Array, l_max: int) -> jax.Array:
+    """Real spherical harmonics. dirs (..., 3) unit vectors -> (..., M).
+
+    Ordering: (l, m) with m = -l..l, flat index l² + l + m.
+    Associated Legendre via stable recursion; Condon-Shortley absorbed.
+    """
+    x, y, z = dirs[..., 0], dirs[..., 1], dirs[..., 2]
+    r_xy = jnp.sqrt(jnp.maximum(x * x + y * y, 1e-30))
+    cos_t = jnp.clip(z, -1.0, 1.0)
+    sin_t = jnp.sqrt(jnp.maximum(1.0 - cos_t * cos_t, 0.0))
+    phi_c = jnp.where(r_xy > 1e-12, x / r_xy, 1.0)
+    phi_s = jnp.where(r_xy > 1e-12, y / r_xy, 0.0)
+
+    # cos(m phi), sin(m phi) by recurrence
+    cos_m = [jnp.ones_like(phi_c), phi_c]
+    sin_m = [jnp.zeros_like(phi_s), phi_s]
+    for m in range(2, l_max + 1):
+        cos_m.append(2 * phi_c * cos_m[-1] - cos_m[-2])
+        sin_m.append(2 * phi_c * sin_m[-1] - sin_m[-2])
+
+    # normalized associated Legendre P̄_l^m (spherical-harmonic normalization)
+    p = {}
+    p[(0, 0)] = jnp.full_like(cos_t, 0.28209479177387814)  # 1/(2 sqrt(pi))
+    for m in range(1, l_max + 1):
+        # P̄_m^m = -sqrt((2m+1)/(2m)) sin_t P̄_{m-1}^{m-1}
+        p[(m, m)] = -np.sqrt((2 * m + 1.0) / (2 * m)) * sin_t * p[(m - 1, m - 1)]
+    for m in range(0, l_max):
+        p[(m + 1, m)] = np.sqrt(2 * m + 3.0) * cos_t * p[(m, m)]
+    for m in range(0, l_max + 1):
+        for l in range(m + 2, l_max + 1):
+            a = np.sqrt((4.0 * l * l - 1.0) / (l * l - m * m))
+            b = np.sqrt(((l - 1.0) ** 2 - m * m) / (4.0 * (l - 1.0) ** 2 - 1.0))
+            p[(l, m)] = a * (cos_t * p[(l - 1, m)] - b * p[(l - 2, m)])
+
+    out = []
+    sqrt2 = np.sqrt(2.0)
+    for l in range(l_max + 1):
+        for m in range(-l, l + 1):
+            if m == 0:
+                out.append(p[(l, 0)])
+            elif m > 0:
+                out.append(sqrt2 * ((-1.0) ** m) * p[(l, m)] * cos_m[m])
+            else:
+                out.append(sqrt2 * ((-1.0) ** (-m)) * p[(l, -m)] * sin_m[-m])
+    return jnp.stack(out, axis=-1)
+
+
+@lru_cache(maxsize=8)
+def _fit_basis(l_max: int):
+    """Fixed direction set + pseudo-inverse SH design matrix (host consts).
+
+    Runs under ensure_compile_time_eval so first use inside a jit trace
+    still produces concrete constants."""
+    m = n_coeffs(l_max)
+    k = max(2 * m, 64)
+    rng = np.random.default_rng(20221203)
+    dirs = rng.normal(size=(k, 3))
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+    with jax.ensure_compile_time_eval():
+        b = np.asarray(jax.device_get(
+            real_sph_harm(jnp.asarray(dirs), l_max)), dtype=np.float64)
+    pinv = np.linalg.pinv(b)
+    return jnp.asarray(dirs, jnp.float32), jnp.asarray(pinv, jnp.float32)
+
+
+def align_to_z(vec: jax.Array) -> jax.Array:
+    """Rotation matrix R with R @ unit(vec) = ẑ.  vec (..., 3) -> (..., 3, 3)."""
+    v = vec / jnp.maximum(jnp.linalg.norm(vec, axis=-1, keepdims=True), 1e-12)
+    x, y, z = v[..., 0], v[..., 1], v[..., 2]
+    # Rz(-phi) then Ry(-theta): theta = acos(z), phi = atan2(y, x)
+    r_xy = jnp.sqrt(jnp.maximum(x * x + y * y, 1e-30))
+    cph = jnp.where(r_xy > 1e-12, x / r_xy, 1.0)
+    sph = jnp.where(r_xy > 1e-12, y / r_xy, 0.0)
+    cth, sth = z, r_xy
+    zero = jnp.zeros_like(x)
+    one = jnp.ones_like(x)
+    rz = jnp.stack([jnp.stack([cph, sph, zero], -1),
+                    jnp.stack([-sph, cph, zero], -1),
+                    jnp.stack([zero, zero, one], -1)], -2)
+    ry = jnp.stack([jnp.stack([cth, zero, -sth], -1),
+                    jnp.stack([zero, one, zero], -1),
+                    jnp.stack([sth, zero, cth], -1)], -2)
+    return ry @ rz
+
+
+def wigner_d(rot: jax.Array, l_max: int) -> jax.Array:
+    """Block-diagonal Wigner-D for real SH. rot (..., 3, 3) -> (..., M, M).
+
+    c' = D @ c rotates coefficients such that  f_rot(u) = f(Rᵀ u)."""
+    dirs, pinv = _fit_basis(l_max)
+    # (Rᵀ u)_i = R_ji u_j
+    rdirs = jnp.einsum("...ji,kj->...ki", rot, dirs)
+    b_r = real_sph_harm(rdirs, l_max)                  # (..., K, M)
+    return jnp.einsum("nk,...km->...nm", pinv, b_r)
+
+
+def irrep_slices(l_max: int):
+    return [(l * l, (l + 1) * (l + 1)) for l in range(l_max + 1)]
+
+
+def m_indices(l_max: int):
+    """For each |m|, the flat coefficient indices of (l, +m) and (l, -m)."""
+    pos, neg = {}, {}
+    for m in range(l_max + 1):
+        pos[m] = [l * l + l + m for l in range(m, l_max + 1)]
+        neg[m] = [l * l + l - m for l in range(m, l_max + 1)]
+    return pos, neg

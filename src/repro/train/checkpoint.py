@@ -1,0 +1,152 @@
+"""Checkpointing: manifest + per-leaf .npy shards, async writes, integrity
+hashes, resume, and re-mesh on restore (elastic restart).
+
+Layout:
+    <dir>/step_000123/
+        MANIFEST.json     {step, leaves: {path: {file, shape, dtype, sha256}}}
+        0000.npy ...
+A checkpoint directory is atomic: written to ``.tmp`` then renamed, so a
+crash mid-write never corrupts the latest-pointer.  ``latest_step`` scans
+complete checkpoints only.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _leaf_paths(tree) -> list[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+
+
+def save(ckpt_dir: str, step: int, tree, *, blocking: bool = True,
+         keep: int = 3) -> threading.Thread | None:
+    """Save pytree. ``blocking=False`` hands the host copy to a writer
+    thread (device->host transfer happens before returning so training can
+    donate buffers immediately)."""
+    host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+    def write():
+        final = os.path.join(ckpt_dir, f"step_{step:09d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "leaves": {}}
+        for i, (path, leaf) in enumerate(_leaf_paths(host_tree)):
+            fname = f"{i:04d}.bin"
+            fpath = os.path.join(tmp, fname)
+            arr = np.asarray(leaf)
+            raw = arr.tobytes()          # raw bytes: bf16-safe
+            with open(fpath, "wb") as f:
+                f.write(raw)
+            digest = hashlib.sha256(raw).hexdigest()
+            manifest["leaves"][path] = {
+                "file": fname, "shape": list(arr.shape),
+                "dtype": arr.dtype.name, "sha256": digest}
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        _gc(ckpt_dir, keep)
+
+    if blocking:
+        write()
+        return None
+    t = threading.Thread(target=write, daemon=True)
+    t.start()
+    return t
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:09d}"),
+                      ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp") \
+                and os.path.exists(os.path.join(ckpt_dir, d, "MANIFEST.json")):
+            out.append(int(d[5:]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like, *, verify: bool = True,
+            shardings=None):
+    """Restore into the structure of ``like``.  ``shardings`` (optional
+    pytree of NamedSharding matching ``like``) re-shards onto the *current*
+    mesh — this is the elastic-restart path: a checkpoint written on a
+    512-chip mesh restores onto whatever mesh is alive now."""
+    d = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(d, "MANIFEST.json")) as f:
+        manifest = json.load(f)
+
+    import ml_dtypes  # jax dependency; provides bfloat16 etc.
+    paths = [p for p, _ in _leaf_paths(like)]
+    leaves = []
+    for path in paths:
+        ent = manifest["leaves"][path]
+        fpath = os.path.join(d, ent["file"])
+        with open(fpath, "rb") as f:
+            raw = f.read()
+        if verify:
+            digest = hashlib.sha256(raw).hexdigest()
+            if digest != ent["sha256"]:
+                raise IOError(f"checkpoint corruption in {path}: "
+                              f"{digest} != {ent['sha256']}")
+        try:
+            dtype = np.dtype(ent["dtype"])
+        except TypeError:
+            dtype = np.dtype(getattr(ml_dtypes, ent["dtype"]))
+        leaves.append(np.frombuffer(raw, dtype=dtype
+                                    ).reshape(ent["shape"]).copy())
+
+    treedef = jax.tree_util.tree_structure(like)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s),
+                            tree, shardings)
+    else:
+        tree = jax.tree.map(jax.device_put, tree)
+    return tree, manifest["step"]
+
+
+class CheckpointHook:
+    """Training-loop hook: async save every ``interval`` steps."""
+
+    def __init__(self, ckpt_dir: str, interval: int = 100, keep: int = 3):
+        self.dir = ckpt_dir
+        self.interval = interval
+        self.keep = keep
+        self._pending: threading.Thread | None = None
+
+    def __call__(self, step, params, opt_state, metrics):
+        if (step + 1) % self.interval:
+            return
+        if self._pending is not None:
+            self._pending.join()        # one in-flight write at a time
+        self._pending = save(self.dir, step + 1,
+                             {"params": params, "opt": opt_state},
+                             blocking=False, keep=self.keep)
+
+    def flush(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None

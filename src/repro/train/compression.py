@@ -1,0 +1,103 @@
+"""Gradient compression for the cross-pod (DCI) all-reduce.
+
+Within a pod the ICI is fast; across pods the data-center interconnect is
+the bottleneck for pure-DP gradient sync.  Two classic compressors, both
+with error feedback (the residual is re-added next step so compression is
+unbiased over time):
+
+  * int8 quantization (per-tensor scale)          — 4× fewer bytes than f32
+  * top-k sparsification (magnitude, per-tensor)  — k/n of the bytes
+
+Usage: wrap the cross-pod psum — compress locally, reduce, decompress —
+or (single-program form, used here) compress grads before the optimizer
+applies them, carrying the error-feedback state in the train state.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_int8(grads, ef):
+    """Returns (compressed_grads, new_error_feedback).  Compressed grads are
+    the dequantized int8 values (what the wire would carry)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = quantize_int8(g32)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), g32 - deq
+    pairs = jax.tree.map(one, grads, ef)
+    leaves, treedef = jax.tree_util.tree_flatten(
+        pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return (treedef.unflatten([l[0] for l in leaves]),
+            treedef.unflatten([l[1] for l in leaves]))
+
+
+def topk_mask(x: jax.Array, frac: float) -> jax.Array:
+    k = max(1, int(x.size * frac))
+    flat = jnp.abs(x.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def compress_topk(grads, ef, frac: float = 0.01):
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        m = topk_mask(g32, frac)
+        sparse = g32 * m
+        return sparse.astype(g.dtype), g32 - sparse
+    pairs = jax.tree.map(one, grads, ef)
+    leaves, treedef = jax.tree_util.tree_flatten(
+        pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return (treedef.unflatten([l[0] for l in leaves]),
+            treedef.unflatten([l[1] for l in leaves]))
+
+
+def compressed_bytes(grads, method: str = "int8",
+                     frac: float = 0.01) -> Tuple[int, int]:
+    """(raw_bytes_f32, wire_bytes) for the §Perf collective accounting."""
+    raw = sum(x.size * 4 for x in jax.tree_util.tree_leaves(grads))
+    if method == "int8":
+        wire = sum(x.size for x in jax.tree_util.tree_leaves(grads))
+    elif method == "topk":
+        # values (f32) + indices (int32) for k entries
+        wire = sum(int(x.size * frac) * 8
+                   for x in jax.tree_util.tree_leaves(grads))
+    else:
+        wire = raw
+    return raw, wire
+
+
+def make_cross_pod_psum(method: str = "int8", frac: float = 0.01):
+    """shard_map-compatible compressed psum over the 'pod' axis: quantize →
+    psum(int32 accum) → dequantize.  Exact for int8 (sum of ≤ n_pods
+    int8 values fits int32)."""
+    def psum_compressed(g):
+        if method == "none":
+            return jax.lax.psum(g, "pod")
+        g32 = g.astype(jnp.float32)
+        # agree on ONE scale across the pod axis BEFORE quantizing —
+        # mixing per-pod scales under a single dequant is lossy
+        scale = jax.lax.pmax(jnp.max(jnp.abs(g32)), "pod") / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        qsum = jax.lax.psum(q.astype(jnp.int32), "pod")
+        return (qsum.astype(jnp.float32) * scale).astype(g.dtype)
+    return psum_compressed

@@ -1,0 +1,191 @@
+"""Optimizers built from scratch (no optax): AdamW + Adafactor.
+
+AdamW keeps f32 first/second moments (sharded like the params → ZeRO-style
+when params are FSDP-sharded).  Adafactor keeps factored second moments
+(row/col statistics) — the low-memory choice used for the giant MoE archs
+(DESIGN.md §6): state is ~(d_in + d_out) per matrix instead of d_in·d_out.
+
+API:
+    opt   = adamw(peak_lr=3e-4, ...)
+    state = opt.init(params)
+    new_params, new_state, stats = opt.update(params, grads, state)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak_lr: float, warmup: int = 100,
+                    total: int = 10_000, floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+    state_specs: Callable  # param_specs pytree -> state specs pytree
+
+
+def adamw(peak_lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          max_grad_norm: float = 1.0,
+          schedule: Optional[Callable] = None) -> Optimizer:
+    lr_fn = schedule or cosine_schedule(peak_lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state):
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        b1c = 1 - b1 ** step.astype(jnp.float32)
+        b2c = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            u = (m / b1c) / (jnp.sqrt(v / b2c) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+        p_leaves, treedef = jax.tree_util.tree_flatten(params)
+        g_leaves = treedef.flatten_up_to(grads)
+        m_leaves = treedef.flatten_up_to(state["m"])
+        v_leaves = treedef.flatten_up_to(state["v"])
+        res = [upd(p, g, m, v) for p, g, m, v
+               in zip(p_leaves, g_leaves, m_leaves, v_leaves)]
+        new_p = treedef.unflatten([r[0] for r in res])
+        new_m = treedef.unflatten([r[1] for r in res])
+        new_v = treedef.unflatten([r[2] for r in res])
+        return new_p, {"m": new_m, "v": new_v, "step": step}, \
+            {"lr": lr, "grad_norm": gnorm}
+
+    def state_specs(param_specs):
+        return {"m": param_specs, "v": param_specs,
+                "step": jax.sharding.PartitionSpec()}
+
+    return Optimizer(init, update, state_specs)
+
+
+def adafactor(peak_lr: float = 1e-3, decay: float = 0.8,
+              eps: float = 1e-30, clip_threshold: float = 1.0,
+              weight_decay: float = 0.0,
+              schedule: Optional[Callable] = None) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern, 2018)."""
+    lr_fn = schedule or cosine_schedule(peak_lr)
+
+    def init(params):
+        def stat(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"stats": jax.tree.map(stat, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        beta = 1.0 - (step.astype(jnp.float32) + 1) ** -decay
+
+        def upd_core(p, g, s):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                    eps)
+                prec = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+                u = g32 * jax.lax.rsqrt(jnp.maximum(prec, eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g32 * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_s
+
+        def upd(p, g, s):
+            # stacked (L, ...) leaves update layer-by-layer: the transient
+            # f32 copies of a 218B-param expert stack don't fit otherwise
+            # (13.6 GB → ~0.4 GB on deepseek-v3, §Perf)
+            if p.ndim >= 3:
+                return jax.lax.map(lambda a: upd_core(*a), (p, g, s))
+            return upd_core(p, g, s)
+
+        p_leaves, treedef = jax.tree_util.tree_flatten(params)
+        g_leaves = treedef.flatten_up_to(grads)
+        s_leaves = treedef.flatten_up_to(state["stats"])
+        res = [upd(p, g, s)
+               for p, g, s in zip(p_leaves, g_leaves, s_leaves)]
+        new_p = treedef.unflatten([r[0] for r in res])
+        new_stats = treedef.unflatten([r[1] for r in res])
+        return new_p, {"stats": new_stats, "step": step}, {"lr": lr}
+
+    def state_specs(param_specs):
+        from jax.sharding import PartitionSpec as P
+
+        def stat_spec(spec):
+            parts = tuple(spec) if spec else ()
+            if len(parts) >= 2:
+                return {"vr": P(*parts[:-1]),
+                        "vc": P(*(parts[:-2] + parts[-1:]))}
+            return {"v": spec}
+
+        return {"stats": jax.tree.map(
+                    stat_spec, param_specs,
+                    is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)),
+                "step": jax.sharding.PartitionSpec()}
+
+    return Optimizer(init, update, state_specs)
+
+
+def sgd(lr: float = 1e-2) -> Optimizer:
+    """Plain SGD (tests / tiny examples)."""
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state):
+        new_p = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_p, {"step": state["step"] + 1}, {}
+
+    def state_specs(param_specs):
+        return {"step": jax.sharding.PartitionSpec()}
+
+    return Optimizer(init, update, state_specs)

@@ -1,0 +1,108 @@
+"""Generic training-step factory: grad accumulation + remat + pjit wiring.
+
+``make_train_step`` turns any ``loss_fn(params, batch) -> scalar`` into a
+jitted (params, opt_state, batch) -> (params, opt_state, metrics) step with:
+
+  * microbatch gradient accumulation via ``lax.scan`` (static ``accum``) —
+    live activation memory scales with the microbatch, not the global batch;
+  * f32 gradient accumulation regardless of param dtype;
+  * sharding-constrained outputs (params keep their specs across the update).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import Optimizer
+
+
+def _split_batch(batch: Dict[str, jax.Array], accum: int):
+    """(B, ...) -> (accum, B/accum, ...) for every leaf."""
+    def split(x):
+        b = x.shape[0]
+        assert b % accum == 0, (b, accum)
+        return x.reshape((accum, b // accum) + x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(loss_fn: Callable, optimizer: Optimizer, *,
+                    accum: int = 1, accum_dtype=jnp.float32,
+                    donate: bool = True) -> Callable:
+    """Build the train step.  ``loss_fn(params, microbatch) -> scalar``.
+
+    ``accum_dtype`` controls the gradient-accumulation carry.  f32 is the
+    default; for models whose f32 grads alone exceed per-chip HBM (e.g.
+    671B-param MoE at 256 chips: 10.5 GB/chip, double-buffered by the scan)
+    pass bf16 — measured 42 GB → fits on deepseek-v3 train_4k (§Perf)."""
+
+    def step(params, opt_state, batch):
+        if accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mbs = _split_batch(batch, accum)
+
+            def body(acc, mb):
+                loss_acc, g_acc = acc
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype),
+                              params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.float32(0.0), g0), mbs)
+            loss = loss / accum
+            grads = jax.tree.map(lambda g: g / accum, grads)
+
+        params, opt_state, stats = optimizer.update(params, grads, opt_state)
+        metrics = {"loss": loss, **stats}
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_jitted_step(loss_fn, optimizer, mesh, param_specs, *,
+                     batch_specs, accum: int = 1):
+    """pjit-wrapped train step with explicit shardings for the dry-run and
+    the real launcher."""
+    from jax.sharding import NamedSharding
+
+    step = make_train_step(loss_fn, optimizer, accum=accum)
+    state_specs = optimizer.state_specs(param_specs)
+
+    def shard(tree_specs):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s), tree_specs,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+    in_shardings = (shard(param_specs), shard(state_specs),
+                    shard(batch_specs))
+    out_shardings = (shard(param_specs), shard(state_specs), None)
+    return jax.jit(step, in_shardings=in_shardings,
+                   out_shardings=out_shardings,
+                   donate_argnums=(0, 1)), state_specs
+
+
+def make_eval_step(loss_fn) -> Callable:
+    @jax.jit
+    def step(params, batch):
+        return loss_fn(params, batch)
+    return step
+
+
+def train(params, opt_state, step_fn, data_iter, *, n_steps: int,
+          hooks: Optional[list] = None, start_step: int = 0):
+    """Host-side loop with hook points (checkpoint / fault-tolerance /
+    metrics).  Hooks: fn(step, params, opt_state, metrics) -> None."""
+    hooks = hooks or []
+    metrics = {}
+    for i in range(start_step, n_steps):
+        batch = next(data_iter)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        for h in hooks:
+            h(i, params, opt_state, metrics)
+    return params, opt_state, metrics

@@ -1,0 +1,144 @@
+"""DAWN core correctness: BOVM/SOVM vs queue-BFS and scipy oracles,
+complexity-claim verification (Eqs. 5/10/13), WCC, path reconstruction."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.graph import generators as gen
+from repro.core import (bovm_msbfs, bovm_sssp, bfs_queue_numpy, bfs_scipy,
+                        bfs_level_sync_jax, multi_source, sssp, sovm_sssp,
+                        sovm_msbfs, wcc_stats, reconstruct_path, UNREACHED)
+
+GRAPHS = {
+    "grid": lambda: gen.grid2d(10, 13),
+    "rmat_undir": lambda: gen.rmat(8, 4, directed=False, seed=1),
+    "rmat_dir": lambda: gen.rmat(8, 4, directed=True, seed=2),
+    "ws": lambda: gen.watts_strogatz(300, 6, 0.1, seed=3),
+    "disconnected": lambda: gen.disconnected(6, 40, 3.0, seed=4),
+    "er_dir": lambda: gen.erdos_renyi(257, 2.5, seed=5),
+    "mycielskian": lambda: gen.mycielskian(7),
+}
+
+
+@pytest.fixture(params=list(GRAPHS), scope="module")
+def graph(request):
+    return GRAPHS[request.param]()
+
+
+@pytest.mark.parametrize("source", [0, 3, 17])
+def test_sovm_matches_bfs(graph, source):
+    source = source % graph.n_nodes
+    ref = bfs_queue_numpy(graph, source)
+    got = np.asarray(sovm_sssp(graph, source).dist)
+    np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("source", [0, 5])
+def test_bovm_matches_bfs(graph, source):
+    source = source % graph.n_nodes
+    ref = bfs_queue_numpy(graph, source)
+    got = np.asarray(bovm_sssp(graph.to_dense(), source).dist)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_scipy_oracle_agrees(graph):
+    ref = bfs_queue_numpy(graph, 1)
+    sc = bfs_scipy(graph, 1)
+    np.testing.assert_array_equal(ref, sc)
+
+
+def test_level_sync_baseline(graph):
+    ref = bfs_queue_numpy(graph, 2)
+    got = np.asarray(bfs_level_sync_jax(graph, 2).dist)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_multi_source_both_methods(graph):
+    srcs = np.array([0, 1, 7, 11]) % graph.n_nodes
+    refs = np.stack([bfs_queue_numpy(graph, int(s)) for s in srcs])
+    for method in ("sovm", "bovm"):
+        got = np.asarray(multi_source(graph, srcs, method=method).dist)
+        np.testing.assert_array_equal(got, refs, err_msg=method)
+
+
+def test_auto_dispatch(graph):
+    res = sssp(graph, 0, method="auto")
+    np.testing.assert_array_equal(np.asarray(res.dist),
+                                  bfs_queue_numpy(graph, 0))
+
+
+def test_sweep_count_equals_eccentricity():
+    """DAWN executes exactly ε(i) productive sweeps (Thm 3.2 / Fact 1)."""
+    g = gen.grid2d(9, 9)  # diameter 16 from corner
+    st = sovm_sssp(g, 0)
+    dist = np.asarray(st.dist)
+    ecc = dist[dist >= 0].max()
+    assert int(st.sweeps) == int(ecc)
+
+
+def test_sovm_work_is_component_local():
+    """Eq. 10: SOVM useful work == E_wcc(i) — edges of the component
+    reachable from i (undirected graph), NOT global m."""
+    g = gen.disconnected(6, 40, 3.0, seed=7)
+    stats = wcc_stats(g)
+    src, dst = g.edge_arrays_np()
+    labels = stats["labels"]
+    st = sovm_sssp(g, 0)
+    comp_edges = int((labels[src] == labels[0]).sum())
+    assert int(st.edges_touched) == comp_edges
+    assert comp_edges < g.n_edges  # strictly component-local
+
+
+def test_memory_model_eq13():
+    """η = (4D+3)/(4D+8) — DAWN vs BFS memory (paper Eq. 13)."""
+    g = gen.rmat(8, 8, directed=False, seed=9)
+    dawn_b = g.memory_bytes(boolean_frontier=True)
+    bfs_b = g.memory_bytes(boolean_frontier=False)
+    d_avg = g.n_edges / g.n_nodes
+    eta = (4 * d_avg + 3) / (4 * d_avg + 8)
+    assert abs(dawn_b / bfs_b - eta) < 1e-9
+
+
+def test_unreachable_marked():
+    g = gen.disconnected(4, 30, 3.0, seed=11)
+    dist = np.asarray(sovm_sssp(g, 0).dist)
+    assert (dist == UNREACHED).any()
+    ref = bfs_queue_numpy(g, 0)
+    np.testing.assert_array_equal(dist, ref)
+
+
+def test_parent_reconstruction():
+    g = gen.grid2d(8, 8)
+    st = sovm_sssp(g, 0)
+    dist = np.asarray(st.dist)
+    target = 63
+    path = reconstruct_path(st.parent, 0, target, g.n_nodes)
+    assert path[0] == 0 and path[-1] == target
+    assert len(path) - 1 == dist[target]
+    # every hop is a real edge
+    import scipy.sparse as sp
+    adj = g.to_scipy().tocsr()
+    for a, b in zip(path[:-1], path[1:]):
+        assert adj[a, b] != 0
+
+
+def test_wcc_matches_scipy(graph):
+    import scipy.sparse.csgraph as csgraph
+    stats = wcc_stats(graph)
+    n_ref, labels_ref = csgraph.connected_components(
+        graph.to_scipy(), directed=True, connection="weak")
+    assert stats["n_components"] == n_ref
+    # same partition (up to relabeling)
+    ours = stats["labels"]
+    mapping = {}
+    for a, b in zip(ours, labels_ref):
+        assert mapping.setdefault(a, b) == b
+
+
+def test_vmapped_msbfs_consistent():
+    g = gen.watts_strogatz(200, 6, 0.1, seed=13)
+    srcs = jnp.arange(8, dtype=jnp.int32)
+    st = sovm_msbfs(g, srcs)
+    for i in range(8):
+        np.testing.assert_array_equal(np.asarray(st.dist[i]),
+                                      bfs_queue_numpy(g, i))

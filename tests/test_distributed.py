@@ -1,0 +1,136 @@
+"""Distribution tests on virtual devices (subprocess: jax must initialize
+with --xla_force_host_platform_device_count before first use)."""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def _run(body: str, devices: int = 8):
+    script = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = \\
+            "--xla_force_host_platform_device_count={devices}"
+    """) + textwrap.dedent(body)
+    res = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, timeout=900)
+    assert res.returncode == 0, res.stderr[-4000:]
+    return res.stdout
+
+
+@pytest.mark.slow
+def test_sharded_dawn_all_schedules():
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.graph import generators as gen
+        from repro.core import make_sharded_msbfs, shard_inputs, \\
+            bfs_queue_numpy
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        g = gen.rmat(9, 6, directed=False, seed=5)
+        adj = np.asarray(g.to_dense_padded(512))
+        sources = np.arange(8, dtype=np.int32)
+        refs = np.stack([bfs_queue_numpy(g, int(x)) for x in sources])
+        for schedule, bitpack in [("allgather", True),
+                                  ("allgather", False), ("psum", False)]:
+            fn = make_sharded_msbfs(mesh, schedule=schedule, bitpack=bitpack)
+            a, s = shard_inputs(mesh, jnp.asarray(adj, jnp.int8),
+                                jnp.asarray(sources), schedule)
+            out = fn(a, s)
+            dist = np.asarray(out.dist)[:, :g.n_nodes]
+            assert (dist == refs).all(), schedule
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_lm_train_step_matches_single_device():
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.models import transformer as T
+        from repro.train import optimizer as O
+        from repro.train.train_loop import make_train_step
+        from repro.launch.cells import shardings
+
+        cfg = T.LMConfig(name="t", n_layers=2, d_model=64, n_heads=4,
+                         n_kv=2, d_head=16, d_ff=128, vocab=256,
+                         dtype=jnp.float32)
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        opt = O.sgd(lr=0.1)
+        state = opt.init(params)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, 256)
+        batch = {"tokens": toks, "labels": toks}
+        step = make_train_step(lambda p, b: T.loss_fn(p, b, cfg), opt)
+
+        p1, _, m1 = jax.jit(step)(params, state, batch)
+
+        pspec = T.param_specs(cfg)
+        sspec = opt.state_specs(pspec)
+        bspec = {"tokens": P("data", None), "labels": P("data", None)}
+        with jax.sharding.set_mesh(mesh):
+            jstep = jax.jit(step,
+                            in_shardings=shardings(mesh, (pspec, sspec,
+                                                          bspec)),
+                            out_shardings=shardings(mesh, (pspec, sspec,
+                                                           None)))
+            p2, _, m2 = jstep(params, state, batch)
+        assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-3
+        for a, b in zip(jax.tree_util.tree_leaves(p1),
+                        jax.tree_util.tree_leaves(p2)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=2e-2, atol=2e-3)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_embed_lookup_sharded_equals_local():
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.models.layers import embed_lookup
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        table = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 6), 0, 64)
+        ref = table[toks]
+        with jax.sharding.set_mesh(mesh):
+            t = jax.device_put(table, NamedSharding(mesh, P(None, "model")))
+            k = jax.device_put(toks, NamedSharding(mesh, P("data", None)))
+            got = jax.jit(lambda a, b: embed_lookup(a, b, jnp.float32))(t, k)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-6)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_compressed_cross_pod_psum():
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.train.compression import make_cross_pod_psum
+        mesh = jax.make_mesh((4,), ("pod",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        psum_c = make_cross_pod_psum("int8")
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 0.1
+
+        def f(v):
+            return psum_c(v)
+
+        got = jax.shard_map(f, mesh=mesh,
+                            in_specs=jax.sharding.PartitionSpec("pod"),
+                            out_specs=jax.sharding.PartitionSpec("pod"))(x)
+        ref = jnp.broadcast_to(x.sum(0, keepdims=True), x.shape)
+        err = float(jnp.max(jnp.abs(got - ref)))
+        assert err < 0.01, err
+        print("OK")
+    """, devices=4)
+    assert "OK" in out

@@ -1,0 +1,82 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.graph.csr import CSRGraph
+from repro.core import (sovm_sssp, bovm_sssp, bfs_queue_numpy, pack_bits,
+                        unpack_bits, popcount)
+from repro.models.recsys import embedding_bag, embedding_bag_ragged
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 120), avg_deg=st.floats(0.5, 6.0),
+       seed=st.integers(0, 10**6), directed=st.booleans(),
+       source=st.integers(0, 10**6))
+def test_dawn_equals_bfs_on_random_graphs(n, avg_deg, seed, directed,
+                                          source):
+    rng = np.random.default_rng(seed)
+    m = max(1, int(n * avg_deg))
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    if not directed:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    g = CSRGraph.from_edges(src, dst, n)
+    s = source % n
+    ref = bfs_queue_numpy(g, s)
+    np.testing.assert_array_equal(np.asarray(sovm_sssp(g, s).dist), ref)
+    np.testing.assert_array_equal(
+        np.asarray(bovm_sssp(g.to_dense(), s).dist), ref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 200), seed=st.integers(0, 10**6))
+def test_pack_unpack_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.random((3, n)) < 0.5
+    packed = pack_bits(jnp.asarray(x))
+    back = np.asarray(unpack_bits(packed, n))
+    np.testing.assert_array_equal(back, x)
+    np.testing.assert_array_equal(np.asarray(popcount(packed)),
+                                  x.sum(axis=1))
+
+
+@settings(max_examples=20, deadline=None)
+@given(v=st.integers(2, 50), d=st.integers(1, 16),
+       bags=st.integers(1, 8), maxlen=st.integers(1, 6),
+       seed=st.integers(0, 10**6), mode=st.sampled_from(["sum", "mean"]))
+def test_embedding_bag_ragged_equals_fixed(v, d, bags, maxlen, seed, mode):
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.normal(size=(v, d)), jnp.float32)
+    lens = rng.integers(0, maxlen + 1, bags)
+    idx_fixed = np.full((bags, maxlen), -1, np.int64)
+    flat, seg = [], []
+    for b in range(bags):
+        ids = rng.integers(0, v, lens[b])
+        idx_fixed[b, :lens[b]] = ids
+        flat.extend(ids)
+        seg.extend([b] * lens[b])
+    fixed = embedding_bag(table, jnp.asarray(idx_fixed), mode=mode)
+    if flat:
+        ragged = embedding_bag_ragged(
+            table, jnp.asarray(np.array(flat)),
+            jnp.asarray(np.array(seg)), bags, mode=mode)
+        np.testing.assert_allclose(np.asarray(fixed), np.asarray(ragged),
+                                   rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10**6))
+def test_triangle_inequality(seed):
+    """Shortest-path distances satisfy d(s,v) <= d(s,u) + 1 per edge."""
+    rng = np.random.default_rng(seed)
+    n = 80
+    m = 240
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    g = CSRGraph.from_edges(src, dst, n)
+    dist = np.asarray(sovm_sssp(g, 0).dist)
+    s_np, d_np = g.edge_arrays_np()
+    for a, b in zip(s_np, d_np):
+        if dist[a] >= 0:
+            assert dist[b] >= 0 and dist[b] <= dist[a] + 1

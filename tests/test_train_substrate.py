@@ -1,0 +1,175 @@
+"""Optimizer / checkpoint / compression / fault-tolerance substrate."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.train import checkpoint as C
+from repro.train import compression as CP
+from repro.train import fault_tolerance as FT
+from repro.train import optimizer as O
+from repro.train.train_loop import make_train_step
+
+
+def _quad_loss(p, batch):
+    return jnp.sum((p["w"] - batch["target"]) ** 2)
+
+
+def test_adamw_converges_quadratic():
+    opt = O.adamw(peak_lr=0.1, weight_decay=0.0,
+                  schedule=lambda s: jnp.float32(0.1))
+    p = {"w": jnp.ones((4,)) * 5}
+    state = opt.init(p)
+    batch = {"target": jnp.zeros((4,))}
+    step = jax.jit(make_train_step(_quad_loss, opt))
+    for _ in range(200):
+        p, state, m = step(p, state, batch)
+    assert float(m["loss"]) < 1e-2
+
+
+def test_adafactor_converges_quadratic():
+    opt = O.adafactor(peak_lr=0.1, schedule=lambda s: jnp.float32(0.1))
+    p = {"w": jnp.ones((4, 3)) * 5}
+    state = opt.init(p)
+    step = jax.jit(make_train_step(
+        lambda p, b: jnp.sum((p["w"] - b["target"]) ** 2), opt))
+    batch = {"target": jnp.zeros((4, 3))}
+    for _ in range(300):
+        p, state, m = step(p, state, batch)
+    assert float(m["loss"]) < 0.1
+
+
+def test_adafactor_stacked_leaf_chunked_update_matches_flat():
+    """lax.map-chunked update of (L, a, b) leaves == updating each layer."""
+    opt = O.adafactor(peak_lr=0.05, schedule=lambda s: jnp.float32(0.05))
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (3, 8, 5))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (3, 8, 5))
+    st = opt.init({"w": w})
+    new_stacked, _, _ = opt.update({"w": w}, {"w": g}, st)
+    for l in range(3):
+        st_l = opt.init({"w": w[l]})
+        new_l, _, _ = opt.update({"w": w[l]}, {"w": g[l]}, st_l)
+        np.testing.assert_allclose(np.asarray(new_stacked["w"][l]),
+                                   np.asarray(new_l["w"]), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_grad_accum_matches_full_batch():
+    opt = O.sgd(lr=0.1)
+    key = jax.random.PRNGKey(0)
+    p = {"w": jax.random.normal(key, (6, 4))}
+
+    def loss(p, b):
+        return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
+
+    batch = {"x": jax.random.normal(jax.random.fold_in(key, 1), (8, 6)),
+             "y": jax.random.normal(jax.random.fold_in(key, 2), (8, 4))}
+    p1, _, m1 = make_train_step(loss, opt, accum=1)(p, opt.init(p), batch)
+    p4, _, m4 = make_train_step(loss, opt, accum=4)(p, opt.init(p), batch)
+    # mean-of-microbatch-means == full-batch mean for equal microbatches
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p4["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_checkpoint_roundtrip_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"a": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+                "b": {"c": jnp.float32(3.5)}}
+        for s in (1, 2, 3, 4):
+            C.save(d, s, tree, keep=2)
+        assert C.all_steps(d) == [3, 4]
+        restored, step = C.restore(d, 4, tree)
+        assert step == 4
+        for x, y in zip(jax.tree_util.tree_leaves(restored),
+                        jax.tree_util.tree_leaves(tree)):
+            np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                          np.asarray(y, np.float32))
+
+
+def test_checkpoint_detects_corruption():
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"a": jnp.ones((4,))}
+        C.save(d, 1, tree)
+        target = os.path.join(d, "step_000000001", "0000.bin")
+        with open(target, "r+b") as f:
+            f.write(b"\xde\xad")
+        with pytest.raises(IOError):
+            C.restore(d, 1, tree)
+
+
+def test_async_checkpoint():
+    with tempfile.TemporaryDirectory() as d:
+        tree = {"a": jnp.ones((128, 128))}
+        t = C.save(d, 7, tree, blocking=False)
+        t.join()
+        assert C.latest_step(d) == 7
+
+
+def test_int8_compression_error_feedback():
+    """With error feedback, compressed-grad SGD still converges."""
+    p = {"w": jnp.ones((8,)) * 4}
+    ef = CP.init_error_feedback(p)
+    lr = 0.05
+    for _ in range(300):
+        g = {"w": 2 * p["w"]}
+        cg, ef = CP.compress_int8(g, ef)
+        p = jax.tree.map(lambda a, b: a - lr * b, p, cg)
+    assert float(jnp.abs(p["w"]).max()) < 1e-2
+
+
+def test_topk_compression_shapes_and_bytes():
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64, 64)),
+                          jnp.float32)}
+    ef = CP.init_error_feedback(g)
+    cg, ef2 = CP.compress_topk(g, ef, frac=0.05)
+    nz = int((np.asarray(cg["w"]) != 0).sum())
+    assert nz <= int(64 * 64 * 0.05) + 1
+    raw, wire = CP.compressed_bytes(g, "topk", 0.05)
+    assert wire < raw / 10
+
+
+def test_heartbeat_and_remesh():
+    mon = FT.HeartbeatMonitor(8, interval_s=1.0, dead_after=2)
+    for h in range(8):
+        mon.beat(h, t=100.0)
+    assert mon.sweep(now=101.0) == []
+    for h in range(7):
+        mon.beat(h, t=104.0)
+    dead = mon.sweep(now=104.5)
+    assert dead == [7]
+    plan = FT.plan_remesh(7 * 4, model_parallel=4)
+    assert plan.mesh_shape == (7, 4)
+    with pytest.raises(RuntimeError):
+        FT.plan_remesh(3, model_parallel=4)
+
+
+def test_straggler_detection_and_eviction():
+    det = FT.StragglerDetector(window=8, threshold=3.0, evict_after=3)
+    evicted = []
+    for step in range(6):
+        for h in range(6):
+            det.record(h, 1.0 + (2.0 if h == 5 else 0.0)
+                       + 0.01 * np.random.default_rng(step * 7 + h).random())
+        strag, evict = det.classify()
+        evicted.extend(evict)
+        if step >= 2:
+            assert 5 in strag
+    assert 5 in evicted
+
+
+def test_fault_tolerant_runner_elastic_restart():
+    r = FT.FaultTolerantRunner(n_hosts=8, model_parallel=4, chips_per_host=4)
+    times = {h: 1.0 for h in range(8)}
+    r.on_step(0, times, now=100.0)
+    # host 3 stops beating
+    times2 = {h: 1.0 for h in range(8) if h != 3}
+    with pytest.raises(FT.FaultTolerantRunner.ElasticRestart) as ei:
+        for i in range(1, 10):
+            r.on_step(i, times2, now=100.0 + 40 * i)
+    plan = ei.value.plan
+    assert 3 in plan.dropped_hosts
+    assert plan.mesh_shape[0] * plan.mesh_shape[1] <= 28
