@@ -1,0 +1,141 @@
+"""Direction-optimized batched APSP: fixed-push vs fixed-pull vs auto.
+
+Runs one MXU-aligned source tile through the core/engine.py driver on each
+generator family three times — with the sweep direction pinned to push,
+pinned to pull, and chosen by the engine (calibrated per graph on the CPU
+reference path; per-sweep occupancy switching on the TPU kernel path) —
+and emits a JSON document with per-family timings plus the two acceptance
+booleans:
+
+  * ``auto_no_slower_than_best_everywhere`` — auto within TOLERANCE of
+    min(push, pull) on every family;
+  * ``auto_beats_worse_on`` — families where auto beats the *worse* fixed
+    direction by a real margin (>= 1.25x).
+
+Times are best-of-``repeats`` wall clock of the jitted driver (compile
+excluded by a warmup run).  On CPU the engine uses the XLA reference
+sweeps; the relative ordering of the three forms is what is under test,
+not absolute throughput.
+
+    PYTHONPATH=src python -m benchmarks.bench_apsp [--quick] [--out f.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import EngineConfig, apsp_engine, prepare_graph
+from repro.graph import generators as gen
+
+TOLERANCE = 1.25       # auto vs best fixed: timing-noise allowance (when
+                       # auto pins the best direction it runs the *same*
+                       # sweeps, so any gap is wall-clock jitter — observed
+                       # up to ~20% on shared CI boxes even best-of-10)
+BEAT_MARGIN = 1.25     # auto vs worse fixed: require a real win
+
+FAMILIES: Dict[str, Callable] = {
+    "grid_road": lambda: gen.grid2d(32, 32),
+    "rmat_social": lambda: gen.rmat(10, 8, directed=False, seed=1),
+    "ws_citation": lambda: gen.watts_strogatz(1024, 8, 0.05, seed=3),
+    "er_uniform": lambda: gen.erdos_renyi(1024, 6.0, directed=False, seed=5),
+    "ba_web": lambda: gen.barabasi_albert(1024, 4, seed=6),
+    "mycielskian": lambda: gen.mycielskian(9),
+}
+
+QUICK_FAMILIES = ("grid_road", "ws_citation", "mycielskian")
+
+
+def _time_interleaved(fns: Dict[str, Callable], repeats: int) -> Dict[str, float]:
+    """Best-of-``repeats`` per mode, modes interleaved within each round so
+    machine-load drift hits all modes equally."""
+    for fn in fns.values():
+        fn()  # warmup: jit compile + calibration cache + device transfer
+    best = {k: float("inf") for k in fns}
+    for _ in range(repeats):
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            fn()
+            best[k] = min(best[k], time.perf_counter() - t0)
+    return best
+
+
+def run(quick: bool = False, n_sources: int = 64, repeats: int = 10,
+        csv: Optional[List[str]] = None) -> Dict:
+    names = QUICK_FAMILIES if quick else tuple(FAMILIES)
+    families = {}
+    beats_worse = []
+    auto_ok_everywhere = True
+    for name in names:
+        g = FAMILIES[name]()
+        pg = prepare_graph(g)
+        sources = np.arange(min(n_sources, g.n_nodes), dtype=np.int32)
+        row: Dict = {"n_nodes": g.n_nodes, "n_edges": g.n_edges,
+                     "n_sources": int(len(sources))}
+
+        last_auto: List = []
+
+        def make_go(mode):
+            cfg = EngineConfig(mode=mode, source_batch=64)
+
+            def go():
+                res = apsp_engine(pg, sources, config=cfg)
+                res.dist.block_until_ready()
+                if mode == "auto":
+                    last_auto[:] = [res]
+            return go
+
+        times = _time_interleaved(
+            {m: make_go(m) for m in ("push", "pull", "auto")}, repeats)
+        for mode, t in times.items():
+            row[f"t_{mode}"] = t
+        res = last_auto[0]
+        row["sweeps"] = int(res.sweeps)
+        row["auto_direction_counts"] = dict(
+            zip(("push", "pull", "sparse"),
+                np.asarray(res.direction_counts).tolist()))
+        best = min(row["t_push"], row["t_pull"])
+        worse = max(row["t_push"], row["t_pull"])
+        row["auto_vs_best"] = row["t_auto"] / best
+        row["auto_vs_worse"] = row["t_auto"] / worse
+        row["auto_no_slower_than_best"] = row["auto_vs_best"] <= TOLERANCE
+        row["auto_beats_worse"] = worse / row["t_auto"] >= BEAT_MARGIN
+        auto_ok_everywhere &= row["auto_no_slower_than_best"]
+        if row["auto_beats_worse"]:
+            beats_worse.append(name)
+        families[name] = row
+        if csv is not None:
+            csv.append(f"apsp_{name},{row['t_auto'] * 1e6:.1f},"
+                       f"auto_vs_best={row['auto_vs_best']:.2f}")
+    return {
+        "benchmark": "bench_apsp",
+        "tolerance": TOLERANCE,
+        "beat_margin": BEAT_MARGIN,
+        "families": families,
+        "auto_no_slower_than_best_everywhere": auto_ok_everywhere,
+        "auto_beats_worse_on": beats_worse,
+        "auto_beats_worse_on_at_least_two": len(beats_worse) >= 2,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--sources", type=int, default=64)
+    ap.add_argument("--repeats", type=int, default=10)
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+    result = run(quick=args.quick, n_sources=args.sources,
+                 repeats=args.repeats)
+    text = json.dumps(result, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

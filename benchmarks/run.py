@@ -9,6 +9,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * bench_complexity  — Eqs. 5/6/10 work-bound verification
   * bench_batching    — beyond-paper: blocked multi-source GEMM + tile-skip
   * bench_weighted    — paper §5 extension: (min,+) DAWN vs scipy Dijkstra
+  * bench_apsp        — direction-optimized batched APSP engine:
+                        fixed-push vs fixed-pull vs auto (JSON via
+                        ``python -m benchmarks.bench_apsp``)
 """
 from __future__ import annotations
 
@@ -16,7 +19,7 @@ import argparse
 import sys
 import time
 
-from . import (bench_batching, bench_complexity, bench_memory,
+from . import (bench_apsp, bench_batching, bench_complexity, bench_memory,
                bench_scaling, bench_sssp, bench_weighted)
 
 
@@ -33,6 +36,8 @@ def main() -> None:
     bench_complexity.run(csv=rows, n_sources=4 if args.quick else 8)
     bench_batching.run(csv=rows)
     bench_weighted.run(csv=rows, n_sources=2 if args.quick else 8)
+    bench_apsp.run(quick=args.quick, repeats=3 if args.quick else 10,
+                   csv=rows)
     print("\n".join(rows))
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
 

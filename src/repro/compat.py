@@ -1,0 +1,48 @@
+"""Version-compatibility shims for jax APIs that moved between releases.
+
+The repo targets current jax, but must degrade gracefully on older
+installs (e.g. 0.4.x, where ``shard_map`` still lives in
+``jax.experimental`` and meshes have no axis types):
+
+  * ``shard_map``   — ``jax.shard_map`` when present, else the
+                      experimental implementation (same call signature).
+  * ``set_mesh``    — ``jax.sharding.set_mesh`` when present, else a
+                      null context (callers always pass explicit
+                      shardings, so the ambient mesh is an optimization,
+                      not a correctness requirement).
+  * ``AxisType``    — ``jax.sharding.AxisType`` or ``None``; consumers
+                      omit ``axis_types`` when it is ``None``.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+try:
+    from jax.sharding import AxisType
+except (ImportError, AttributeError):
+    AxisType = None
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax < 0.6: experimental location, and check_vma was check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, **kw):
+        if "check_vma" in kw:
+            kw["check_rep"] = kw.pop("check_vma")
+        if kw.get("mesh") is None:
+            # the experimental API has no ambient-mesh support (set_mesh
+            # is a nullcontext on these versions) — fail with the cause
+            # rather than a bare TypeError from the missing argument
+            raise RuntimeError(
+                "compat.shard_map on jax %s requires an explicit mesh= "
+                "(no ambient-mesh support before jax.shard_map)"
+                % jax.__version__)
+        return _shard_map(f, **kw)
+
+
+def set_mesh(mesh):
+    fn = getattr(jax.sharding, "set_mesh", None)
+    return fn(mesh) if fn is not None else contextlib.nullcontext()

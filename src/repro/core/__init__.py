@@ -10,6 +10,10 @@ from .distributed import make_sharded_msbfs, shard_inputs, ShardedDawnResult
 from .weighted import (minplus_sssp, bucketed_sssp, expand_integer_weights,
                        dijkstra_oracle, WeightedResult)
 from .centrality import closeness, harmonic, eccentricity_sample
+from .engine import (PUSH, PULL, SPARSE, DIRECTION_NAMES, EngineConfig,
+                     SweepStats, ApspResult, PreparedGraph, prepare_graph,
+                     frontier_stats, sweep_costs, choose_direction,
+                     measure_sweep_costs, apsp_engine, apsp_engine_blocks)
 
 __all__ = [
     "UNREACHED", "pack_bits", "unpack_bits", "popcount", "one_hot_frontier",
@@ -22,4 +26,8 @@ __all__ = [
     "minplus_sssp", "bucketed_sssp", "expand_integer_weights",
     "dijkstra_oracle", "WeightedResult",
     "closeness", "harmonic", "eccentricity_sample",
+    "PUSH", "PULL", "SPARSE", "DIRECTION_NAMES", "EngineConfig",
+    "SweepStats", "ApspResult", "PreparedGraph", "prepare_graph",
+    "frontier_stats", "sweep_costs", "choose_direction",
+    "measure_sweep_costs", "apsp_engine", "apsp_engine_blocks",
 ]

@@ -26,6 +26,8 @@ from typing import NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from .. import compat
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .frontier import UNREACHED, one_hot_frontier, pack_bits, unpack_bits
@@ -100,7 +102,7 @@ def make_sharded_msbfs(mesh: Mesh, *, schedule: str = "allgather",
             cond, body, (f0_l, dist0_l, jnp.int32(0), jnp.bool_(False)))
         return dist, step
 
-    sharded = jax.shard_map(
+    sharded = compat.shard_map(
         run_local, mesh=mesh,
         in_specs=(adj_spec, f_spec, f_spec, P()),
         out_specs=(f_spec, P()),

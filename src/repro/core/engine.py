@@ -1,0 +1,490 @@
+"""Direction-optimizing batched APSP engine.
+
+The paper's all-pairs bound O(S_wcc * E_wcc) is only reachable when every
+sweep runs in its cheapest *form*.  The repo carries three equivalent sweep
+implementations with very different cost profiles:
+
+  PUSH   — dense boolean GEMM (paper Alg. 1 / BOVM).  On TPU this is the
+           MXU ``fused_sweep`` kernel whose tile-skip tables make its cost
+           proportional to the *live* (frontier x unreached) tile fraction.
+  PULL   — bit-packed AND/OR over in-neighbour words (paper's CSC BOVM,
+           §3.2).  Reads 32 nodes per uint32 lane; cost proportional to the
+           unreached tile fraction but independent of frontier size.
+  SPARSE — edge-parallel gather/scatter over CSR lanes (paper Alg. 2 /
+           SOVM).  Cost proportional to the padded edge count, independent
+           of both occupancies.
+
+This module tiles sources into MXU-aligned batches and picks the cheapest
+form per sweep (direction-optimizing BFS in the style of Beamer's
+push/pull switch, generalized to three forms).  Two selection regimes:
+
+  dynamic (kernel path / TPU) — at every sweep, a ``lax.switch`` driven by
+    the occupancy cost model in :func:`sweep_costs`.  The signals are
+    exactly the scalar-prefetch tables the Pallas push kernel computes per
+    sweep, so the heuristic is free; tile skipping makes push cost truly
+    occupancy-proportional.
+
+  calibrated (reference path / CPU) — XLA's fixed-shape reference sweeps
+    cost the same regardless of occupancy, so per-sweep switching cannot
+    win.  Instead one sweep of each form is *measured* on the prepared
+    graph and the argmin direction is fixed for the whole batch (zero
+    per-sweep overhead; the measurement is cached per graph).
+
+All three sweeps operate on identical padded state (frontier (S, n_pad)
+int8, dist (S, n_pad) int32), so switching costs nothing but the branch.
+
+Thresholds and cost constants are documented in docs/ARCHITECTURE.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Iterator, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph.csr import CSRGraph
+from ..kernels.bovm import kernel as K
+from ..kernels.bovm import ref as R
+from .frontier import UNREACHED, one_hot_frontier, pack_bits
+
+PUSH, PULL, SPARSE = 0, 1, 2
+DIRECTION_NAMES = ("push", "pull", "sparse")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static engine parameters (hashable: used as a jit static arg).
+
+    Cost-model units (see docs/ARCHITECTURE.md for the calibration):
+      c_push   — per dense element in a live (i, j, k) push tile (MXU MAC)
+      c_pull   — per uint32 word scanned by the pull sweep (VPU bitwise op;
+                 one word covers 32 nodes, so the per-element cost is
+                 c_pull / 32)
+      c_sparse — per padded CSR edge lane (gather + random scatter)
+    """
+    source_batch: int = 128          # sources per tile (multiple of 8)
+    mode: str = "auto"               # auto | push | pull | sparse
+    use_kernel: Optional[bool] = None  # None -> Pallas kernels iff on TPU
+    dynamic: Optional[bool] = None   # per-sweep switch; None -> use_kernel
+    max_steps: Optional[int] = None  # None -> n_nodes (diameter bound)
+    # push-kernel tiles (bs adapts to the source batch)
+    bn: int = 128
+    bk: int = 128
+    # cost model
+    c_push: float = 1.0
+    c_pull: float = 8.0
+    c_sparse: float = 8.0
+    pull_chunk: int = 512            # ref pull: nodes per lax.map chunk
+
+    def __post_init__(self):
+        assert self.mode in ("auto",) + DIRECTION_NAMES, self.mode
+        assert self.source_batch % 8 == 0, \
+            f"source_batch must be a multiple of 8, got {self.source_batch}"
+        # above one push tile, the batch must tile exactly (bs = 128)
+        assert self.source_batch <= 128 or self.source_batch % 128 == 0, \
+            f"source_batch > 128 must be a multiple of 128, " \
+            f"got {self.source_batch}"
+
+
+class SweepStats(NamedTuple):
+    """Per-sweep occupancy signals (traced scalars, computed in-loop)."""
+    live_tile_frac: jax.Array   # fraction of (i,j,k) push tiles doing work
+    o_occ_frac: jax.Array       # fraction of output tiles with unreached
+
+
+class ApspResult(NamedTuple):
+    dist: jax.Array              # (S, n) int32, -1 unreachable
+    sweeps: jax.Array            # int32 — max sweeps over batches
+    direction_counts: jax.Array  # (3,) int32 — push/pull/sparse sweeps run
+    edges_touched: jax.Array     # float32 — Eq. 10 useful-work counter
+
+
+@dataclasses.dataclass
+class PreparedGraph:
+    """Device-resident operands shared by all three sweep forms.
+
+    The dense push operand and the bit-packed pull operand are O(n_pad^2)
+    and built lazily on first use: a run whose resolved direction never
+    dispatches them (e.g. ``mode='sparse'`` on a large road network) only
+    ever touches the O(m) CSR lanes and scales to graphs the dense forms
+    can't hold.
+    """
+    graph: CSRGraph
+    deg: jax.Array        # (n_pad,) float32 out-degrees (0 on pad)
+    n_pad: int
+    # per-graph sweep-cost measurements, keyed (s, bn, bk, pull_chunk, path)
+    cost_cache: dict = dataclasses.field(default_factory=dict, repr=False)
+    _adj: Optional[jax.Array] = dataclasses.field(default=None, repr=False)
+    _adj_pull: Optional[jax.Array] = dataclasses.field(default=None,
+                                                       repr=False)
+
+    @property
+    def adj(self) -> jax.Array:
+        """(n_pad, n_pad) int8 dense adjacency (push operand)."""
+        if self._adj is None:
+            self._adj = self.graph.to_dense_padded(self.n_pad,
+                                                   dtype=jnp.int8)
+        return self._adj
+
+    @property
+    def adj_pull(self) -> jax.Array:
+        """(n_pad, n_pad/32) uint32 packed in-neighbours (pull operand)."""
+        if self._adj_pull is None:
+            self._adj_pull = self.graph.to_pull_packed(self.n_pad,
+                                                       adj=self._adj)
+        return self._adj_pull
+
+
+def prepare_graph(g: CSRGraph, *, align: int = 128) -> PreparedGraph:
+    """Pad-size the graph and build the O(n) degree operand; the dense
+    push/pull operands materialize lazily when a sweep form needs them."""
+    n_pad = g.n_padded(align)
+    deg = jnp.zeros(n_pad, jnp.float32).at[: g.n_nodes].set(
+        g.out_degrees().astype(jnp.float32))
+    return PreparedGraph(graph=g, deg=deg, n_pad=n_pad)
+
+
+# --------------------------------------------------------------------------
+# heuristic: occupancy stats -> modelled sweep costs -> direction
+# --------------------------------------------------------------------------
+
+def frontier_stats(frontier: jax.Array, dist: jax.Array, *, bs: int,
+                   bn: int, bk: int) -> SweepStats:
+    """Tile-occupancy fractions — the same tables the push kernel prefetches.
+
+    live(i, j, k) = f_occ[i, k] & o_occ[i, j]; its mean factorizes as
+    E_i[ mean_k f_occ[i, :] * mean_j o_occ[i, :] ].
+    """
+    s, n = frontier.shape
+    gi, gj, gk = s // bs, n // bn, n // bk
+    f_occ = jnp.any(frontier.reshape(gi, bs, gk, bk) != 0, axis=(1, 3))
+    o_occ = jnp.any(dist.reshape(gi, bs, gj, bn) < 0, axis=(1, 3))
+    f_row = jnp.mean(f_occ.astype(jnp.float32), axis=1)   # (gi,)
+    o_row = jnp.mean(o_occ.astype(jnp.float32), axis=1)   # (gi,)
+    return SweepStats(
+        live_tile_frac=jnp.mean(f_row * o_row),
+        o_occ_frac=jnp.mean(o_row),
+    )
+
+
+def sweep_costs(stats: SweepStats, *, n_pad: int, s: int, m_pad: int,
+                cfg: EngineConfig) -> jax.Array:
+    """Modelled cost of one sweep in each form -> (3,) float32."""
+    words = n_pad // 32
+    push = cfg.c_push * s * n_pad * n_pad * stats.live_tile_frac
+    pull = cfg.c_pull * s * n_pad * words * stats.o_occ_frac
+    sparse = jnp.float32(cfg.c_sparse * s * m_pad)
+    return jnp.stack([push, pull, jnp.broadcast_to(sparse, ())])
+
+
+def choose_direction(stats: SweepStats, *, n_pad: int, s: int, m_pad: int,
+                     cfg: EngineConfig) -> jax.Array:
+    """argmin of the modelled costs -> PUSH | PULL | SPARSE (traced int32)."""
+    return jnp.argmin(
+        sweep_costs(stats, n_pad=n_pad, s=s, m_pad=m_pad, cfg=cfg)
+    ).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# the three sweep forms over identical padded state
+# --------------------------------------------------------------------------
+
+def _pull_chunk_size(n_pad: int, preferred: int) -> int:
+    for c in (preferred, 512, 256, 128):
+        if c <= n_pad and n_pad % c == 0:
+            return c
+    return n_pad
+
+
+def _pull_sweep_ref(frontier, adj_pull, dist, step, *, chunk: int):
+    """Chunked oracle for the packed pull sweep — bounds the (S, C, W)
+    broadcast intermediate to ~chunk * S * W words."""
+    fp = pack_bits(frontier != 0)                       # (S, W)
+    n_pad = dist.shape[1]
+    blocks = adj_pull.reshape(n_pad // chunk, chunk, -1)
+
+    def one(block):                                     # (C, W) uint32
+        return jnp.any(fp[:, None, :] & block[None], axis=-1)  # (S, C)
+
+    hits = jnp.moveaxis(jax.lax.map(one, blocks), 0, 1)  # (S, n/C, C)
+    hits = hits.reshape(frontier.shape)
+    new = hits & (dist < 0)
+    return new.astype(jnp.int8), jnp.where(new, jnp.int32(step), dist)
+
+
+def _sparse_sweep(frontier, dist, step, src_idx, dst_idx):
+    """Batched SOVM sweep (paper Alg. 2 / Eq. 9 union as scatter-OR)."""
+    active = frontier[:, src_idx] != 0                  # (S, m_pad)
+    hits = jnp.zeros(frontier.shape, jnp.bool_).at[:, dst_idx].max(active)
+    new = hits & (dist < 0)
+    return new.astype(jnp.int8), jnp.where(new, jnp.int32(step), dist)
+
+
+def _pull_kernel_wk(words: int) -> int:
+    for wk in (128, 64, 32, 16, 8, 4):
+        if words % wk == 0:
+            return wk
+    return words
+
+
+def _sweep_forms(adj, adj_pull, src_idx, dst_idx, *, n_pad: int, s: int,
+                 cfg: EngineConfig, use_kernel: bool, interpret: bool):
+    """(push, pull, sparse) closures over identical padded state — the
+    single source of truth for what each direction dispatches, shared by
+    the batch driver and the calibration measurement.
+
+    ``adj``/``adj_pull`` may be (1, 1) dummies when the caller has
+    resolved a direction that never dispatches them; ``n_pad`` is
+    therefore passed explicitly rather than read off ``adj``."""
+    bs = min(s, 128)
+    chunk = _pull_chunk_size(n_pad, cfg.pull_chunk)
+    wk = _pull_kernel_wk(n_pad // 32)
+
+    if use_kernel:
+        def push(f, d, st):
+            return K.fused_sweep(f, adj, d, st, bs=bs, bn=cfg.bn, bk=cfg.bk,
+                                 interpret=interpret)
+
+        def pull(f, d, st):
+            return K.packed_pull_sweep(pack_bits(f != 0), adj_pull, d, st,
+                                       bs=min(s, 8), bn=cfg.bn, wk=wk,
+                                       interpret=interpret)
+    else:
+        def push(f, d, st):
+            return R.sweep_ref(f, adj, d, st)
+
+        def pull(f, d, st):
+            return _pull_sweep_ref(f, adj_pull, d, st, chunk=chunk)
+
+    def sparse(f, d, st):
+        return _sparse_sweep(f, d, st, src_idx, dst_idx)
+
+    return push, pull, sparse
+
+
+# --------------------------------------------------------------------------
+# jitted per-batch driver
+# --------------------------------------------------------------------------
+
+class _BatchState(NamedTuple):
+    frontier: jax.Array
+    dist: jax.Array
+    step: jax.Array
+    done: jax.Array
+    dir_counts: jax.Array
+    edges_touched: jax.Array
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "n_real", "n_pad", "max_steps",
+                                    "use_kernel", "interpret",
+                                    "forced_dir"))
+def _run_batch(adj, adj_pull, src_idx, dst_idx, deg, sources, n_valid, *,
+               cfg: EngineConfig, n_real: int, n_pad: int, max_steps: int,
+               use_kernel: bool, interpret: bool,
+               forced_dir: Optional[int]) -> _BatchState:
+    # n_valid is traced (not static): the serving loop flushes micro-batches
+    # of whatever size is pending, and each distinct count must not retrace
+    s = sources.shape[0]
+    m_pad = src_idx.shape[0]
+    bs = min(s, 128)
+
+    f0 = one_hot_frontier(sources, n_pad, dtype=jnp.int8)
+    # padded source rows (>= n_valid) start with an empty frontier and a
+    # fully-visited dist: they do no work, add nothing to the Eq. 10
+    # counters, and never extend the while_loop past the real rows
+    row_ok = (jnp.arange(s) < n_valid)[:, None]
+    f0 = jnp.where(row_ok, f0, 0)
+    dist0 = jnp.where(f0 != 0, 0, jnp.full((s, n_pad), UNREACHED))
+    # pad columns are born "visited" so no sweep form ever discovers them
+    dist0 = jnp.where(row_ok & (jnp.arange(n_pad)[None, :] < n_real),
+                      dist0, 0)
+
+    push, pull, sparse = _sweep_forms(adj, adj_pull, src_idx, dst_idx,
+                                      n_pad=n_pad, s=s, cfg=cfg,
+                                      use_kernel=use_kernel,
+                                      interpret=interpret)
+
+    def cond(st: _BatchState):
+        return (~st.done) & (st.step < max_steps)
+
+    def body(st: _BatchState):
+        step = st.step + 1
+        if forced_dir is None:
+            stats = frontier_stats(st.frontier, st.dist, bs=bs, bn=cfg.bn,
+                                   bk=cfg.bk)
+            idx = choose_direction(stats, n_pad=n_pad, s=s, m_pad=m_pad,
+                                   cfg=cfg)
+            new, dist = jax.lax.switch(idx, (push, pull, sparse),
+                                       st.frontier, st.dist, step)
+        else:  # direction resolved at trace time: no stats, no switch
+            idx = jnp.int32(forced_dir)
+            new, dist = (push, pull, sparse)[forced_dir](
+                st.frontier, st.dist, step)
+        touched = st.edges_touched + jnp.sum(
+            (st.frontier != 0).astype(jnp.float32) * deg[None, :])
+        return _BatchState(
+            frontier=new, dist=dist, step=step,
+            done=~jnp.any(new != 0),
+            dir_counts=st.dir_counts.at[idx].add(1),
+            edges_touched=touched)
+
+    st0 = _BatchState(frontier=f0, dist=dist0, step=jnp.int32(0),
+                      done=jnp.bool_(False),
+                      dir_counts=jnp.zeros(3, jnp.int32),
+                      edges_touched=jnp.float32(0.0))
+    return jax.lax.while_loop(cond, body, st0)
+
+
+# --------------------------------------------------------------------------
+# calibrated direction choice (reference path)
+# --------------------------------------------------------------------------
+
+_CALIBRATION_SWEEPS = 8
+_CALIBRATION_REPS = 5
+
+
+def measure_sweep_costs(pg: "PreparedGraph", s: int, cfg: EngineConfig, *,
+                        use_kernel: bool = False,
+                        interpret: bool = True) -> Tuple[float, float, float]:
+    """Wall-clock one mid-BFS sweep in each form on this graph.
+
+    Times the *same* sweep implementations ``_run_batch`` will dispatch
+    (kernel or reference, per ``use_kernel``), so the pinned argmin is the
+    argmin of what actually runs.  Reference sweeps have
+    occupancy-independent (fixed-shape) cost, so a single measurement per
+    form characterizes every sweep of the run.  Cached on the
+    PreparedGraph per (batch size, tiles, path) — calibration costs a few
+    warm sweeps once per graph, then is free.
+    """
+    key = (s, cfg.bn, cfg.bk, cfg.pull_chunk, use_kernel)
+    if key in pg.cost_cache:
+        return pg.cost_cache[key]
+    n_pad = pg.n_pad
+    # representative mid-BFS state: ~6% frontier, ~25% visited
+    f = np.zeros((s, n_pad), np.int8)
+    f[:, ::17] = 1
+    dist = np.full((s, n_pad), int(UNREACHED), np.int32)
+    dist[:, ::4] = 1
+    f_j, dist_j = jnp.asarray(f), jnp.asarray(dist)
+
+    def chained(sweep):
+        # time a block of sweeps inside one jit: a bigger measurement
+        # drowns per-dispatch timer noise.  The frontier must evolve or
+        # XLA hoists the loop-invariant sweep out of the fori_loop; cost
+        # per sweep is occupancy-independent (fixed shapes) regardless.
+        def go(fr, d):
+            def body(i, c):
+                new, dd = sweep(c[0], c[1], i + 1)
+                # refresh dist so the frontier never dies mid-measurement
+                return (new, jnp.where(i % 2 == 1, d, dd))
+            return jax.lax.fori_loop(0, _CALIBRATION_SWEEPS, body, (fr, d))
+        return jax.jit(go)
+
+    forms = tuple(map(chained, _sweep_forms(
+        pg.adj, pg.adj_pull, pg.graph.src, pg.graph.dst,
+        n_pad=n_pad, s=s, cfg=cfg, use_kernel=use_kernel,
+        interpret=interpret)))
+    costs = []
+    for fn in forms:
+        jax.block_until_ready(fn(f_j, dist_j))  # compile + warm caches
+        reps = []
+        for _ in range(_CALIBRATION_REPS):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(f_j, dist_j))
+            reps.append(time.perf_counter() - t0)
+        costs.append(sorted(reps)[_CALIBRATION_REPS // 2]
+                     / _CALIBRATION_SWEEPS)  # median
+    result = tuple(costs)
+    pg.cost_cache[key] = result
+    return result
+
+
+# --------------------------------------------------------------------------
+# public drivers
+# --------------------------------------------------------------------------
+
+def _resolve_kernel(cfg: EngineConfig) -> Tuple[bool, bool]:
+    on_tpu = jax.default_backend() == "tpu"
+    use_kernel = on_tpu if cfg.use_kernel is None else cfg.use_kernel
+    return use_kernel, not on_tpu
+
+
+def _resolve_direction(pg: "PreparedGraph", s: int, cfg: EngineConfig,
+                       use_kernel: bool, interpret: bool) -> Optional[int]:
+    """None -> per-sweep dynamic switch; int -> direction fixed per batch."""
+    if cfg.mode != "auto":
+        return DIRECTION_NAMES.index(cfg.mode)
+    dynamic = use_kernel if cfg.dynamic is None else cfg.dynamic
+    if dynamic:
+        return None
+    costs = measure_sweep_costs(pg, s, cfg, use_kernel=use_kernel,
+                                interpret=interpret)
+    return int(np.argmin(costs))
+
+
+def apsp_engine_blocks(
+        g: Union[CSRGraph, PreparedGraph],
+        sources: Optional[Sequence[int]] = None, *,
+        config: EngineConfig = EngineConfig(),
+) -> Iterator[Tuple[np.ndarray, jax.Array, _BatchState]]:
+    """Stream (source_ids, dist_rows, raw_batch_state) one source tile at a
+    time — the non-materializing form for large n."""
+    pg = g if isinstance(g, PreparedGraph) else prepare_graph(g)
+    graph = pg.graph
+    n = graph.n_nodes
+    srcs = np.arange(n, dtype=np.int32) if sources is None else \
+        np.asarray(sources, np.int32)
+    if srcs.size == 0:
+        raise ValueError("apsp_engine: empty source list")
+    if srcs.min() < 0 or srcs.max() >= n:
+        raise ValueError(
+            f"apsp_engine: sources must be in [0, {n}), got "
+            f"[{srcs.min()}, {srcs.max()}]")
+    use_kernel, interpret = _resolve_kernel(config)
+    max_steps = config.max_steps or n
+    B = config.source_batch
+    forced_dir = _resolve_direction(pg, B, config, use_kernel, interpret)
+    # only materialize the O(n_pad^2) operands the resolved direction can
+    # dispatch; the other slot gets a (1, 1) dummy its closure never traces
+    adj = pg.adj if forced_dir in (None, PUSH) else \
+        jnp.zeros((1, 1), jnp.int8)
+    adj_pull = pg.adj_pull if forced_dir in (None, PULL) else \
+        jnp.zeros((1, 1), jnp.uint32)
+    for lo in range(0, len(srcs), B):
+        block = srcs[lo: lo + B]
+        valid = len(block)
+        padded = np.zeros(B, np.int32)
+        padded[:valid] = block
+        st = _run_batch(adj, adj_pull, pg.graph.src, pg.graph.dst,
+                        pg.deg, jnp.asarray(padded), jnp.int32(valid),
+                        cfg=config, n_real=n, n_pad=pg.n_pad,
+                        max_steps=max_steps,
+                        use_kernel=use_kernel, interpret=interpret,
+                        forced_dir=forced_dir)
+        yield block, st.dist[:valid, :n], st
+
+
+def apsp_engine(g: Union[CSRGraph, PreparedGraph],
+                sources: Optional[Sequence[int]] = None, *,
+                config: EngineConfig = EngineConfig()) -> ApspResult:
+    """Materialized batched APSP with per-sweep direction optimization.
+
+    Returns distances for every requested source (default: all nodes),
+    plus sweep/direction/work counters aggregated over source tiles.
+    """
+    rows = []
+    sweeps = jnp.int32(0)
+    counts = jnp.zeros(3, jnp.int32)
+    touched = jnp.float32(0.0)
+    for _, dist, st in apsp_engine_blocks(g, sources, config=config):
+        rows.append(dist)
+        sweeps = jnp.maximum(sweeps, st.step)
+        counts = counts + st.dir_counts
+        touched = touched + st.edges_touched
+    return ApspResult(dist=jnp.concatenate(rows, axis=0), sweeps=sweeps,
+                      direction_counts=counts, edges_touched=touched)

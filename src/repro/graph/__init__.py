@@ -1,4 +1,5 @@
-from .csr import CSRGraph, symmetrize
+from .csr import CSRGraph, DegreeStats, symmetrize
 from . import generators, partition, sampler, io
 
-__all__ = ["CSRGraph", "symmetrize", "generators", "partition", "sampler", "io"]
+__all__ = ["CSRGraph", "DegreeStats", "symmetrize", "generators",
+           "partition", "sampler", "io"]

@@ -13,6 +13,7 @@ dead row that is dropped on exit.
 from __future__ import annotations
 
 import dataclasses
+import typing
 from functools import partial
 from typing import Tuple
 
@@ -23,6 +24,16 @@ import numpy as np
 
 def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
+
+
+class DegreeStats(typing.NamedTuple):
+    """Static graph statistics feeding the engine's sweep cost model."""
+    n_nodes: int
+    n_edges: int
+    avg_degree: float
+    max_out_degree: int
+    max_in_degree: int
+    density: float
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -134,6 +145,44 @@ class CSRGraph:
 
     def in_degrees(self) -> jax.Array:
         return self.indptr_t[1:] - self.indptr_t[:-1]
+
+    def n_padded(self, align: int = 128) -> int:
+        """Tile-aligned node count with room for the sentinel row.
+
+        ``>= n_nodes + 1`` so the padded-edge sentinel (``src = dst =
+        n_nodes``) indexes a dead column instead of clipping onto a real
+        node inside jit (JAX clamps out-of-range gather indices).
+        """
+        return _round_up(self.n_nodes + 1, align)
+
+    def degree_stats(self) -> "DegreeStats":
+        """Host-side degree/density summary — the static half of the
+        direction-switch signal (the dynamic half is frontier occupancy,
+        see core/engine.py)."""
+        out_deg = np.asarray(self.out_degrees())
+        in_deg = np.asarray(self.in_degrees())
+        n = max(self.n_nodes, 1)
+        return DegreeStats(
+            n_nodes=self.n_nodes,
+            n_edges=self.n_edges,
+            avg_degree=self.n_edges / n,
+            max_out_degree=int(out_deg.max(initial=0)),
+            max_in_degree=int(in_deg.max(initial=0)),
+            density=self.n_edges / (n * n),
+        )
+
+    def to_pull_packed(self, n_pad: int | None = None, dtype=jnp.int8,
+                       *, adj: jax.Array | None = None) -> jax.Array:
+        """(n_pad, n_pad/32) uint32 bit-packed in-neighbour rows — the
+        operand of the pull-direction sweep (kernels/bovm packed_pull).
+
+        Pass ``adj`` (a ``to_dense_padded`` result) to reuse an already
+        built dense operand instead of materializing a second one."""
+        from ..core.frontier import pack_bits
+        if adj is None:
+            n_pad = self.n_padded() if n_pad is None else n_pad
+            adj = self.to_dense_padded(n_pad, dtype=dtype)
+        return pack_bits(adj.T != 0)
 
     def reverse(self) -> "CSRGraph":
         """Transpose view as a first-class CSRGraph (shares buffers)."""

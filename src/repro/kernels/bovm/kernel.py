@@ -34,6 +34,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 names the TPU compiler-params struct TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 
 # --------------------------------------------------------------------------
 # push direction: fused masked GEMM sweep
@@ -101,7 +105,7 @@ def fused_sweep(frontier: jax.Array, adj: jax.Array, dist: jax.Array,
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((s, n), jnp.int8),
                    jax.ShapeDtypeStruct((s, n), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(f_occ.astype(jnp.int32), o_occ.astype(jnp.int32), step_arr,
@@ -176,7 +180,7 @@ def packed_pull_sweep(frontier_packed: jax.Array, adj_in_packed: jax.Array,
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((s, n), jnp.int8),
                    jax.ShapeDtypeStruct((s, n), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(step_arr, frontier_packed, adj_in_packed, dist)

@@ -15,6 +15,8 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from .. import compat
 from jax.sharding import PartitionSpec as P
 
 Params = Dict[str, Any]
@@ -76,7 +78,7 @@ def embed_lookup(table: jax.Array, tokens: jax.Array, dtype) -> jax.Array:
     def local(tbl, tok):
         return tbl[tok]
 
-    out = jax.shard_map(
+    out = compat.shard_map(
         local,
         in_specs=(P(None, "model"), P(dp, *([None] * (tokens.ndim - 1)))),
         out_specs=P(dp, *([None] * (tokens.ndim - 1)), "model"),

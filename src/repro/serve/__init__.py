@@ -1,1 +1,3 @@
-from .engine import ServingEngine, Request
+from .engine import (GraphQuery, GraphService, Request, ServingEngine)
+
+__all__ = ["GraphQuery", "GraphService", "Request", "ServingEngine"]

@@ -6,6 +6,12 @@ batched decode steps over all active slots, retiring finished sequences and
 immediately admitting queued ones (continuous batching).  The decode step
 is the same jitted ``transformer.decode_step`` the dry-run lowers at the
 32k/500k shapes.
+
+The engine also serves ``shortest_path`` graph queries: a
+:class:`GraphService` micro-batches pending :class:`GraphQuery` requests
+into one direction-optimized multi-source sweep (core/engine.py) per
+engine tick, so graph analytics ride the same continuous-batching loop as
+decode steps instead of needing a separate deployment.
 """
 from __future__ import annotations
 
@@ -18,6 +24,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.engine import EngineConfig, PreparedGraph, apsp_engine_blocks, \
+    prepare_graph
+from ..graph.csr import CSRGraph
 from ..models import transformer as T
 
 
@@ -32,11 +41,91 @@ class Request:
     t_done: float = 0.0
 
 
+@dataclasses.dataclass
+class GraphQuery:
+    """A ``shortest_path`` request served by the batching loop.
+
+    ``target=None`` returns the full distance vector from ``source``;
+    otherwise ``hops`` is the shortest unweighted path length (or -1 when
+    unreachable).
+    """
+    qid: int
+    source: int
+    target: Optional[int] = None
+    dist: Optional[np.ndarray] = None
+    hops: Optional[int] = None
+    t_submit: float = 0.0
+    t_done: float = 0.0
+
+
+class GraphService:
+    """Micro-batched shortest-path queries over one prepared graph.
+
+    Pending query sources are packed into a single source tile and run
+    through the direction-optimizing engine — one jitted multi-source
+    sweep per flush, amortized across every query in the batch exactly
+    like decode steps amortize across KV slots.
+    """
+
+    def __init__(self, graph: CSRGraph, *,
+                 config: Optional[EngineConfig] = None,
+                 max_batch: int = 32):
+        batch = max(8, ((max_batch + 7) // 8) * 8)
+        if batch > 128:  # EngineConfig: above one push tile, multiple of 128
+            batch = ((batch + 127) // 128) * 128
+        self.config = config or EngineConfig(source_batch=batch)
+        # per-flush latency cap: honored even with an explicit config (the
+        # source tile stays config.source_batch wide; short flushes pad)
+        self.max_batch = min(max_batch, self.config.source_batch)
+        self.prepared: PreparedGraph = prepare_graph(graph)
+        self.queue: deque[GraphQuery] = deque()
+        self.completed: List[GraphQuery] = []
+
+    def submit(self, query: GraphQuery):
+        n = self.prepared.graph.n_nodes
+        if not 0 <= query.source < n:
+            raise ValueError(f"source {query.source} not in [0, {n})")
+        if query.target is not None and not 0 <= query.target < n:
+            raise ValueError(f"target {query.target} not in [0, {n})")
+        query.t_submit = time.monotonic()
+        self.queue.append(query)
+
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def flush(self) -> List[GraphQuery]:
+        """Serve up to one source tile of pending queries; returns them."""
+        if not self.queue:
+            return []
+        batch = [self.queue.popleft()
+                 for _ in range(min(len(self.queue), self.max_batch))]
+        sources = np.asarray([q.source for q in batch], np.int32)
+        (_, dist, _), = apsp_engine_blocks(self.prepared, sources,
+                                           config=self.config)
+        dist = np.asarray(dist)
+        now = time.monotonic()
+        for row, q in zip(dist, batch):
+            if q.target is None:
+                q.dist = row
+            else:
+                q.hops = int(row[q.target])
+            q.t_done = now
+            self.completed.append(q)
+        return batch
+
+
 class ServingEngine:
-    """Fixed-slot continuous batching over a shared KV cache."""
+    """Fixed-slot continuous batching over a shared KV cache.
+
+    Optionally co-serves graph ``shortest_path`` queries: pass a
+    :class:`GraphService` and submit :class:`GraphQuery` objects via
+    :meth:`submit_graph`; each engine tick flushes one micro-batch of
+    graph queries alongside the decode step.
+    """
 
     def __init__(self, params, cfg: T.LMConfig, *, slots: int = 4,
-                 max_len: int = 256, greedy: bool = True):
+                 max_len: int = 256, greedy: bool = True,
+                 graph_service: Optional[GraphService] = None):
         self.params = params
         self.cfg = cfg
         self.slots = slots
@@ -51,6 +140,13 @@ class ServingEngine:
         self._decode = jax.jit(
             lambda p, c, t, a: T.decode_step(p, c, t, cfg, active=a))
         self.completed: List[Request] = []
+        self.graph_service = graph_service
+
+    def submit_graph(self, query: GraphQuery):
+        if self.graph_service is None:
+            raise RuntimeError(
+                "construct ServingEngine with graph_service= to serve graphs")
+        self.graph_service.submit(query)
 
     def submit(self, req: Request):
         req.t_submit = time.monotonic()
@@ -90,11 +186,16 @@ class ServingEngine:
         self._last_logits = np.asarray(logits[:, 0], np.float32)
 
     def step(self) -> int:
-        """One engine tick: admit, decode one token for all active slots,
-        retire finished requests.  Returns number of live requests."""
+        """One engine tick: admit, serve one graph micro-batch, decode one
+        token for all active slots, retire finished requests.  Returns the
+        number of live requests (LM and graph)."""
+        graph_live = 0
+        if self.graph_service is not None:
+            self.graph_service.flush()
+            graph_live = self.graph_service.pending()
         self._admit()
         if not self.active:
-            return 0
+            return graph_live
         mask = np.zeros(self.slots, bool)
         for rid in self.active:
             mask[self.slot_of[rid]] = True
@@ -115,7 +216,7 @@ class ServingEngine:
             req.t_done = time.monotonic()
             self.completed.append(req)
             self.free.append(self.slot_of.pop(rid))
-        return len(self.active) + len(self.queue)
+        return len(self.active) + len(self.queue) + graph_live
 
     def run_to_completion(self, max_ticks: int = 10_000):
         for _ in range(max_ticks):

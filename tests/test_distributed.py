@@ -26,8 +26,8 @@ def test_sharded_dawn_all_schedules():
         from repro.graph import generators as gen
         from repro.core import make_sharded_msbfs, shard_inputs, \\
             bfs_queue_numpy
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         g = gen.rmat(9, 6, directed=False, seed=5)
         adj = np.asarray(g.to_dense_padded(512))
         sources = np.arange(8, dtype=np.int32)
@@ -58,8 +58,8 @@ def test_sharded_lm_train_step_matches_single_device():
         cfg = T.LMConfig(name="t", n_layers=2, d_model=64, n_heads=4,
                          n_kv=2, d_head=16, d_ff=128, vocab=256,
                          dtype=jnp.float32)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         params = T.init_params(jax.random.PRNGKey(0), cfg)
         opt = O.sgd(lr=0.1)
         state = opt.init(params)
@@ -72,7 +72,8 @@ def test_sharded_lm_train_step_matches_single_device():
         pspec = T.param_specs(cfg)
         sspec = opt.state_specs(pspec)
         bspec = {"tokens": P("data", None), "labels": P("data", None)}
-        with jax.sharding.set_mesh(mesh):
+        from repro import compat
+        with compat.set_mesh(mesh):
             jstep = jax.jit(step,
                             in_shardings=shardings(mesh, (pspec, sspec,
                                                           bspec)),
@@ -96,12 +97,13 @@ def test_embed_lookup_sharded_equals_local():
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.models.layers import embed_lookup
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         table = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
         toks = jax.random.randint(jax.random.PRNGKey(1), (4, 6), 0, 64)
         ref = table[toks]
-        with jax.sharding.set_mesh(mesh):
+        from repro import compat
+        with compat.set_mesh(mesh):
             t = jax.device_put(table, NamedSharding(mesh, P(None, "model")))
             k = jax.device_put(toks, NamedSharding(mesh, P("data", None)))
             got = jax.jit(lambda a, b: embed_lookup(a, b, jnp.float32))(t, k)
@@ -117,15 +119,16 @@ def test_compressed_cross_pod_psum():
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.train.compression import make_cross_pod_psum
-        mesh = jax.make_mesh((4,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("pod",))
         psum_c = make_cross_pod_psum("int8")
         x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 0.1
 
         def f(v):
             return psum_c(v)
 
-        got = jax.shard_map(f, mesh=mesh,
+        from repro import compat
+        got = compat.shard_map(f, mesh=mesh,
                             in_specs=jax.sharding.PartitionSpec("pod"),
                             out_specs=jax.sharding.PartitionSpec("pod"))(x)
         ref = jnp.broadcast_to(x.sum(0, keepdims=True), x.shape)

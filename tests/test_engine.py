@@ -1,0 +1,209 @@
+"""Direction-optimizing batched APSP engine: correctness of all sweep
+forms, the switch heuristic, graph stats, and the serving integration."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import (EngineConfig, apsp_engine, bfs_queue_numpy,
+                        choose_direction, frontier_stats,
+                        measure_sweep_costs, prepare_graph, sweep_costs,
+                        PUSH, PULL, SPARSE, UNREACHED)
+from repro.graph import generators as gen
+
+
+def _ref_dists(g, sources):
+    return np.stack([bfs_queue_numpy(g, int(s)) for s in sources])
+
+
+GRAPHS = {
+    "er": lambda seed: gen.erdos_renyi(200, 4.0, directed=False, seed=seed),
+    "er_directed": lambda seed: gen.erdos_renyi(160, 3.0, seed=seed),
+    "ws": lambda seed: gen.watts_strogatz(150, 6, 0.1, seed=seed),
+    "grid": lambda seed: gen.grid2d(12, 12),
+    "mycielskian": lambda seed: gen.mycielskian(7),
+    "disconnected": lambda seed: gen.disconnected(6, 20, 3.0, seed=seed),
+}
+
+
+@pytest.mark.parametrize("family", sorted(GRAPHS))
+@pytest.mark.parametrize("seed", [0, 1])
+def test_auto_apsp_matches_queue_bfs(family, seed):
+    """Property: auto-switch APSP distances equal queue-BFS on random
+    graphs across every generator family (the sweep_ref/packed_pull_ref
+    oracles are themselves validated against these in test_kernels)."""
+    g = GRAPHS[family](seed)
+    sources = np.arange(min(24, g.n_nodes), dtype=np.int32)
+    res = apsp_engine(g, sources, config=EngineConfig(source_batch=24))
+    np.testing.assert_array_equal(np.asarray(res.dist),
+                                  _ref_dists(g, sources))
+    # counts sum over all source tiles; sweeps is the per-tile max
+    assert int(res.direction_counts.sum()) >= int(res.sweeps) > 0
+
+
+@pytest.mark.parametrize("mode", ["push", "pull", "sparse"])
+def test_fixed_modes_agree(mode):
+    g = gen.erdos_renyi(180, 5.0, directed=False, seed=7)
+    sources = np.arange(16, dtype=np.int32)
+    res = apsp_engine(g, sources,
+                      config=EngineConfig(mode=mode, source_batch=16))
+    np.testing.assert_array_equal(np.asarray(res.dist),
+                                  _ref_dists(g, sources))
+    # the pinned direction is the only one that ran
+    counts = np.asarray(res.direction_counts)
+    idx = ["push", "pull", "sparse"].index(mode)
+    assert counts[idx] == counts.sum() > 0
+
+
+def test_dynamic_per_sweep_switching_is_exact():
+    """The lax.switch path (per-sweep heuristic, kernel regime) must give
+    identical distances to the calibrated-static path."""
+    g = gen.watts_strogatz(140, 6, 0.08, seed=5)
+    sources = np.arange(16, dtype=np.int32)
+    dyn = apsp_engine(g, sources, config=EngineConfig(source_batch=16,
+                                                      dynamic=True))
+    np.testing.assert_array_equal(np.asarray(dyn.dist),
+                                  _ref_dists(g, sources))
+
+
+def test_kernel_path_matches_ref():
+    """Engine driving the Pallas kernels (interpret=True on CPU)."""
+    g = gen.erdos_renyi(100, 4.0, directed=False, seed=3)
+    sources = np.arange(8, dtype=np.int32)
+    ref = _ref_dists(g, sources)
+    for mode in ("push", "pull"):
+        res = apsp_engine(g, sources,
+                          config=EngineConfig(mode=mode, source_batch=8,
+                                              use_kernel=True))
+        np.testing.assert_array_equal(np.asarray(res.dist), ref)
+
+
+def test_source_tiling_and_padding():
+    """Sources that don't fill a tile, and more sources than one tile."""
+    g = gen.erdos_renyi(150, 4.0, directed=False, seed=11)
+    sources = np.arange(37, dtype=np.int32)          # 37 = 2 tiles of 24
+    res = apsp_engine(g, sources, config=EngineConfig(source_batch=24))
+    assert res.dist.shape == (37, g.n_nodes)
+    np.testing.assert_array_equal(np.asarray(res.dist),
+                                  _ref_dists(g, sources))
+
+
+# -- the direction heuristic ------------------------------------------------
+
+def _stats_for(frontier, dist):
+    return frontier_stats(jnp.asarray(frontier), jnp.asarray(dist),
+                          bs=64, bn=128, bk=128)
+
+
+def test_heuristic_pull_on_dense_late_frontier():
+    """Late-stage dense frontier: every push tile is live, so the packed
+    pull sweep (32 nodes/word) is modelled ~4x cheaper."""
+    s, n_pad, m_pad = 64, 1024, 65536
+    cfg = EngineConfig()
+    frontier = np.ones((s, n_pad), np.int8)
+    dist = np.full((s, n_pad), int(UNREACHED), np.int32)
+    stats = _stats_for(frontier, dist)
+    assert float(stats.live_tile_frac) == 1.0
+    assert int(choose_direction(stats, n_pad=n_pad, s=s, m_pad=m_pad,
+                                cfg=cfg)) == PULL
+
+
+def test_heuristic_push_on_sparse_early_frontier():
+    """Early one-hot frontier: 1/8 of push tiles live -> push is cheapest
+    on a dense graph (sparse is priced out by the big edge count)."""
+    s, n_pad, m_pad = 64, 1024, 65536
+    cfg = EngineConfig()
+    frontier = np.zeros((s, n_pad), np.int8)
+    frontier[np.arange(s), np.arange(s)] = 1      # all in k-block 0
+    dist = np.full((s, n_pad), int(UNREACHED), np.int32)
+    stats = _stats_for(frontier, dist)
+    assert float(stats.live_tile_frac) == pytest.approx(1 / 8)
+    assert int(choose_direction(stats, n_pad=n_pad, s=s, m_pad=m_pad,
+                                cfg=cfg)) == PUSH
+
+
+def test_heuristic_sparse_on_sparse_graph():
+    """Few edges: the edge-parallel SOVM sweep undercuts both dense forms
+    regardless of occupancy."""
+    s, n_pad, m_pad = 64, 1024, 4096
+    cfg = EngineConfig()
+    frontier = np.ones((s, n_pad), np.int8)
+    dist = np.full((s, n_pad), int(UNREACHED), np.int32)
+    stats = _stats_for(frontier, dist)
+    costs = np.asarray(sweep_costs(stats, n_pad=n_pad, s=s, m_pad=m_pad,
+                                   cfg=cfg))
+    assert costs.shape == (3,)
+    assert int(np.argmin(costs)) == SPARSE
+
+
+def test_calibration_measures_and_caches():
+    g = gen.erdos_renyi(150, 4.0, directed=False, seed=2)
+    pg = prepare_graph(g)
+    cfg = EngineConfig(source_batch=16)
+    costs = measure_sweep_costs(pg, 16, cfg)
+    assert len(costs) == 3 and all(c > 0 for c in costs)
+    assert measure_sweep_costs(pg, 16, cfg) is costs  # cached
+
+
+# -- graph stats feeding the engine -----------------------------------------
+
+def test_degree_stats_and_padding():
+    g = gen.grid2d(8, 8)                       # n = 64
+    st = g.degree_stats()
+    assert st.n_nodes == 64
+    assert st.max_out_degree == 4
+    assert 0 < st.density < 1
+    # sentinel must index a dead column: n_padded > n_nodes always
+    assert g.n_padded() >= g.n_nodes + 1
+    assert g.n_padded() % 128 == 0
+
+
+def test_to_pull_packed_roundtrip():
+    from repro.core import unpack_bits
+    g = gen.erdos_renyi(100, 3.0, seed=4)
+    n_pad = g.n_padded()
+    packed = g.to_pull_packed(n_pad)
+    assert packed.shape == (n_pad, n_pad // 32)
+    dense = np.asarray(g.to_dense_padded(n_pad))
+    got = np.asarray(unpack_bits(packed, n_pad))
+    np.testing.assert_array_equal(got, dense.T != 0)
+
+
+# -- serving integration ----------------------------------------------------
+
+def test_graph_queries_served_alongside_decode():
+    import jax
+    from repro.models import transformer as T
+    from repro.serve import (GraphQuery, GraphService, Request,
+                             ServingEngine)
+    cfg = T.LMConfig(name="t", n_layers=1, d_model=32, n_heads=2, n_kv=1,
+                     d_head=16, d_ff=64, vocab=64)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    g = gen.watts_strogatz(128, 6, 0.1, seed=1)
+    eng = ServingEngine(params, cfg, slots=1, max_len=32,
+                        graph_service=GraphService(g, max_batch=8))
+    eng.submit(Request(rid=0, prompt=np.array([1, 2], np.int32), max_new=2))
+    for i in range(11):   # 11 queries > one 8-wide micro-batch
+        eng.submit_graph(GraphQuery(qid=i, source=i,
+                                    target=None if i % 2 else 100))
+    eng.run_to_completion()
+    done = eng.graph_service.completed
+    assert len(done) == 11 and len(eng.completed) == 1
+    for q in done:
+        ref = bfs_queue_numpy(g, q.source)
+        if q.target is None:
+            np.testing.assert_array_equal(q.dist, ref)
+        else:
+            assert q.hops == int(ref[q.target])
+        assert q.t_done >= q.t_submit
+
+
+def test_graph_service_standalone_flush():
+    from repro.serve import GraphQuery, GraphService
+    g = gen.grid2d(10, 10)
+    svc = GraphService(g, max_batch=8)
+    for i in range(5):
+        svc.submit(GraphQuery(qid=i, source=i * 3, target=99))
+    served = svc.flush()
+    assert len(served) == 5 and svc.pending() == 0
+    for q in served:
+        assert q.hops == int(bfs_queue_numpy(g, q.source)[99])

@@ -5,6 +5,9 @@ import tempfile
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.graph.csr import CSRGraph, symmetrize

@@ -2,6 +2,7 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (bucketed_sssp, closeness, dijkstra_oracle,
