@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
@@ -31,11 +30,7 @@ import numpy as np
 from repro.core import EngineConfig, apsp_engine, prepare_graph
 from repro.graph import generators as gen
 
-TOLERANCE = 1.25       # auto vs best fixed: timing-noise allowance (when
-                       # auto pins the best direction it runs the *same*
-                       # sweeps, so any gap is wall-clock jitter — observed
-                       # up to ~20% on shared CI boxes even best-of-10)
-BEAT_MARGIN = 1.25     # auto vs worse fixed: require a real win
+from ._timing import BEAT_MARGIN, TOLERANCE, auto_vs_fixed, time_interleaved
 
 FAMILIES: Dict[str, Callable] = {
     "grid_road": lambda: gen.grid2d(32, 32),
@@ -47,20 +42,6 @@ FAMILIES: Dict[str, Callable] = {
 }
 
 QUICK_FAMILIES = ("grid_road", "ws_citation", "mycielskian")
-
-
-def _time_interleaved(fns: Dict[str, Callable], repeats: int) -> Dict[str, float]:
-    """Best-of-``repeats`` per mode, modes interleaved within each round so
-    machine-load drift hits all modes equally."""
-    for fn in fns.values():
-        fn()  # warmup: jit compile + calibration cache + device transfer
-    best = {k: float("inf") for k in fns}
-    for _ in range(repeats):
-        for k, fn in fns.items():
-            t0 = time.perf_counter()
-            fn()
-            best[k] = min(best[k], time.perf_counter() - t0)
-    return best
 
 
 def run(quick: bool = False, n_sources: int = 64, repeats: int = 10,
@@ -88,7 +69,7 @@ def run(quick: bool = False, n_sources: int = 64, repeats: int = 10,
                     last_auto[:] = [res]
             return go
 
-        times = _time_interleaved(
+        times = time_interleaved(
             {m: make_go(m) for m in ("push", "pull", "auto")}, repeats)
         for mode, t in times.items():
             row[f"t_{mode}"] = t
@@ -97,12 +78,7 @@ def run(quick: bool = False, n_sources: int = 64, repeats: int = 10,
         row["auto_direction_counts"] = dict(
             zip(("push", "pull", "sparse"),
                 np.asarray(res.direction_counts).tolist()))
-        best = min(row["t_push"], row["t_pull"])
-        worse = max(row["t_push"], row["t_pull"])
-        row["auto_vs_best"] = row["t_auto"] / best
-        row["auto_vs_worse"] = row["t_auto"] / worse
-        row["auto_no_slower_than_best"] = row["auto_vs_best"] <= TOLERANCE
-        row["auto_beats_worse"] = worse / row["t_auto"] >= BEAT_MARGIN
+        auto_vs_fixed(row, ("push", "pull"))
         auto_ok_everywhere &= row["auto_no_slower_than_best"]
         if row["auto_beats_worse"]:
             beats_worse.append(name)

@@ -1,31 +1,54 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--out BENCH_RESULTS.json]
 
-Prints ``name,us_per_call,derived`` CSV rows:
+Prints ``name,us_per_call,derived`` CSV rows and writes a machine-readable
+aggregate (default ``BENCH_RESULTS.json``; ``--out ''`` disables) so the
+perf trajectory can be tracked run-over-run and uploaded as a CI artifact.
+All benchmarks are seeded — two runs on the same machine measure the same
+work:
+
   * bench_sssp        — Tables 7/8 (speedup over GAP-standin / queue BFS)
   * bench_scaling     — Tables 5/6 + Figs 3/4 (batch-parallel efficiency)
   * bench_memory      — §3.4 / Eq. 13 memory model
   * bench_complexity  — Eqs. 5/6/10 work-bound verification
   * bench_batching    — beyond-paper: blocked multi-source GEMM + tile-skip
-  * bench_weighted    — paper §5 extension: (min,+) DAWN vs scipy Dijkstra
+  * bench_weighted    — paper §5 extension through the tropical engine:
+                        fixed-dense vs fixed-sparse vs auto (JSON) + scipy
+                        Dijkstra baseline
   * bench_apsp        — direction-optimized batched APSP engine:
-                        fixed-push vs fixed-pull vs auto (JSON via
-                        ``python -m benchmarks.bench_apsp``)
+                        fixed-push vs fixed-pull vs auto (JSON)
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
+
+import jax
 
 from . import (bench_apsp, bench_batching, bench_complexity, bench_memory,
                bench_scaling, bench_sssp, bench_weighted)
 
 
+def _csv_rows_to_records(rows):
+    records = []
+    for row in rows[1:]:                      # skip the header
+        name, us, derived = row.split(",", 2)
+        # derived-only rows (memory model, work-bound checks) carry no time
+        records.append({"name": name,
+                        "us_per_call": float(us) if us else None,
+                        "derived": derived})
+    return records
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", type=str, default="BENCH_RESULTS.json",
+                    help="aggregate JSON path ('' to disable)")
     args = ap.parse_args()
 
     rows = ["name,us_per_call,derived"]
@@ -35,11 +58,29 @@ def main() -> None:
     bench_memory.run(csv=rows)
     bench_complexity.run(csv=rows, n_sources=4 if args.quick else 8)
     bench_batching.run(csv=rows)
-    bench_weighted.run(csv=rows, n_sources=2 if args.quick else 8)
-    bench_apsp.run(quick=args.quick, repeats=3 if args.quick else 10,
-                   csv=rows)
+    weighted = bench_weighted.run(quick=args.quick,
+                                  repeats=2 if args.quick else 5, csv=rows)
+    apsp = bench_apsp.run(quick=args.quick,
+                          repeats=3 if args.quick else 10, csv=rows)
+    total = time.time() - t0
     print("\n".join(rows))
-    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+    print(f"# total {total:.1f}s", file=sys.stderr)
+
+    if args.out:
+        aggregate = {
+            "schema": 1,
+            "quick": args.quick,
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "total_seconds": total,
+            "rows": _csv_rows_to_records(rows),
+            "bench_apsp": apsp,
+            "bench_weighted": weighted,
+        }
+        with open(args.out, "w") as f:
+            json.dump(aggregate, f, indent=2)
+            f.write("\n")
+        print(f"# aggregate written to {args.out}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -12,8 +12,7 @@ import time
 
 import numpy as np
 
-from repro.core import apsp, multi_source, reconstruct_path, sovm_sssp, \
-    wcc_stats
+from repro.core import multi_source, reconstruct_path, wcc_stats
 from repro.graph import generators as gen
 from repro.graph.io import load_edgelist
 
@@ -58,13 +57,25 @@ def main():
     print(f"eccentricity: min={ecc.min()} mean={ecc.mean():.1f} "
           f"max={ecc.max()} (diameter ≥ {ecc.max()})")
 
-    # sample path reconstruction
-    st = sovm_sssp(g, int(sources[0]))
-    d0 = np.asarray(st.dist)
+    # sample path reconstruction — every SsspResult carries a parent tree
+    from repro.core import sssp
+    res0 = sssp(g, int(sources[0]))
+    d0 = np.asarray(res0.dist)
     far = int(np.argmax(d0))
-    path = reconstruct_path(st.parent, int(sources[0]), far, g.n_nodes)
+    path = reconstruct_path(res0.parent, int(sources[0]), far, g.n_nodes)
     print(f"sample shortest path {sources[0]} → {far} "
           f"(len {d0[far]}): {path[:12]}{'...' if len(path) > 12 else ''}")
+
+    # weighted analytics ride the same engine through the tropical semiring
+    from repro.core import weighted_apsp
+    w = rng.uniform(0.5, 4.0, g.m_pad).astype(np.float32)
+    t0 = time.perf_counter()
+    wres = weighted_apsp(g, w, sources[: min(32, len(sources))])
+    wd = np.asarray(wres.dist)
+    print(f"weighted APSP ({wd.shape[0]} sources) in "
+          f"{time.perf_counter() - t0:.2f}s — forms "
+          f"{dict(zip(('dense', 'sparse'), np.asarray(wres.direction_counts).tolist()))}, "
+          f"mean finite dist {wd[np.isfinite(wd)].mean():.2f}")
 
 
 if __name__ == "__main__":

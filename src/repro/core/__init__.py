@@ -1,6 +1,10 @@
 """DAWN core — matrix-operation shortest paths (the paper's contribution)."""
 from .frontier import (UNREACHED, pack_bits, unpack_bits, popcount,
                        one_hot_frontier, packed_width)
+from .sweep import (Semiring, BOOLEAN, TROPICAL, MIN_LABEL, SEMIRINGS,
+                    SweepState, make_state, sweep_loop, boolean_forms,
+                    tropical_forms, minlabel_form, derive_parents,
+                    time_sweep_forms, PUSH, PULL, SPARSE, DIRECTION_NAMES)
 from .bovm import bovm_sweep, bovm_msbfs, bovm_sssp, DawnState
 from .sovm import sovm_sweep, sovm_sssp, sovm_msbfs, SovmState, reconstruct_path
 from .bfs import bfs_queue_numpy, bfs_scipy, bfs_level_sync_jax
@@ -8,23 +12,32 @@ from .sssp import sssp, multi_source, apsp, apsp_dense, SsspResult
 from .wcc import wcc, wcc_stats, WccResult
 from .distributed import make_sharded_msbfs, shard_inputs, ShardedDawnResult
 from .weighted import (minplus_sssp, bucketed_sssp, expand_integer_weights,
-                       dijkstra_oracle, WeightedResult)
+                       dijkstra_oracle, WeightedResult, weighted_apsp,
+                       WeightedApspResult, WeightedConfig,
+                       PreparedWeightedGraph, prepare_weighted,
+                       measure_weighted_costs, WEIGHTED_FORM_NAMES)
 from .centrality import closeness, harmonic, eccentricity_sample
-from .engine import (PUSH, PULL, SPARSE, DIRECTION_NAMES, EngineConfig,
-                     SweepStats, ApspResult, PreparedGraph, prepare_graph,
-                     frontier_stats, sweep_costs, choose_direction,
-                     measure_sweep_costs, apsp_engine, apsp_engine_blocks)
+from .engine import (EngineConfig, SweepStats, ApspResult, PreparedGraph,
+                     prepare_graph, frontier_stats, sweep_costs,
+                     choose_direction, measure_sweep_costs, apsp_engine,
+                     apsp_engine_blocks)
 
 __all__ = [
     "UNREACHED", "pack_bits", "unpack_bits", "popcount", "one_hot_frontier",
-    "packed_width", "bovm_sweep", "bovm_msbfs", "bovm_sssp", "DawnState",
+    "packed_width",
+    "Semiring", "BOOLEAN", "TROPICAL", "MIN_LABEL", "SEMIRINGS",
+    "SweepState", "make_state", "sweep_loop", "boolean_forms",
+    "tropical_forms", "minlabel_form", "derive_parents", "time_sweep_forms",
+    "bovm_sweep", "bovm_msbfs", "bovm_sssp", "DawnState",
     "sovm_sweep", "sovm_sssp", "sovm_msbfs", "SovmState", "reconstruct_path",
     "bfs_queue_numpy", "bfs_scipy", "bfs_level_sync_jax",
     "sssp", "multi_source", "apsp", "apsp_dense", "SsspResult",
     "wcc", "wcc_stats", "WccResult",
     "make_sharded_msbfs", "shard_inputs", "ShardedDawnResult",
     "minplus_sssp", "bucketed_sssp", "expand_integer_weights",
-    "dijkstra_oracle", "WeightedResult",
+    "dijkstra_oracle", "WeightedResult", "weighted_apsp",
+    "WeightedApspResult", "WeightedConfig", "PreparedWeightedGraph",
+    "prepare_weighted", "measure_weighted_costs", "WEIGHTED_FORM_NAMES",
     "closeness", "harmonic", "eccentricity_sample",
     "PUSH", "PULL", "SPARSE", "DIRECTION_NAMES", "EngineConfig",
     "SweepStats", "ApspResult", "PreparedGraph", "prepare_graph",

@@ -9,9 +9,13 @@ Gunrock (GPU).  Offline we provide three baselines:
                             "GAP stand-in": a compiled, cache-tuned CPU BFS.
   * ``bfs_level_sync_jax``— level-synchronous BFS on the *same JAX substrate*
                             as DAWN, but WITHOUT the Thm 3.2 skip: every
-                            sweep re-checks all edge endpoints and writes
-                            via min-reduction.  DAWN vs this isolates the
+                            sweep re-relaxes every edge and writes via
+                            min-reduction.  DAWN vs this isolates the
                             algorithmic contribution on equal footing.
+                            Expressed through the shared sweep layer as
+                            the tropical semiring with unit weights and
+                            ``use_frontier=False`` — min-plus relaxation
+                            over all edges IS level-synchronous BFS.
 """
 from __future__ import annotations
 
@@ -24,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph.csr import CSRGraph
+from . import sweep as S
 from .frontier import UNREACHED
 
 
@@ -64,24 +69,19 @@ class BfsState(NamedTuple):
 def bfs_level_sync_jax(g: CSRGraph, source, *, max_steps=None) -> BfsState:
     """Level-synchronous BFS without DAWN's skip: each sweep relaxes every
     edge (dist[dst] = min(dist[dst], dist[src]+1)) — the matrix-substrate
-    baseline DAWN is measured against."""
+    baseline DAWN is measured against.  Tropical semiring, unit weights,
+    frontier gating off."""
     n = g.n_nodes
     max_steps = n if max_steps is None else max_steps
     src = jnp.asarray(source, jnp.int32)
-    big = jnp.int32(n + 1)
-    dist0 = jnp.full(n + 1, big).at[src].set(0)
+    dist0 = jnp.full(n + 1, S.INF).at[src].set(0.0)
+    w = jnp.where(g.src < n, jnp.float32(1.0), S.INF)
 
-    def cond(st):
-        return (~st.done) & (st.step < max_steps)
-
-    def body(st):
-        dsrc = st.dist[g.src]
-        cand = jnp.where(dsrc < big, dsrc + 1, big)
-        dist = st.dist.at[g.dst].min(cand)
-        changed = jnp.any(dist != st.dist)
-        return BfsState(dist, st.step + 1, ~changed)
-
-    st = jax.lax.while_loop(cond, body,
-                            BfsState(dist0, jnp.int32(0), jnp.bool_(False)))
-    dist = jnp.where(st.dist >= big, UNREACHED, st.dist)[:n]
+    _, sparse = S.tropical_forms(None, g.src, g.dst, w, use_frontier=False)
+    st = S.sweep_loop((sparse,),
+                      S.make_state(jnp.ones(n + 1, jnp.int8), dist0,
+                                   n_forms=1),
+                      max_steps=max_steps)
+    dist = jnp.where(jnp.isinf(st.dist), UNREACHED,
+                     st.dist.astype(jnp.int32))[:n]
     return BfsState(dist, st.step, st.done)

@@ -13,8 +13,11 @@ Pallas kernel (kernels/bovm).  Values are exact: counts ≤ n < 2^24 so f32
 accumulation is lossless; int8 inputs with int32 accumulation are also
 supported.
 
-Convergence is Fact 1: a sweep that discovers nothing terminates the loop —
-expressed as a scalar reduction usable as a `lax.while_loop` predicate.
+This module is a thin boolean-semiring instantiation of the shared sweep
+layer: ``bovm_msbfs`` pins the dense PUSH form of
+:func:`repro.core.sweep.boolean_forms` into :func:`repro.core.sweep.sweep_loop`
+(Fact-1 convergence, Eq. 5 work counter and all).  The batched,
+direction-optimizing production path is core/engine.py.
 """
 from __future__ import annotations
 
@@ -24,15 +27,16 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from . import sweep as S
 from .frontier import UNREACHED, one_hot_frontier
 
 
 class DawnState(NamedTuple):
-    frontier: jax.Array   # (S, n) bool — discovered in the previous sweep
+    frontier: jax.Array   # (S, n) int8 — discovered in the previous sweep
     dist: jax.Array       # (S, n) int32, UNREACHED = -1
     step: jax.Array       # scalar int32, current path length
     done: jax.Array       # scalar bool — Fact 1 fired
-    edges_touched: jax.Array  # scalar int64-ish float — work counter (Eq. 5)
+    edges_touched: jax.Array  # scalar float — work counter (Eq. 5)
 
 
 def bovm_sweep(adj: jax.Array, frontier: jax.Array, visited: jax.Array,
@@ -72,29 +76,21 @@ def bovm_msbfs(adj: jax.Array, sources: jax.Array, *,
     s = sources.shape[0]
     max_steps = n if max_steps is None else max_steps
 
-    f0 = one_hot_frontier(sources, n)
-    dist0 = jnp.where(f0, 0, jnp.full((s, n), UNREACHED))
-    state = DawnState(frontier=f0, dist=dist0,
-                      step=jnp.int32(0), done=jnp.bool_(False),
-                      edges_touched=jnp.float32(0.0))
-
+    f0 = one_hot_frontier(sources, n, dtype=jnp.int8)
+    dist0 = jnp.where(f0 != 0, 0, jnp.full((s, n), UNREACHED))
     deg = jnp.sum(adj.astype(jnp.float32), axis=1)  # out-degrees
 
-    def cond(st: DawnState):
-        return (~st.done) & (st.step < max_steps)
+    # dense boolean PUSH only: the pull/sparse slots get dummies that the
+    # pinned forced_dir never traces
+    push, _, _ = S.boolean_forms(
+        adj, jnp.zeros((1, 1), jnp.uint32), jnp.zeros(1, jnp.int32),
+        jnp.zeros(1, jnp.int32), n_pad=n, s=s, use_kernel=False,
+        accum_dtype=accum_dtype)
 
-    def body(st: DawnState):
-        step = st.step + 1
-        visited = st.dist >= 0
-        new = bovm_sweep(adj, st.frontier, visited, accum_dtype=accum_dtype)
-        dist = jnp.where(new, step, st.dist)
-        any_new = jnp.any(new)
-        touched = st.edges_touched + jnp.sum(
-            st.frontier.astype(jnp.float32) * deg[None, :])
-        return DawnState(frontier=new, dist=dist, step=step,
-                         done=~any_new, edges_touched=touched)
-
-    return jax.lax.while_loop(cond, body, state)
+    st = S.sweep_loop((push,), S.make_state(f0, dist0, n_forms=1),
+                      max_steps=max_steps, deg=deg)
+    return DawnState(frontier=st.frontier, dist=st.dist, step=st.step,
+                     done=st.done, edges_touched=st.edges_touched)
 
 
 def bovm_sssp(adj: jax.Array, source, **kw) -> DawnState:

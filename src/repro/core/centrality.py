@@ -25,7 +25,7 @@ def closeness(g: CSRGraph, sources: Optional[np.ndarray] = None, *,
     out = np.zeros(len(sources), np.float64)
     for lo in range(0, len(sources), block):
         chunk = sources[lo:lo + block]
-        dist = np.asarray(multi_source(g, chunk, method=method).dist)
+        dist = np.asarray(multi_source(g, chunk, method=method, parents=False).dist)
         reach = dist > 0
         r = reach.sum(axis=1) + 1                       # incl. self
         tot = np.where(reach, dist, 0).sum(axis=1)
@@ -43,7 +43,7 @@ def harmonic(g: CSRGraph, sources: Optional[np.ndarray] = None, *,
     out = np.zeros(len(sources), np.float64)
     for lo in range(0, len(sources), block):
         chunk = sources[lo:lo + block]
-        dist = np.asarray(multi_source(g, chunk, method=method).dist)
+        dist = np.asarray(multi_source(g, chunk, method=method, parents=False).dist)
         with np.errstate(divide="ignore"):
             inv = np.where(dist > 0, 1.0 / np.maximum(dist, 1), 0.0)
         out[lo:lo + len(chunk)] = inv.sum(axis=1)
@@ -57,7 +57,7 @@ def eccentricity_sample(g: CSRGraph, n_samples: int = 64, *,
     ε(i) ≈ log n observation is checkable with this)."""
     rng = np.random.default_rng(seed)
     sources = rng.integers(0, g.n_nodes, n_samples)
-    dist = np.asarray(multi_source(g, sources, method=method).dist)
+    dist = np.asarray(multi_source(g, sources, method=method, parents=False).dist)
     ecc = np.where((dist >= 0).any(1), dist.max(1, initial=0), 0)
     return {"radius_upper": int(ecc[ecc > 0].min()) if (ecc > 0).any() else 0,
             "diameter_lower": int(ecc.max()),

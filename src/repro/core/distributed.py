@@ -17,12 +17,14 @@ Two collective schedules are provided (compared in EXPERIMENTS.md §Perf):
                              (``bitpack=True`` → S_l · n/(8C) bytes) —
                              32·C× fewer collective bytes than psum.
 
-Both run the identical DAWN sweep semantics (Thm 3.2 skip + Fact 1 stop).
+Both wrap the shared sweep layer: the collective matmul is just another
+sweep *form* handed to :func:`repro.core.sweep.sweep_loop`, with Fact-1
+convergence overridden by a psum so every shard agrees on termination —
+this module carries no loop of its own.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import NamedTuple, Sequence, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +32,7 @@ import jax.numpy as jnp
 from .. import compat
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from . import sweep as S
 from .frontier import UNREACHED, one_hot_frontier, pack_bits, unpack_bits
 
 
@@ -52,24 +55,19 @@ def make_sharded_msbfs(mesh: Mesh, *, schedule: str = "allgather",
     """
     dp = _dp_axes(mesh)
     model_ax = "model"
-    c = mesh.shape[model_ax]
 
     adj_spec = P(model_ax, None) if schedule == "psum" else P(None, model_ax)
     f_spec = P(dp, None)
 
     def run_local(adj_l, f0_l, dist0_l, steps):
-        s_l, n = f0_l.shape
+        n = f0_l.shape[1]
 
-        def cond(carry):
-            _, _, step, done = carry
-            return (~done) & (step < steps)
-
-        def body(carry):
-            f, dist, step, done = carry
+        def sweep_fn(f, dist, parent, step):
             if schedule == "psum":
                 # adj_l: (n/C, n); f slice for my rows
                 row0 = jax.lax.axis_index(model_ax) * adj_l.shape[0]
-                f_rows = jax.lax.dynamic_slice_in_dim(f, row0, adj_l.shape[0], 1)
+                f_rows = jax.lax.dynamic_slice_in_dim(f, row0,
+                                                      adj_l.shape[0], 1)
                 part = jax.lax.dot_general(
                     f_rows.astype(jnp.float32), adj_l.astype(jnp.float32),
                     (((1,), (0,)), ((), ())),
@@ -92,15 +90,18 @@ def make_sharded_msbfs(mesh: Mesh, *, schedule: str = "allgather",
                     hits = jax.lax.all_gather(
                         hits_l, model_ax, axis=1, tiled=True)
             new = hits & (dist == UNREACHED)
-            step = step + 1
-            dist = jnp.where(new, step, dist)
-            any_new = jax.lax.psum(
-                jnp.any(new).astype(jnp.int32), dp + (model_ax,)) > 0
-            return new, dist, step, ~any_new
+            return new, jnp.where(new, step, dist), parent
 
-        f, dist, step, done = jax.lax.while_loop(
-            cond, body, (f0_l, dist0_l, jnp.int32(0), jnp.bool_(False)))
-        return dist, step
+        def converged(new):
+            # Fact 1 must fire on every shard at once: reduce over the
+            # whole mesh so the while_loop predicates agree
+            return jax.lax.psum(jnp.any(new).astype(jnp.int32),
+                                dp + (model_ax,)) == 0
+
+        st = S.sweep_loop((sweep_fn,),
+                          S.make_state(f0_l, dist0_l, n_forms=1),
+                          max_steps=steps, converged=converged)
+        return st.dist, st.step
 
     sharded = compat.shard_map(
         run_local, mesh=mesh,

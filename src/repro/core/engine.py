@@ -1,8 +1,9 @@
-"""Direction-optimizing batched APSP engine.
+"""Direction-optimizing batched APSP engine over the semiring sweep layer.
 
 The paper's all-pairs bound O(S_wcc * E_wcc) is only reachable when every
-sweep runs in its cheapest *form*.  The repo carries three equivalent sweep
-implementations with very different cost profiles:
+sweep runs in its cheapest *form*.  The boolean semiring has three
+equivalent forms (core/sweep.py::boolean_forms) with very different cost
+profiles:
 
   PUSH   — dense boolean GEMM (paper Alg. 1 / BOVM).  On TPU this is the
            MXU ``fused_sweep`` kernel whose tile-skip tables make its cost
@@ -14,8 +15,9 @@ implementations with very different cost profiles:
            SOVM).  Cost proportional to the padded edge count, independent
            of both occupancies.
 
-This module tiles sources into MXU-aligned batches and picks the cheapest
-form per sweep (direction-optimizing BFS in the style of Beamer's
+This module tiles sources into MXU-aligned batches, runs each tile through
+the shared :func:`repro.core.sweep.sweep_loop` driver, and picks the
+cheapest form per sweep (direction-optimizing BFS in the style of Beamer's
 push/pull switch, generalized to three forms).  Two selection regimes:
 
   dynamic (kernel path / TPU) — at every sweep, a ``lax.switch`` driven by
@@ -27,11 +29,15 @@ push/pull switch, generalized to three forms).  Two selection regimes:
   calibrated (reference path / CPU) — XLA's fixed-shape reference sweeps
     cost the same regardless of occupancy, so per-sweep switching cannot
     win.  Instead one sweep of each form is *measured* on the prepared
-    graph and the argmin direction is fixed for the whole batch (zero
-    per-sweep overhead; the measurement is cached per graph).
+    graph (sweep.time_sweep_forms) and the argmin direction is fixed for
+    the whole batch (zero per-sweep overhead; the measurement is cached
+    per graph).
 
 All three sweeps operate on identical padded state (frontier (S, n_pad)
 int8, dist (S, n_pad) int32), so switching costs nothing but the branch.
+The weighted analogue of this driver lives in core/weighted.py
+(``weighted_apsp``) and reuses the same cost model / calibration over the
+tropical forms.
 
 Thresholds and cost constants are documented in docs/ARCHITECTURE.md.
 """
@@ -39,7 +45,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
 from typing import Iterator, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
@@ -47,12 +52,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph.csr import CSRGraph
-from ..kernels.bovm import kernel as K
-from ..kernels.bovm import ref as R
-from .frontier import UNREACHED, one_hot_frontier, pack_bits
-
-PUSH, PULL, SPARSE = 0, 1, 2
-DIRECTION_NAMES = ("push", "pull", "sparse")
+from . import sweep as S
+from .frontier import UNREACHED, one_hot_frontier
+from .sweep import DIRECTION_NAMES, PULL, PUSH, SPARSE, SweepState
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,16 +155,21 @@ def prepare_graph(g: CSRGraph, *, align: int = 128) -> PreparedGraph:
 # --------------------------------------------------------------------------
 
 def frontier_stats(frontier: jax.Array, dist: jax.Array, *, bs: int,
-                   bn: int, bk: int) -> SweepStats:
+                   bn: int, bk: int,
+                   unreached: Optional[jax.Array] = None) -> SweepStats:
     """Tile-occupancy fractions — the same tables the push kernel prefetches.
 
     live(i, j, k) = f_occ[i, k] & o_occ[i, j]; its mean factorizes as
     E_i[ mean_k f_occ[i, :] * mean_j o_occ[i, :] ].
+
+    ``unreached`` is the semiring's not-yet-settled mask; default is the
+    boolean semiring's ``dist < 0`` (tropical passes ``isinf(dist)``).
     """
     s, n = frontier.shape
     gi, gj, gk = s // bs, n // bn, n // bk
+    unr = (dist < 0) if unreached is None else unreached
     f_occ = jnp.any(frontier.reshape(gi, bs, gk, bk) != 0, axis=(1, 3))
-    o_occ = jnp.any(dist.reshape(gi, bs, gj, bn) < 0, axis=(1, 3))
+    o_occ = jnp.any(unr.reshape(gi, bs, gj, bn), axis=(1, 3))
     f_row = jnp.mean(f_occ.astype(jnp.float32), axis=1)   # (gi,)
     o_row = jnp.mean(o_occ.astype(jnp.float32), axis=1)   # (gi,)
     return SweepStats(
@@ -190,94 +197,8 @@ def choose_direction(stats: SweepStats, *, n_pad: int, s: int, m_pad: int,
 
 
 # --------------------------------------------------------------------------
-# the three sweep forms over identical padded state
+# jitted per-batch driver (state + loop live in core/sweep.py)
 # --------------------------------------------------------------------------
-
-def _pull_chunk_size(n_pad: int, preferred: int) -> int:
-    for c in (preferred, 512, 256, 128):
-        if c <= n_pad and n_pad % c == 0:
-            return c
-    return n_pad
-
-
-def _pull_sweep_ref(frontier, adj_pull, dist, step, *, chunk: int):
-    """Chunked oracle for the packed pull sweep — bounds the (S, C, W)
-    broadcast intermediate to ~chunk * S * W words."""
-    fp = pack_bits(frontier != 0)                       # (S, W)
-    n_pad = dist.shape[1]
-    blocks = adj_pull.reshape(n_pad // chunk, chunk, -1)
-
-    def one(block):                                     # (C, W) uint32
-        return jnp.any(fp[:, None, :] & block[None], axis=-1)  # (S, C)
-
-    hits = jnp.moveaxis(jax.lax.map(one, blocks), 0, 1)  # (S, n/C, C)
-    hits = hits.reshape(frontier.shape)
-    new = hits & (dist < 0)
-    return new.astype(jnp.int8), jnp.where(new, jnp.int32(step), dist)
-
-
-def _sparse_sweep(frontier, dist, step, src_idx, dst_idx):
-    """Batched SOVM sweep (paper Alg. 2 / Eq. 9 union as scatter-OR)."""
-    active = frontier[:, src_idx] != 0                  # (S, m_pad)
-    hits = jnp.zeros(frontier.shape, jnp.bool_).at[:, dst_idx].max(active)
-    new = hits & (dist < 0)
-    return new.astype(jnp.int8), jnp.where(new, jnp.int32(step), dist)
-
-
-def _pull_kernel_wk(words: int) -> int:
-    for wk in (128, 64, 32, 16, 8, 4):
-        if words % wk == 0:
-            return wk
-    return words
-
-
-def _sweep_forms(adj, adj_pull, src_idx, dst_idx, *, n_pad: int, s: int,
-                 cfg: EngineConfig, use_kernel: bool, interpret: bool):
-    """(push, pull, sparse) closures over identical padded state — the
-    single source of truth for what each direction dispatches, shared by
-    the batch driver and the calibration measurement.
-
-    ``adj``/``adj_pull`` may be (1, 1) dummies when the caller has
-    resolved a direction that never dispatches them; ``n_pad`` is
-    therefore passed explicitly rather than read off ``adj``."""
-    bs = min(s, 128)
-    chunk = _pull_chunk_size(n_pad, cfg.pull_chunk)
-    wk = _pull_kernel_wk(n_pad // 32)
-
-    if use_kernel:
-        def push(f, d, st):
-            return K.fused_sweep(f, adj, d, st, bs=bs, bn=cfg.bn, bk=cfg.bk,
-                                 interpret=interpret)
-
-        def pull(f, d, st):
-            return K.packed_pull_sweep(pack_bits(f != 0), adj_pull, d, st,
-                                       bs=min(s, 8), bn=cfg.bn, wk=wk,
-                                       interpret=interpret)
-    else:
-        def push(f, d, st):
-            return R.sweep_ref(f, adj, d, st)
-
-        def pull(f, d, st):
-            return _pull_sweep_ref(f, adj_pull, d, st, chunk=chunk)
-
-    def sparse(f, d, st):
-        return _sparse_sweep(f, d, st, src_idx, dst_idx)
-
-    return push, pull, sparse
-
-
-# --------------------------------------------------------------------------
-# jitted per-batch driver
-# --------------------------------------------------------------------------
-
-class _BatchState(NamedTuple):
-    frontier: jax.Array
-    dist: jax.Array
-    step: jax.Array
-    done: jax.Array
-    dir_counts: jax.Array
-    edges_touched: jax.Array
-
 
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "n_real", "n_pad", "max_steps",
@@ -286,7 +207,7 @@ class _BatchState(NamedTuple):
 def _run_batch(adj, adj_pull, src_idx, dst_idx, deg, sources, n_valid, *,
                cfg: EngineConfig, n_real: int, n_pad: int, max_steps: int,
                use_kernel: bool, interpret: bool,
-               forced_dir: Optional[int]) -> _BatchState:
+               forced_dir: Optional[int]) -> SweepState:
     # n_valid is traced (not static): the serving loop flushes micro-batches
     # of whatever size is pending, and each distinct count must not retrace
     s = sources.shape[0]
@@ -304,62 +225,42 @@ def _run_batch(adj, adj_pull, src_idx, dst_idx, deg, sources, n_valid, *,
     dist0 = jnp.where(row_ok & (jnp.arange(n_pad)[None, :] < n_real),
                       dist0, 0)
 
-    push, pull, sparse = _sweep_forms(adj, adj_pull, src_idx, dst_idx,
-                                      n_pad=n_pad, s=s, cfg=cfg,
-                                      use_kernel=use_kernel,
-                                      interpret=interpret)
+    forms = S.boolean_forms(adj, adj_pull, src_idx, dst_idx, n_pad=n_pad,
+                            s=s, bn=cfg.bn, bk=cfg.bk,
+                            pull_chunk=cfg.pull_chunk,
+                            use_kernel=use_kernel, interpret=interpret)
 
-    def cond(st: _BatchState):
-        return (~st.done) & (st.step < max_steps)
-
-    def body(st: _BatchState):
-        step = st.step + 1
-        if forced_dir is None:
+    if forced_dir is None:
+        def choose(st: SweepState):
             stats = frontier_stats(st.frontier, st.dist, bs=bs, bn=cfg.bn,
                                    bk=cfg.bk)
-            idx = choose_direction(stats, n_pad=n_pad, s=s, m_pad=m_pad,
-                                   cfg=cfg)
-            new, dist = jax.lax.switch(idx, (push, pull, sparse),
-                                       st.frontier, st.dist, step)
-        else:  # direction resolved at trace time: no stats, no switch
-            idx = jnp.int32(forced_dir)
-            new, dist = (push, pull, sparse)[forced_dir](
-                st.frontier, st.dist, step)
-        touched = st.edges_touched + jnp.sum(
-            (st.frontier != 0).astype(jnp.float32) * deg[None, :])
-        return _BatchState(
-            frontier=new, dist=dist, step=step,
-            done=~jnp.any(new != 0),
-            dir_counts=st.dir_counts.at[idx].add(1),
-            edges_touched=touched)
+            return choose_direction(stats, n_pad=n_pad, s=s, m_pad=m_pad,
+                                    cfg=cfg)
+    else:  # direction resolved at trace time: no stats, no switch
+        choose = None
 
-    st0 = _BatchState(frontier=f0, dist=dist0, step=jnp.int32(0),
-                      done=jnp.bool_(False),
-                      dir_counts=jnp.zeros(3, jnp.int32),
-                      edges_touched=jnp.float32(0.0))
-    return jax.lax.while_loop(cond, body, st0)
+    st0 = S.make_state(f0, dist0, n_forms=3)
+    return S.sweep_loop(forms, st0, max_steps=max_steps, deg=deg,
+                        choose=choose,
+                        forced_dir=0 if forced_dir is None else forced_dir)
 
 
 # --------------------------------------------------------------------------
 # calibrated direction choice (reference path)
 # --------------------------------------------------------------------------
 
-_CALIBRATION_SWEEPS = 8
-_CALIBRATION_REPS = 5
-
-
 def measure_sweep_costs(pg: "PreparedGraph", s: int, cfg: EngineConfig, *,
                         use_kernel: bool = False,
                         interpret: bool = True) -> Tuple[float, float, float]:
     """Wall-clock one mid-BFS sweep in each form on this graph.
 
-    Times the *same* sweep implementations ``_run_batch`` will dispatch
-    (kernel or reference, per ``use_kernel``), so the pinned argmin is the
-    argmin of what actually runs.  Reference sweeps have
-    occupancy-independent (fixed-shape) cost, so a single measurement per
-    form characterizes every sweep of the run.  Cached on the
-    PreparedGraph per (batch size, tiles, path) — calibration costs a few
-    warm sweeps once per graph, then is free.
+    Times the *same* sweep forms ``_run_batch`` will dispatch (kernel or
+    reference, per ``use_kernel``) via :func:`sweep.time_sweep_forms`, so
+    the pinned argmin is the argmin of what actually runs.  Reference
+    sweeps have occupancy-independent (fixed-shape) cost, so a single
+    measurement per form characterizes every sweep of the run.  Cached on
+    the PreparedGraph per (batch size, tiles, path) — calibration costs a
+    few warm sweeps once per graph, then is free.
     """
     key = (s, cfg.bn, cfg.bk, cfg.pull_chunk, use_kernel)
     if key in pg.cost_cache:
@@ -370,36 +271,11 @@ def measure_sweep_costs(pg: "PreparedGraph", s: int, cfg: EngineConfig, *,
     f[:, ::17] = 1
     dist = np.full((s, n_pad), int(UNREACHED), np.int32)
     dist[:, ::4] = 1
-    f_j, dist_j = jnp.asarray(f), jnp.asarray(dist)
-
-    def chained(sweep):
-        # time a block of sweeps inside one jit: a bigger measurement
-        # drowns per-dispatch timer noise.  The frontier must evolve or
-        # XLA hoists the loop-invariant sweep out of the fori_loop; cost
-        # per sweep is occupancy-independent (fixed shapes) regardless.
-        def go(fr, d):
-            def body(i, c):
-                new, dd = sweep(c[0], c[1], i + 1)
-                # refresh dist so the frontier never dies mid-measurement
-                return (new, jnp.where(i % 2 == 1, d, dd))
-            return jax.lax.fori_loop(0, _CALIBRATION_SWEEPS, body, (fr, d))
-        return jax.jit(go)
-
-    forms = tuple(map(chained, _sweep_forms(
-        pg.adj, pg.adj_pull, pg.graph.src, pg.graph.dst,
-        n_pad=n_pad, s=s, cfg=cfg, use_kernel=use_kernel,
-        interpret=interpret)))
-    costs = []
-    for fn in forms:
-        jax.block_until_ready(fn(f_j, dist_j))  # compile + warm caches
-        reps = []
-        for _ in range(_CALIBRATION_REPS):
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn(f_j, dist_j))
-            reps.append(time.perf_counter() - t0)
-        costs.append(sorted(reps)[_CALIBRATION_REPS // 2]
-                     / _CALIBRATION_SWEEPS)  # median
-    result = tuple(costs)
+    forms = S.boolean_forms(pg.adj, pg.adj_pull, pg.graph.src, pg.graph.dst,
+                            n_pad=n_pad, s=s, bn=cfg.bn, bk=cfg.bk,
+                            pull_chunk=cfg.pull_chunk, use_kernel=use_kernel,
+                            interpret=interpret)
+    result = S.time_sweep_forms(forms, jnp.asarray(f), jnp.asarray(dist))
     pg.cost_cache[key] = result
     return result
 
@@ -431,8 +307,8 @@ def apsp_engine_blocks(
         g: Union[CSRGraph, PreparedGraph],
         sources: Optional[Sequence[int]] = None, *,
         config: EngineConfig = EngineConfig(),
-) -> Iterator[Tuple[np.ndarray, jax.Array, _BatchState]]:
-    """Stream (source_ids, dist_rows, raw_batch_state) one source tile at a
+) -> Iterator[Tuple[np.ndarray, jax.Array, SweepState]]:
+    """Stream (source_ids, dist_rows, raw_sweep_state) one source tile at a
     time — the non-materializing form for large n."""
     pg = g if isinstance(g, PreparedGraph) else prepare_graph(g)
     graph = pg.graph

@@ -10,13 +10,17 @@ propagation with scatter-max:
     new       = hits & (dist == UNREACHED)             # Thm 3.2 skip
     dist      = where(new, step, dist)
 
-Padded edges carry src = dst = n (sentinel): ``frontier[n]`` is pinned False
-and ``dist[n]`` is pinned 0 (visited), so padding is inert without masks.
+Padded edges carry src = dst = n (sentinel): ``frontier[n]`` is pinned
+False and ``dist[n]`` is pinned 0 (visited), so padding is inert without
+masks.
 
-Work accounting: the true SOVM work per sweep is sum(out_degree[frontier])
-(Eq. 10 → total = E_wcc(i)); we track it exactly in ``edges_touched`` so the
-complexity claims are empirically checkable even though the fixed-shape
-scatter touches all m lanes.
+This module is the boolean-semiring SPARSE instantiation of the shared
+sweep layer (core/sweep.py): ``sovm_sssp`` pins the sparse form — with
+in-loop parent tracking — into the one ``sweep_loop`` driver.  Work
+accounting: the true SOVM work per sweep is sum(out_degree[frontier])
+(Eq. 10 → total = E_wcc(i)); the driver tracks it exactly in
+``edges_touched`` so the complexity claims are empirically checkable even
+though the fixed-shape scatter touches all m lanes.
 """
 from __future__ import annotations
 
@@ -27,13 +31,14 @@ import jax
 import jax.numpy as jnp
 
 from ..graph.csr import CSRGraph
+from . import sweep as S
 from .frontier import UNREACHED
 
 
 class SovmState(NamedTuple):
-    frontier: jax.Array        # (n+1,) bool
-    dist: jax.Array            # (n+1,) int32
-    parent: jax.Array          # (n+1,) int32 — path reconstruction
+    frontier: jax.Array        # (n,) int8
+    dist: jax.Array            # (n,) int32
+    parent: jax.Array          # (n,) int32 — path reconstruction
     step: jax.Array
     done: jax.Array
     edges_touched: jax.Array   # float32 scalar — Eq. 10 counter
@@ -43,7 +48,7 @@ class SovmState(NamedTuple):
 def sovm_sweep(g: CSRGraph, frontier: jax.Array, dist: jax.Array):
     """One frontier expansion. Returns (new_frontier, parent_candidates)."""
     n = g.n_nodes
-    active = frontier[g.src]                                  # (m_pad,)
+    active = frontier[g.src] != 0                             # (m_pad,)
     hits = jnp.zeros(n + 1, jnp.bool_).at[g.dst].max(active)  # scatter-OR
     new = hits & (dist == UNREACHED)
     # parent: any active in-neighbor (max src id wins — deterministic)
@@ -60,29 +65,19 @@ def sovm_sssp(g: CSRGraph, source, *,
     max_steps = n if max_steps is None else max_steps
     src = jnp.asarray(source, jnp.int32)
 
-    frontier0 = jnp.zeros(n + 1, jnp.bool_).at[src].set(True)
+    frontier0 = jnp.zeros(n + 1, jnp.int8).at[src].set(1)
     dist0 = jnp.full(n + 1, UNREACHED).at[src].set(0).at[n].set(0)
     parent0 = jnp.full(n + 1, -1, jnp.int32)
     deg = jnp.concatenate([g.out_degrees().astype(jnp.float32),
                            jnp.zeros(1, jnp.float32)])
 
-    st0 = SovmState(frontier0, dist0, parent0, jnp.int32(0),
-                    jnp.bool_(False), jnp.float32(0.0), jnp.int32(0))
+    _, _, sparse = S.boolean_forms(
+        jnp.zeros((1, 1), jnp.int8), jnp.zeros((1, 1), jnp.uint32),
+        g.src, g.dst, n_pad=n + 1, s=1, track_parent=True)
 
-    def cond(st):
-        return (~st.done) & (st.step < max_steps)
-
-    def body(st):
-        step = st.step + 1
-        new, pcand = sovm_sweep(g, st.frontier, st.dist)
-        dist = jnp.where(new, step, st.dist)
-        parent = jnp.where(new, pcand, st.parent)
-        any_new = jnp.any(new)
-        touched = st.edges_touched + jnp.sum(deg * st.frontier)
-        return SovmState(new, dist, parent, step, ~any_new, touched,
-                         jnp.where(any_new, step, st.sweeps))
-
-    st = jax.lax.while_loop(cond, body, st0)
+    st = S.sweep_loop((sparse,), S.make_state(frontier0, dist0, parent0,
+                                              n_forms=1),
+                      max_steps=max_steps, deg=deg, forced_dir=0)
     # drop sentinel row
     return SovmState(st.frontier[:n], st.dist[:n], st.parent[:n],
                      st.step, st.done, st.edges_touched, st.sweeps)

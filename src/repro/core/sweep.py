@@ -1,0 +1,405 @@
+"""The semiring sweep-operator layer — one loop under every DAWN path.
+
+Every bound in the paper (Eqs. 5/10) falls out of a single mechanism: a
+*sweep* operator that extends all known shortest paths by one relaxation,
+skips already-settled targets (Thm 3.2), and stops at the first sweep that
+settles nothing (Fact 1).  Algebraic BFS (Burkhardt 2019) and the paper's
+own §5 weighted outlook say the same thing: the machinery is a *semiring*
+iteration
+
+    dist' = dist (+)  frontier-restricted ( dist (x) A )
+
+with (+, x) = (∨, ∧) for unweighted BFS, (min, +) for non-negative
+weights, and (min, id) for label propagation.  This module owns:
+
+  * :class:`Semiring`    — the algebra spec (boolean / tropical / min-label);
+  * the three sweep *forms* over identical padded state — dense push GEMM
+    (:func:`boolean_forms`/:func:`tropical_forms` ``[PUSH]``), bit-packed
+    pull (boolean only), and edge-parallel sparse scatter;
+  * :class:`SweepState`  — the unified loop state (``frontier``, ``dist``,
+    ``parent``, ``step``, ``sweeps``, ``edges_touched``, ``dir_counts``);
+  * :func:`sweep_loop`   — the ONE ``lax.while_loop`` driver in the repo's
+    core: every layer (bovm/sovm/bfs/weighted/wcc/distributed/engine)
+    instantiates it with a semiring's forms instead of carrying its own
+    loop;
+  * :func:`derive_parents` — shortest-path-tree post-pass shared by the
+    batched paths that do not track parents in-loop;
+  * :func:`time_sweep_forms` — the wall-clock calibration primitive behind
+    the CPU-path direction choice (see core/engine.py).
+
+A *form* is a callable ``(frontier, dist, parent, step) -> (new_frontier,
+dist, parent)``.  ``new_frontier`` is the set of entries improved by the
+sweep (int8/bool); Fact-1 convergence is ``~any(new_frontier)`` — for the
+boolean semiring "nothing newly discovered", for the tropical semiring
+"no distance improved", for min-label "no label lowered".  Forms are
+shape-polymorphic over the leading axes: the batched engine runs (S, n)
+state, the single-source paths run (n+1,) sentinel-padded state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.bovm import kernel as K
+from .frontier import UNREACHED, pack_bits
+
+PUSH, PULL, SPARSE = 0, 1, 2
+DIRECTION_NAMES = ("push", "pull", "sparse")
+
+INF = jnp.float32(jnp.inf)
+
+
+# --------------------------------------------------------------------------
+# semiring specs
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """Algebra spec for a sweep: which (⊕, ⊗) the forms implement.
+
+    ``unreached`` is the ⊕-identity stored for "no path yet"; ``source_dist``
+    the ⊗-identity stored at the sources.  The cost-model ``unit`` names
+    what one modelled cost count means for this semiring (the engine's
+    cost constants are per-unit, see docs/ARCHITECTURE.md).
+    """
+    name: str
+    dist_dtype: Any
+    unreached: Any
+    source_dist: Any
+    unit: str
+
+    def unreached_mask(self, dist: jax.Array) -> jax.Array:
+        """Boolean mask of not-yet-settled entries (the Thm 3.2 skip set
+        and the pull/push occupancy signal)."""
+        if self.name == "tropical":
+            return jnp.isinf(dist)
+        return dist == jnp.asarray(self.unreached, dist.dtype)
+
+
+BOOLEAN = Semiring("boolean", jnp.int32, -1, 0,
+                   unit="MXU MAC / uint32 word / CSR lane")
+TROPICAL = Semiring("tropical", jnp.float32, float("inf"), 0.0,
+                    unit="f32 add+min lane / CSR relax lane")
+MIN_LABEL = Semiring("min_label", jnp.int32, None, None,
+                     unit="CSR min-scatter lane")
+
+SEMIRINGS = {s.name: s for s in (BOOLEAN, TROPICAL, MIN_LABEL)}
+
+
+# --------------------------------------------------------------------------
+# unified loop state + the single while_loop driver
+# --------------------------------------------------------------------------
+
+class SweepState(NamedTuple):
+    """Loop state shared by every semiring / form / execution path."""
+    frontier: jax.Array       # entries improved by the last sweep (int8/bool)
+    dist: jax.Array           # distances / labels (semiring dist_dtype)
+    parent: jax.Array         # shortest-path tree (int32; (1,) dummy if off)
+    step: jax.Array           # scalar int32 — sweeps executed
+    done: jax.Array           # scalar bool — Fact 1 fired
+    sweeps: jax.Array         # scalar int32 — last *productive* step (= ε)
+    edges_touched: jax.Array  # scalar float32 — Eq. 10 useful-work counter
+    dir_counts: jax.Array     # (n_forms,) int32 — sweeps run per form
+
+
+SweepForm = Callable[[jax.Array, jax.Array, jax.Array, jax.Array],
+                     Tuple[jax.Array, jax.Array, jax.Array]]
+
+
+def make_state(frontier: jax.Array, dist: jax.Array,
+               parent: Optional[jax.Array] = None, *,
+               n_forms: int = 3) -> SweepState:
+    """Initial SweepState around caller-built frontier/dist buffers."""
+    if parent is None:
+        parent = jnp.zeros((1,), jnp.int32)
+    return SweepState(frontier=frontier, dist=dist, parent=parent,
+                      step=jnp.int32(0), done=jnp.bool_(False),
+                      sweeps=jnp.int32(0),
+                      edges_touched=jnp.float32(0.0),
+                      dir_counts=jnp.zeros(n_forms, jnp.int32))
+
+
+def sweep_loop(forms: Sequence[SweepForm], state: SweepState, *,
+               max_steps, deg: Optional[jax.Array] = None,
+               choose: Optional[Callable[[SweepState], jax.Array]] = None,
+               forced_dir: int = 0,
+               converged: Optional[Callable[[jax.Array], jax.Array]] = None,
+               ) -> SweepState:
+    """THE sweep driver — the only ``lax.while_loop`` under repro/core.
+
+    forms      : candidate sweep forms; one runs per iteration.
+    max_steps  : static or traced sweep bound (diameter / hop bound).
+    deg        : optional out-degree vector; when given, each sweep adds
+                 sum(deg[frontier]) to ``edges_touched`` (Eq. 10).
+    choose     : traced ``SweepState -> int32`` form index (the per-sweep
+                 direction optimizer, dispatched through ``lax.switch``);
+                 ``None`` pins ``forms[forced_dir]`` at trace time.
+    converged  : Fact-1 test over the new frontier; default
+                 ``~any(new)``.  The distributed path overrides it with a
+                 psum so all shards agree on termination.
+    """
+    forms = tuple(forms)
+
+    def cond(st: SweepState):
+        return (~st.done) & (st.step < max_steps)
+
+    def body(st: SweepState):
+        step = st.step + 1
+        if choose is None:
+            idx = jnp.int32(forced_dir)
+            new, dist, parent = forms[forced_dir](st.frontier, st.dist,
+                                                  st.parent, step)
+        else:
+            idx = choose(st)
+            new, dist, parent = jax.lax.switch(idx, forms, st.frontier,
+                                               st.dist, st.parent, step)
+        if converged is None:
+            stop = ~jnp.any(new != 0)
+        else:
+            stop = converged(new)
+        touched = st.edges_touched
+        if deg is not None:
+            touched = touched + jnp.sum(
+                (st.frontier != 0).astype(jnp.float32) * deg)
+        return SweepState(
+            frontier=new, dist=dist, parent=parent, step=step, done=stop,
+            sweeps=jnp.where(stop, st.sweeps, step),
+            edges_touched=touched,
+            dir_counts=st.dir_counts.at[idx].add(1))
+
+    return jax.lax.while_loop(cond, body, state)
+
+
+# --------------------------------------------------------------------------
+# boolean semiring forms (unweighted BFS — paper Algs. 1/2)
+# --------------------------------------------------------------------------
+
+def _pull_chunk_size(n_pad: int, preferred: int) -> int:
+    for c in (preferred, 512, 256, 128):
+        if c <= n_pad and n_pad % c == 0:
+            return c
+    return n_pad
+
+
+def _pull_kernel_wk(words: int) -> int:
+    for wk in (128, 64, 32, 16, 8, 4):
+        if words % wk == 0:
+            return wk
+    return words
+
+
+def boolean_forms(adj, adj_pull, src_idx, dst_idx, *, n_pad: int, s: int,
+                  bn: int = 128, bk: int = 128, pull_chunk: int = 512,
+                  use_kernel: bool = False, interpret: bool = True,
+                  track_parent: bool = False,
+                  accum_dtype=jnp.float32) -> Tuple[SweepForm, ...]:
+    """(push, pull, sparse) boolean sweep forms over identical state —
+    the single source of truth for what each direction dispatches, shared
+    by the batch driver, the single-source paths, and the calibration
+    measurement.
+
+    ``adj``/``adj_pull``/``src_idx``/``dst_idx`` may be dummies when the
+    caller has resolved a form that never dispatches the others (a pinned
+    ``forced_dir`` traces only its own operands); ``n_pad`` is therefore
+    passed explicitly rather than read off ``adj``.  ``track_parent``
+    maintains the shortest-path tree in-loop on the sparse form (any
+    active in-neighbor, max src id wins — the same tie-break
+    :func:`derive_parents` applies as a post-pass).
+    """
+    bs = min(s, 128)
+    chunk = _pull_chunk_size(n_pad, pull_chunk)
+    wk = _pull_kernel_wk(max(n_pad // 32, 1))
+
+    if use_kernel:
+        def push(f, d, p, step):
+            new, dist = K.fused_sweep(f, adj, d, step, bs=bs, bn=bn, bk=bk,
+                                      interpret=interpret)
+            return new, dist, p
+
+        def pull(f, d, p, step):
+            new, dist = K.packed_pull_sweep(pack_bits(f != 0), adj_pull, d,
+                                            step, bs=min(s, 8), bn=bn, wk=wk,
+                                            interpret=interpret)
+            return new, dist, p
+    else:
+        def push(f, d, p, step):
+            counts = jax.lax.dot_general(
+                f.astype(accum_dtype), adj.astype(accum_dtype),
+                (((f.ndim - 1,), (0,)), ((), ())),
+                preferred_element_type=accum_dtype)
+            new = (counts > 0) & (d == UNREACHED)
+            return new.astype(jnp.int8), jnp.where(new, step, d), p
+
+        def pull(f, d, p, step):
+            # chunked oracle for the packed pull sweep — bounds the
+            # (S, C, W) broadcast intermediate to ~chunk * S * W words
+            fp = pack_bits(f != 0)                       # (S, W)
+            blocks = adj_pull.reshape(n_pad // chunk, chunk, -1)
+
+            def one(block):                              # (C, W) uint32
+                return jnp.any(fp[:, None, :] & block[None], axis=-1)
+
+            hits = jnp.moveaxis(jax.lax.map(one, blocks), 0, 1)
+            hits = hits.reshape(f.shape)
+            new = hits & (d == UNREACHED)
+            return new.astype(jnp.int8), jnp.where(new, step, d), p
+
+    def sparse(f, d, p, step):
+        # batched SOVM sweep (paper Alg. 2 / Eq. 9 union as scatter-OR)
+        active = f[..., src_idx] != 0
+        hits = jnp.zeros(d.shape, jnp.bool_).at[..., dst_idx].max(active)
+        new = hits & (d == UNREACHED)
+        if track_parent:
+            pcand = jnp.full(d.shape, -1, jnp.int32).at[..., dst_idx].max(
+                jnp.where(active, src_idx, -1))
+            p = jnp.where(new, pcand, p)
+        return new.astype(jnp.int8), jnp.where(new, step, d), p
+
+    return push, pull, sparse
+
+
+# --------------------------------------------------------------------------
+# tropical semiring forms (weighted SSSP — paper §5 extension)
+# --------------------------------------------------------------------------
+
+def tropical_forms(wdense, src_idx, dst_idx, w_edges, *,
+                   n_pad: int = 0, chunk: int = 128,
+                   use_frontier: bool = True) -> Tuple[SweepForm, ...]:
+    """(dense, sparse) (min,+) sweep forms.
+
+    dense  — the f32 min-plus GEMM-analogue of the boolean push sweep:
+             ``cand[s, j] = min_k (dist[s, k] + W[k, j])`` over frontier
+             rows, evaluated ``chunk`` destination columns per
+             ``lax.map`` step so the (S, chunk, n) broadcast stays
+             bounded.  ``wdense`` is (n_pad, n_pad) f32 with +inf
+             non-edges (pass ``None`` when only the sparse form runs).
+    sparse — edge-parallel relaxation: ``cand = dist[src] + w`` scattered
+             with min into ``dst`` — Bellman-Ford restricted to the
+             improved frontier (sound for non-negative weights:
+             un-improved sources cannot produce new improvements).
+             ``use_frontier=False`` relaxes every edge every sweep (the
+             level-synchronous baseline semantics).
+
+    Fact 1 generalizes: the new frontier is the improved set, and a sweep
+    that improves nothing terminates.  Sweep count is bounded by the
+    longest shortest path's hop count (Bellman-Ford depth).
+    """
+    dense = None
+    if wdense is not None:
+        c = _pull_chunk_size(n_pad, chunk)
+        blocks = wdense.T.reshape(n_pad // c, c, n_pad)  # (nb, C, n) in-wts
+
+        def dense(f, d, p, step):
+            fd = jnp.where(f != 0, d, INF)               # frontier rows only
+
+            def one(block):                              # (C, n)
+                return jnp.min(fd[:, None, :] + block[None], axis=-1)
+
+            cand = jnp.moveaxis(jax.lax.map(one, blocks), 0, 1)
+            cand = cand.reshape(d.shape)
+            nd = jnp.minimum(d, cand)
+            new = nd < d
+            return new.astype(jnp.int8), nd, p
+
+    def sparse(f, d, p, step):
+        cand = d[..., src_idx] + w_edges
+        if use_frontier:
+            cand = jnp.where(f[..., src_idx] != 0, cand, INF)
+        nd = d.at[..., dst_idx].min(cand)
+        new = nd < d
+        return new.astype(jnp.int8), nd, p
+
+    return dense, sparse
+
+
+# --------------------------------------------------------------------------
+# min-label semiring form (connected components)
+# --------------------------------------------------------------------------
+
+def minlabel_form(src_idx, dst_idx) -> SweepForm:
+    """Min-label propagation sweep: ``labels[dst] ⊕= labels[src]`` with
+    ⊕ = min.  Pass symmetrized edge arrays for *weakly* connected
+    components.  The frontier is the changed-label set; Fact 1 is "no
+    label lowered"."""
+    def sweep(f, labels, p, step):
+        nl = labels.at[..., dst_idx].min(labels[..., src_idx])
+        changed = nl < labels
+        return changed.astype(jnp.int8), nl, p
+    return sweep
+
+
+# --------------------------------------------------------------------------
+# shortest-path tree post-pass
+# --------------------------------------------------------------------------
+
+def derive_parents(g, dist: jax.Array, *, weights=None) -> jax.Array:
+    """Parent of v = any in-neighbor u on a shortest path (max u id wins —
+    the same deterministic tie-break as the in-loop sparse tracking).
+
+    Unweighted: ``dist[u] + 1 == dist[v]``.  Weighted (pass ``weights``):
+    ``dist[u] + w(u, v) == dist[v]`` — exact because the sweeps computed
+    dist[v] as that very f32 sum for at least one in-neighbor.
+
+    dist is (..., n) over real nodes; one sparse pass over the padded CSR
+    lanes, vmappable / jittable.
+    """
+    n = g.n_nodes
+    pad = jnp.zeros(dist.shape[:-1] + (1,), dist.dtype)
+    d = jnp.concatenate([dist, pad], axis=-1)           # sentinel column
+    du, dv = d[..., g.src], d[..., g.dst]
+    if weights is None:
+        ok = (du != UNREACHED) & (dv == du + 1)
+    else:
+        w = jnp.where(g.src < n, weights, INF)
+        ok = jnp.isfinite(du) & (dv == du + w)
+    cand = jnp.where(ok, g.src, -1)
+    par = jnp.full(d.shape, -1, jnp.int32).at[..., g.dst].max(cand)
+    return par[..., :n]
+
+
+# --------------------------------------------------------------------------
+# wall-clock form calibration (the CPU-path direction signal)
+# --------------------------------------------------------------------------
+
+_CALIBRATION_SWEEPS = 8
+_CALIBRATION_REPS = 5
+
+
+def time_sweep_forms(forms: Sequence[SweepForm], frontier, dist,
+                     parent: Optional[jax.Array] = None, *,
+                     n_sweeps: int = _CALIBRATION_SWEEPS,
+                     reps: int = _CALIBRATION_REPS) -> Tuple[float, ...]:
+    """Median wall-clock seconds per sweep for each form on the given
+    mid-BFS state.  Times a jitted block of ``n_sweeps`` chained sweeps so
+    per-dispatch timer noise is drowned; the frontier must evolve or XLA
+    hoists the loop-invariant sweep out of the fori_loop, so ``dist`` is
+    refreshed every other sweep to keep the frontier alive.  Fixed-shape
+    XLA sweeps cost the same at any occupancy, so one measurement
+    characterizes every sweep of a run (see core/engine.py calibration).
+    """
+    if parent is None:
+        parent = jnp.zeros((1,), jnp.int32)
+
+    def chained(form):
+        def go(fr, d, p):
+            def body(i, c):
+                new, dd, pp = form(c[0], c[1], c[2], i + 1)
+                return (new, jnp.where(i % 2 == 1, d, dd), pp)
+            return jax.lax.fori_loop(0, n_sweeps, body, (fr, d, p))
+        return jax.jit(go)
+
+    costs = []
+    for form in forms:
+        fn = chained(form)
+        jax.block_until_ready(fn(frontier, dist, parent))  # compile + warm
+        samples = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(frontier, dist, parent))
+            samples.append(time.perf_counter() - t0)
+        costs.append(sorted(samples)[reps // 2] / n_sweeps)
+    return tuple(costs)

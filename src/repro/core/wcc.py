@@ -1,7 +1,10 @@
 """Weakly connected components via min-label propagation.
 
 Provides S_wcc / E_wcc(i) — the quantities in DAWN's complexity bounds
-(Eqs. 10-12) — using the same scatter machinery as SOVM.
+(Eqs. 10-12) — as the min-label semiring instantiation of the shared
+sweep layer: one :func:`repro.core.sweep.minlabel_form` sweep over the
+symmetrized edge lanes per iteration, Fact-1 ("no label lowered")
+termination through the same ``sweep_loop`` driver as every other path.
 """
 from __future__ import annotations
 
@@ -13,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph.csr import CSRGraph
+from . import sweep as S
 
 
 class WccResult(NamedTuple):
@@ -26,22 +30,16 @@ def wcc(g: CSRGraph, *, max_iters=None) -> WccResult:
     max_iters = n if max_iters is None else max_iters
     labels0 = jnp.concatenate([jnp.arange(n, dtype=jnp.int32),
                                jnp.full(1, n, jnp.int32)])
+    # undirected propagation: min label flows along both edge directions
+    src_sym = jnp.concatenate([g.src, g.dst])
+    dst_sym = jnp.concatenate([g.dst, g.src])
 
-    def cond(c):
-        labels, it, done = c
-        return (~done) & (it < max_iters)
-
-    def body(c):
-        labels, it, _ = c
-        # undirected propagation: push min label along both directions
-        fwd = labels.at[g.dst].min(labels[g.src])
-        new = fwd.at[g.src].min(fwd[g.dst])
-        done = jnp.all(new == labels)
-        return new, it + 1, done
-
-    labels, iters, _ = jax.lax.while_loop(
-        cond, body, (labels0, jnp.int32(0), jnp.bool_(False)))
-    return WccResult(labels[:n], iters)
+    form = S.minlabel_form(src_sym, dst_sym)
+    st = S.sweep_loop((form,),
+                      S.make_state(jnp.ones(n + 1, jnp.int8), labels0,
+                                   n_forms=1),
+                      max_steps=max_iters)
+    return WccResult(st.dist[:n], st.step)
 
 
 def wcc_stats(g: CSRGraph):

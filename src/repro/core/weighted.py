@@ -1,38 +1,55 @@
-"""Weighted-graph DAWN — the paper's §5 future-work direction.
+"""Weighted-graph DAWN — the paper's §5 future-work direction, grown into
+a first-class tropical-semiring engine.
 
 The paper closes with "addressing the balance between optimizing matrix
 operations and managing the consumption of (min,+) operations … to expand
-the applicability of DAWN on weighted graphs".  We implement that
-extension two ways, both keeping DAWN's matrix-operation character:
+the applicability of DAWN on weighted graphs".  With the semiring sweep
+layer (core/sweep.py) that balance is literal: the same
+direction-optimizing batch driver that picks boolean sweep forms now
+picks between the tropical forms —
 
-1. ``minplus_sssp``  — (min,+) edge-parallel relaxation sweeps (tropical
-   semiring analogue of the boolean sweep): each sweep relaxes every edge
-   with scatter-min; Fact 1 generalizes to "no distance improved".  Exact
-   for arbitrary non-negative float weights; sweep count ≤ the longest
-   shortest path's hop count (Bellman-Ford depth), so the work bound is
-   O(hops·m) — the direct generalization of BOVM's O(ε·m).
+  DENSE  — f32 min-plus GEMM-analogue of the boolean push sweep
+           (``cand[s, j] = min_k dist[s, k] + W[k, j]`` over frontier
+           rows; cost proportional to the live tile fraction);
+  SPARSE — edge-parallel scatter-min relaxation over CSR lanes (cost
+           O(S · m_pad) regardless of occupancy)
 
-2. ``bucketed_sssp`` — for small integer weights w ∈ {1..W} (the regime
-   of Galil-Margalit-style algorithms the paper cites): expand each
-   weight-w edge into w unit hops through (w-1) virtual nodes, then run
-   the UNWEIGHTED SOVM sweep machinery unchanged.  This preserves DAWN's
-   boolean-sweep inner loop (Thm 3.2 skipping included) at the cost of
-   O(W·m) virtual edges — the matrix-op/(min,+) trade the paper
-   anticipates, made explicit.
+— chosen per sweep by the occupancy cost model (dynamic regime) or pinned
+per graph by wall-clock calibration of both forms (CPU regime), exactly
+mirroring core/engine.py.  Public entry points:
+
+  * ``minplus_sssp``   — single-source (min,+) sweeps through the shared
+                         driver (frontier-gated Bellman-Ford; sweep count
+                         ≤ hop count of the longest shortest path, work
+                         O(hops·m) — the direct generalization of BOVM's
+                         O(ε·m));
+  * ``weighted_apsp``  — batched multi-source tropical APSP with the
+                         direction optimizer;
+  * ``bucketed_sssp``  — small integer weights via unit-hop expansion
+                         through the UNWEIGHTED sweep machinery (the
+                         matrix-op/(min,+) trade the paper anticipates,
+                         made explicit).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import NamedTuple, Optional
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..graph.csr import CSRGraph
+from . import sweep as S
+from .engine import frontier_stats
+from .frontier import one_hot_frontier
 from .sovm import sovm_sssp
 
 INF = jnp.float32(jnp.inf)
+
+DENSE, SPARSE = 0, 1
+WEIGHTED_FORM_NAMES = ("dense", "sparse")
 
 
 class WeightedResult(NamedTuple):
@@ -40,33 +57,229 @@ class WeightedResult(NamedTuple):
     sweeps: jax.Array
 
 
-@partial(jax.jit, static_argnames=("max_sweeps",))
+class WeightedApspResult(NamedTuple):
+    dist: jax.Array              # (S, n) float32; inf = unreachable
+    sweeps: jax.Array            # int32 — max sweeps over batches
+    direction_counts: jax.Array  # (2,) int32 — dense/sparse sweeps run
+    edges_touched: jax.Array     # float32 — relaxed-edge work counter
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightedConfig:
+    """Static tropical-engine parameters (hashable jit static arg).
+
+    Cost-model units: ``c_dense`` per f32 add+min lane in a live dense
+    tile, ``c_sparse`` per CSR relax lane — same shape as the boolean
+    engine's model with the pull form removed (bit-packing does not apply
+    to f32 distances)."""
+    source_batch: int = 64           # sources per tile (multiple of 8)
+    mode: str = "auto"               # auto | dense | sparse
+    dynamic: Optional[bool] = None   # per-sweep switch; None -> calibrated
+    max_sweeps: Optional[int] = None  # None -> n_nodes (hop bound)
+    chunk: int = 128                 # dense min-plus dst cols per map step
+    c_dense: float = 1.0
+    c_sparse: float = 8.0
+
+    def __post_init__(self):
+        assert self.mode in ("auto",) + WEIGHTED_FORM_NAMES, self.mode
+        assert self.source_batch % 8 == 0, \
+            f"source_batch must be a multiple of 8, got {self.source_batch}"
+        # above one stats tile the batch must tile exactly (bs = 128), or
+        # the dynamic regime's frontier_stats reshape fails at trace time
+        assert self.source_batch <= 128 or self.source_batch % 128 == 0, \
+            f"source_batch > 128 must be a multiple of 128, " \
+            f"got {self.source_batch}"
+
+
+@dataclasses.dataclass
+class PreparedWeightedGraph:
+    """Device-resident tropical operands (dense O(n_pad^2) form lazy)."""
+    graph: CSRGraph
+    w_edges: jax.Array    # (m_pad,) float32; +inf on padded lanes
+    deg: jax.Array        # (n_pad,) float32 out-degrees (0 on pad)
+    n_pad: int
+    cost_cache: dict = dataclasses.field(default_factory=dict, repr=False)
+    _wdense: Optional[jax.Array] = dataclasses.field(default=None,
+                                                     repr=False)
+
+    @property
+    def wdense(self) -> jax.Array:
+        """(n_pad, n_pad) f32 weight matrix, +inf non-edges (dense
+        operand); parallel edges resolve to the min weight."""
+        if self._wdense is None:
+            g = self.graph
+            self._wdense = jnp.full((self.n_pad, self.n_pad), INF).at[
+                g.src, g.dst].min(self.w_edges)
+        return self._wdense
+
+
+def prepare_weighted(g: CSRGraph, weights, *,
+                     align: int = 128) -> PreparedWeightedGraph:
+    """Normalize weights to the padded edge lanes and build the O(n)
+    operands; the dense weight matrix materializes lazily."""
+    w = np.asarray(weights, np.float32)
+    assert w.ndim == 1 and w.size >= g.n_edges, \
+        f"need >= {g.n_edges} weights, got shape {w.shape}"
+    assert (w[: g.n_edges] >= 0).all(), "weights must be non-negative"
+    lanes = np.full(g.m_pad, np.inf, np.float32)
+    lanes[: g.n_edges] = w[: g.n_edges]
+    n_pad = g.n_padded(align)
+    deg = jnp.zeros(n_pad, jnp.float32).at[: g.n_nodes].set(
+        g.out_degrees().astype(jnp.float32))
+    return PreparedWeightedGraph(graph=g, w_edges=jnp.asarray(lanes),
+                                 deg=deg, n_pad=n_pad)
+
+
+# --------------------------------------------------------------------------
+# single-source (min,+) sweeps
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("max_sweeps",))
 def minplus_sssp(g: CSRGraph, weights: jax.Array, source, *,
                  max_sweeps: Optional[int] = None) -> WeightedResult:
-    """(min,+) sweep SSSP.  weights (m_pad,) float32 ≥ 0 (padded entries
-    ignored via the sentinel row)."""
+    """(min,+) sweep SSSP through the shared driver.  weights (m_pad,)
+    float32 ≥ 0 (padded entries ignored via the +inf mask)."""
     n = g.n_nodes
     max_sweeps = n if max_sweeps is None else max_sweeps
     src_id = jnp.asarray(source, jnp.int32)
     dist0 = jnp.full(n + 1, INF).at[src_id].set(0.0)
-
+    f0 = jnp.zeros(n + 1, jnp.int8).at[src_id].set(1)
     w = jnp.where(g.src < n, weights, INF)
 
-    def cond(c):
-        _, sweeps, done = c
-        return (~done) & (sweeps < max_sweeps)
+    _, sparse = S.tropical_forms(None, g.src, g.dst, w)
+    st = S.sweep_loop((sparse,), S.make_state(f0, dist0, n_forms=1),
+                      max_steps=max_sweeps)
+    return WeightedResult(st.dist[:n], st.sweeps)
 
-    def body(c):
-        dist, sweeps, _ = c
-        cand = dist[g.src] + w                     # (m_pad,)
-        new = dist.at[g.dst].min(cand)
-        improved = jnp.any(new < dist)
-        return new, sweeps + 1, ~improved
 
-    dist, sweeps, _ = jax.lax.while_loop(
-        cond, body, (dist0, jnp.int32(0), jnp.bool_(False)))
-    return WeightedResult(dist[:n], sweeps - 1)
+# --------------------------------------------------------------------------
+# batched direction-optimizing tropical APSP
+# --------------------------------------------------------------------------
 
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "n_real", "n_pad", "max_sweeps",
+                                    "forced_dir"))
+def _run_weighted_batch(wdense, src_idx, dst_idx, w_edges, deg, sources,
+                        n_valid, *, cfg: WeightedConfig, n_real: int,
+                        n_pad: int, max_sweeps: int,
+                        forced_dir: Optional[int]) -> S.SweepState:
+    s = sources.shape[0]
+    m_pad = src_idx.shape[0]
+    bs = min(s, 128)
+
+    f0 = one_hot_frontier(sources, n_pad, dtype=jnp.int8)
+    row_ok = (jnp.arange(s) < n_valid)[:, None]
+    f0 = jnp.where(row_ok, f0, 0)
+    # pad rows/cols stay +inf with empty frontiers: no candidate ever
+    # improves them, so they are inert without masks
+    dist0 = jnp.where(f0 != 0, 0.0, jnp.full((s, n_pad), INF))
+
+    forms = S.tropical_forms(wdense, src_idx, dst_idx, w_edges,
+                             n_pad=n_pad, chunk=cfg.chunk)
+    if forms[0] is None:
+        forms = (forms[1], forms[1])  # sparse pinned; keep switch arity 2
+
+    if forced_dir is None:
+        def choose(st: S.SweepState):
+            stats = frontier_stats(st.frontier, st.dist, bs=bs, bn=128,
+                                   bk=128, unreached=jnp.isinf(st.dist))
+            dense_c = cfg.c_dense * s * n_pad * n_pad * stats.live_tile_frac
+            sparse_c = jnp.float32(cfg.c_sparse * s * m_pad)
+            return (dense_c > sparse_c).astype(jnp.int32)
+    else:
+        choose = None
+
+    st0 = S.make_state(f0, dist0, n_forms=2)
+    return S.sweep_loop(forms, st0, max_steps=max_sweeps, deg=deg,
+                        choose=choose,
+                        forced_dir=0 if forced_dir is None else forced_dir)
+
+
+def measure_weighted_costs(pw: PreparedWeightedGraph, s: int,
+                           cfg: WeightedConfig) -> Tuple[float, float]:
+    """Wall-clock one mid-run sweep of each tropical form on this graph
+    (mirror of engine.measure_sweep_costs; cached on the prepared graph)."""
+    key = (s, cfg.chunk)
+    if key in pw.cost_cache:
+        return pw.cost_cache[key]
+    n_pad = pw.n_pad
+    f = np.zeros((s, n_pad), np.int8)
+    f[:, ::17] = 1
+    dist = np.full((s, n_pad), np.inf, np.float32)
+    dist[:, ::4] = 1.0
+    forms = S.tropical_forms(pw.wdense, pw.graph.src, pw.graph.dst,
+                             pw.w_edges, n_pad=n_pad, chunk=cfg.chunk)
+    result = S.time_sweep_forms(forms, jnp.asarray(f), jnp.asarray(dist))
+    pw.cost_cache[key] = result
+    return result
+
+
+def _resolve_weighted_direction(pw: PreparedWeightedGraph, s: int,
+                                cfg: WeightedConfig) -> Optional[int]:
+    """None -> per-sweep dynamic switch; int -> form fixed per batch."""
+    if cfg.mode != "auto":
+        return WEIGHTED_FORM_NAMES.index(cfg.mode)
+    dynamic = False if cfg.dynamic is None else cfg.dynamic
+    if dynamic:
+        return None
+    return int(np.argmin(measure_weighted_costs(pw, s, cfg)))
+
+
+def weighted_apsp(g: Union[CSRGraph, PreparedWeightedGraph],
+                  weights=None,
+                  sources: Optional[Sequence[int]] = None, *,
+                  config: WeightedConfig = WeightedConfig()
+                  ) -> WeightedApspResult:
+    """Batched multi-source tropical APSP with direction optimization.
+
+    Pass a :class:`PreparedWeightedGraph` (weights=None) to reuse
+    operands and the calibration cache across calls (the serving path
+    does).  Distances are float32 with +inf for unreachable targets.
+    """
+    pw = g if isinstance(g, PreparedWeightedGraph) else \
+        prepare_weighted(g, weights)
+    graph = pw.graph
+    n = graph.n_nodes
+    srcs = np.arange(n, dtype=np.int32) if sources is None else \
+        np.asarray(sources, np.int32)
+    if srcs.size == 0:
+        raise ValueError("weighted_apsp: empty source list")
+    if srcs.min() < 0 or srcs.max() >= n:
+        raise ValueError(
+            f"weighted_apsp: sources must be in [0, {n}), got "
+            f"[{srcs.min()}, {srcs.max()}]")
+    max_sweeps = config.max_sweeps or n
+    B = config.source_batch
+    forced = _resolve_weighted_direction(pw, B, config)
+    # only materialize the O(n_pad^2) dense operand when it can dispatch
+    wdense = pw.wdense if forced in (None, DENSE) else None
+
+    rows = []
+    sweeps = jnp.int32(0)
+    counts = jnp.zeros(2, jnp.int32)
+    touched = jnp.float32(0.0)
+    for lo in range(0, len(srcs), B):
+        block = srcs[lo: lo + B]
+        valid = len(block)
+        padded = np.zeros(B, np.int32)
+        padded[:valid] = block
+        st = _run_weighted_batch(wdense, graph.src, graph.dst, pw.w_edges,
+                                 pw.deg, jnp.asarray(padded),
+                                 jnp.int32(valid), cfg=config, n_real=n,
+                                 n_pad=pw.n_pad, max_sweeps=max_sweeps,
+                                 forced_dir=forced)
+        rows.append(st.dist[:valid, :n])
+        sweeps = jnp.maximum(sweeps, st.step)
+        counts = counts + st.dir_counts
+        touched = touched + st.edges_touched
+    return WeightedApspResult(dist=jnp.concatenate(rows, axis=0),
+                              sweeps=sweeps, direction_counts=counts,
+                              edges_touched=touched)
+
+
+# --------------------------------------------------------------------------
+# small-integer weights through the unweighted machinery
+# --------------------------------------------------------------------------
 
 def expand_integer_weights(g: CSRGraph, weights: np.ndarray) -> CSRGraph:
     """Unit-hop expansion: a weight-w edge (u→v) becomes a path

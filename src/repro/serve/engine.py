@@ -26,6 +26,8 @@ import numpy as np
 
 from ..core.engine import EngineConfig, PreparedGraph, apsp_engine_blocks, \
     prepare_graph
+from ..core.weighted import (PreparedWeightedGraph, WeightedConfig,
+                             prepare_weighted, weighted_apsp)
 from ..graph.csr import CSRGraph
 from ..models import transformer as T
 
@@ -47,13 +49,18 @@ class GraphQuery:
 
     ``target=None`` returns the full distance vector from ``source``;
     otherwise ``hops`` is the shortest unweighted path length (or -1 when
-    unreachable).
+    unreachable).  ``weighted=True`` routes through the tropical-semiring
+    engine instead: ``dist`` becomes float32 (inf = unreachable) and a
+    target query fills ``cost`` (the weighted distance) rather than
+    ``hops``.
     """
     qid: int
     source: int
     target: Optional[int] = None
+    weighted: bool = False
     dist: Optional[np.ndarray] = None
     hops: Optional[int] = None
+    cost: Optional[float] = None
     t_submit: float = 0.0
     t_done: float = 0.0
 
@@ -64,11 +71,16 @@ class GraphService:
     Pending query sources are packed into a single source tile and run
     through the direction-optimizing engine — one jitted multi-source
     sweep per flush, amortized across every query in the batch exactly
-    like decode steps amortize across KV slots.
+    like decode steps amortize across KV slots.  Pass edge ``weights`` to
+    additionally serve weighted queries: each flush runs at most one
+    boolean and one tropical micro-batch, both through the shared semiring
+    sweep layer.
     """
 
     def __init__(self, graph: CSRGraph, *,
                  config: Optional[EngineConfig] = None,
+                 weights=None,
+                 weighted_config: Optional[WeightedConfig] = None,
                  max_batch: int = 32):
         batch = max(8, ((max_batch + 7) // 8) * 8)
         if batch > 128:  # EngineConfig: above one push tile, multiple of 128
@@ -78,6 +90,10 @@ class GraphService:
         # source tile stays config.source_batch wide; short flushes pad)
         self.max_batch = min(max_batch, self.config.source_batch)
         self.prepared: PreparedGraph = prepare_graph(graph)
+        self.prepared_weighted: Optional[PreparedWeightedGraph] = \
+            None if weights is None else prepare_weighted(graph, weights)
+        self.weighted_config = weighted_config or \
+            WeightedConfig(source_batch=min(self.config.source_batch, 128))
         self.queue: deque[GraphQuery] = deque()
         self.completed: List[GraphQuery] = []
 
@@ -87,6 +103,9 @@ class GraphService:
             raise ValueError(f"source {query.source} not in [0, {n})")
         if query.target is not None and not 0 <= query.target < n:
             raise ValueError(f"target {query.target} not in [0, {n})")
+        if query.weighted and self.prepared_weighted is None:
+            raise ValueError(
+                "weighted query on a GraphService built without weights=")
         query.t_submit = time.monotonic()
         self.queue.append(query)
 
@@ -99,16 +118,32 @@ class GraphService:
             return []
         batch = [self.queue.popleft()
                  for _ in range(min(len(self.queue), self.max_batch))]
-        sources = np.asarray([q.source for q in batch], np.int32)
-        (_, dist, _), = apsp_engine_blocks(self.prepared, sources,
-                                           config=self.config)
-        dist = np.asarray(dist)
         now = time.monotonic()
-        for row, q in zip(dist, batch):
-            if q.target is None:
-                q.dist = row
-            else:
-                q.hops = int(row[q.target])
+        unweighted = [q for q in batch if not q.weighted]
+        weighted = [q for q in batch if q.weighted]
+        if unweighted:
+            sources = np.asarray([q.source for q in unweighted], np.int32)
+            (_, dist, _), = apsp_engine_blocks(self.prepared, sources,
+                                               config=self.config)
+            dist = np.asarray(dist)
+            now = time.monotonic()
+            for row, q in zip(dist, unweighted):
+                if q.target is None:
+                    q.dist = row
+                else:
+                    q.hops = int(row[q.target])
+        if weighted:
+            sources = np.asarray([q.source for q in weighted], np.int32)
+            res = weighted_apsp(self.prepared_weighted, sources=sources,
+                                config=self.weighted_config)
+            dist = np.asarray(res.dist)
+            now = time.monotonic()
+            for row, q in zip(dist, weighted):
+                if q.target is None:
+                    q.dist = row
+                else:
+                    q.cost = float(row[q.target])
+        for q in batch:
             q.t_done = now
             self.completed.append(q)
         return batch

@@ -1,0 +1,269 @@
+"""The semiring sweep layer: cross-form / cross-semiring equivalence,
+parent reconstruction on the batched paths, the weighted engine vs
+Dijkstra, and the one-driver structural invariant."""
+import re
+from pathlib import Path
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+import repro.core as core
+from repro.core import (EngineConfig, WeightedConfig, apsp_engine,
+                        bfs_queue_numpy, derive_parents, dijkstra_oracle,
+                        minplus_sssp, multi_source, prepare_weighted,
+                        reconstruct_path, sovm_sssp, sssp, weighted_apsp)
+from repro.graph import generators as gen
+from repro.graph.csr import CSRGraph
+
+
+def _ref_dists(g, sources):
+    return np.stack([bfs_queue_numpy(g, int(s)) for s in sources])
+
+
+def _random_weighted(n, avg_deg, seed):
+    rng = np.random.default_rng(seed)
+    m = max(1, int(n * avg_deg))
+    g = CSRGraph.from_edges(rng.integers(0, n, m), rng.integers(0, n, m), n)
+    w = rng.uniform(0.1, 5.0, g.m_pad).astype(np.float32)
+    return g, w
+
+
+# -- structural invariant: ONE sweep driver ---------------------------------
+
+def test_exactly_one_while_loop_under_core():
+    """The refactor's contract: every core path flows through
+    sweep.sweep_loop — no module re-grows its own loop."""
+    core_dir = Path(core.__file__).parent
+    hits = {}
+    for path in sorted(core_dir.glob("*.py")):
+        count = len(re.findall(r"lax\.while_loop\(", path.read_text()))
+        if count:
+            hits[path.name] = count
+    assert hits == {"sweep.py": 1}, hits
+
+
+def test_every_layer_imports_the_sweep_layer():
+    core_dir = Path(core.__file__).parent
+    for name in ("bovm", "sovm", "bfs", "weighted", "wcc", "distributed",
+                 "engine"):
+        text = (core_dir / f"{name}.py").read_text()
+        assert re.search(r"from \. import sweep as S|from \.sweep import",
+                         text), name
+
+
+# -- cross-form equivalence (boolean semiring) ------------------------------
+
+FAMILIES = {
+    "grid": lambda: gen.grid2d(11, 11),
+    "rmat": lambda: gen.rmat(8, 4, directed=False, seed=2),
+    "er_directed": lambda: gen.erdos_renyi(150, 3.0, seed=9),
+    "disconnected": lambda: gen.disconnected(5, 25, 3.0, seed=5),
+}
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_push_pull_sparse_agree_with_queue_oracle(family):
+    """push ≡ pull ≡ sparse ≡ bfs_queue_numpy on every generator family."""
+    g = FAMILIES[family]()
+    sources = np.arange(min(16, g.n_nodes), dtype=np.int32)
+    ref = _ref_dists(g, sources)
+    for mode in ("push", "pull", "sparse"):
+        res = apsp_engine(g, sources,
+                          config=EngineConfig(mode=mode, source_batch=16))
+        np.testing.assert_array_equal(np.asarray(res.dist), ref,
+                                      err_msg=f"{family}/{mode}")
+
+
+# -- cross-semiring equivalence ---------------------------------------------
+
+@pytest.mark.parametrize("family", ["grid", "rmat", "disconnected"])
+def test_minplus_unit_weights_equals_unweighted_sovm(family):
+    """Tropical semiring with all-ones weights ≡ boolean SOVM distances."""
+    g = FAMILIES[family]()
+    w = jnp.ones((g.m_pad,), jnp.float32)
+    for src in (0, g.n_nodes // 2):
+        sovm_dist = np.asarray(sovm_sssp(g, src).dist).astype(np.float64)
+        sovm_dist = np.where(sovm_dist < 0, np.inf, sovm_dist)
+        trop = np.asarray(minplus_sssp(g, w, src).dist)
+        np.testing.assert_allclose(trop, sovm_dist, err_msg=family)
+
+
+def test_weighted_apsp_unit_weights_equals_boolean_engine():
+    g = gen.watts_strogatz(180, 6, 0.1, seed=7)
+    sources = np.arange(16, dtype=np.int32)
+    boolean = apsp_engine(g, sources, config=EngineConfig(source_batch=16))
+    bdist = np.asarray(boolean.dist).astype(np.float64)
+    bdist = np.where(bdist < 0, np.inf, bdist)
+    trop = weighted_apsp(g, np.ones(g.m_pad, np.float32), sources,
+                         config=WeightedConfig(source_batch=16))
+    np.testing.assert_allclose(np.asarray(trop.dist), bdist)
+
+
+# -- the weighted engine vs Dijkstra ----------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_weighted_apsp_auto_matches_dijkstra(seed):
+    """Acceptance: weighted_apsp auto mode == scipy Dijkstra on random
+    non-negative graphs."""
+    g, w = _random_weighted(80 + 30 * seed, 3.0, seed)
+    sources = np.arange(min(12, g.n_nodes), dtype=np.int32)
+    ref = np.stack([dijkstra_oracle(g, w, int(s)) for s in sources])
+    res = weighted_apsp(g, w, sources,
+                        config=WeightedConfig(source_batch=8))
+    np.testing.assert_allclose(np.asarray(res.dist), ref, rtol=1e-5)
+    assert int(res.direction_counts.sum()) >= int(res.sweeps) > 0
+
+
+@pytest.mark.parametrize("mode", ["dense", "sparse"])
+def test_weighted_fixed_forms_agree(mode):
+    g, w = _random_weighted(120, 3.0, 11)
+    sources = np.arange(10, dtype=np.int32)
+    ref = np.stack([dijkstra_oracle(g, w, int(s)) for s in sources])
+    res = weighted_apsp(g, w, sources,
+                        config=WeightedConfig(mode=mode, source_batch=8))
+    np.testing.assert_allclose(np.asarray(res.dist), ref, rtol=1e-5)
+    counts = np.asarray(res.direction_counts)
+    idx = ["dense", "sparse"].index(mode)
+    assert counts[idx] == counts.sum() > 0
+
+
+def test_weighted_dynamic_switch_is_exact():
+    g, w = _random_weighted(100, 4.0, 13)
+    sources = np.arange(8, dtype=np.int32)
+    ref = np.stack([dijkstra_oracle(g, w, int(s)) for s in sources])
+    res = weighted_apsp(g, w, sources,
+                        config=WeightedConfig(source_batch=8, dynamic=True))
+    np.testing.assert_allclose(np.asarray(res.dist), ref, rtol=1e-5)
+
+
+def test_weighted_apsp_tiling_and_prepared_reuse():
+    g, w = _random_weighted(90, 3.0, 17)
+    pw = prepare_weighted(g, w)
+    sources = np.arange(21, dtype=np.int32)       # 3 tiles of 8
+    res = weighted_apsp(pw, sources=sources,
+                        config=WeightedConfig(source_batch=8))
+    assert res.dist.shape == (21, g.n_nodes)
+    ref = np.stack([dijkstra_oracle(g, w, int(s)) for s in sources])
+    np.testing.assert_allclose(np.asarray(res.dist), ref, rtol=1e-5)
+    assert pw.cost_cache                           # calibration cached
+
+
+# -- parent derivation / path round-trips -----------------------------------
+
+def _check_paths(g, dist_row, parent_row, source):
+    adj = g.to_scipy().tocsr()
+    dist_row = np.asarray(dist_row)
+    reachable = np.flatnonzero(dist_row > 0)
+    targets = reachable[:: max(1, len(reachable) // 8)]
+    for t in targets:
+        path = reconstruct_path(parent_row, source, int(t), g.n_nodes)
+        assert path is not None and path[0] == source and path[-1] == t
+        assert len(path) - 1 == dist_row[t]
+        for a, b in zip(path[:-1], path[1:]):
+            assert adj[a, b] != 0
+
+
+@pytest.mark.parametrize("method", ["auto", "bovm", "sovm"])
+def test_sssp_parent_roundtrip_all_methods(method):
+    g = gen.watts_strogatz(150, 6, 0.1, seed=21)
+    res = sssp(g, 3, method=method)
+    np.testing.assert_array_equal(np.asarray(res.dist),
+                                  bfs_queue_numpy(g, 3))
+    _check_paths(g, res.dist, res.parent, 3)
+
+
+def test_multi_source_auto_parent_roundtrip():
+    g = gen.grid2d(9, 9)
+    sources = np.arange(6, dtype=np.int32)
+    res = multi_source(g, sources, method="auto")
+    ref = _ref_dists(g, sources)
+    np.testing.assert_array_equal(np.asarray(res.dist), ref)
+    parent = np.asarray(res.parent)
+    for i, s in enumerate(sources):
+        _check_paths(g, res.dist[i], parent[i], int(s))
+
+
+def test_derive_parents_matches_inloop_sovm():
+    """Post-pass parents == in-loop sparse tracking (same tie-break)."""
+    g = gen.erdos_renyi(120, 4.0, directed=False, seed=23)
+    st = sovm_sssp(g, 0)
+    post = np.asarray(derive_parents(g, st.dist[None, :]))[0]
+    np.testing.assert_array_equal(post, np.asarray(st.parent))
+
+
+def test_derive_parents_weighted():
+    g, w = _random_weighted(70, 3.0, 29)
+    res = weighted_apsp(g, w, np.arange(8),
+                        config=WeightedConfig(source_batch=8))
+    parent = np.asarray(derive_parents(g, res.dist,
+                                       weights=jnp.asarray(
+                                           np.where(np.isfinite(w), w,
+                                                    np.inf))))
+    dist = np.asarray(res.dist)
+    src_np, dst_np = g.edge_arrays_np()
+    w_np = w[: g.n_edges]
+    for i in range(8):
+        for v in range(g.n_nodes):
+            p = parent[i, v]
+            if v == i or not np.isfinite(dist[i, v]):
+                continue
+            assert p >= 0
+            lanes = (src_np == p) & (dst_np == v)
+            assert lanes.any()
+            assert np.isclose(dist[i, p] + w_np[lanes].min(), dist[i, v],
+                              rtol=1e-5)
+
+
+# -- engine auto == public API auto (satellite: _pick deleted) --------------
+
+def test_public_auto_is_engine_dispatch():
+    import repro.core.sssp as sssp_mod
+    assert not hasattr(sssp_mod, "_pick")
+    g = gen.disconnected(4, 30, 3.0, seed=31)
+    res = multi_source(g, np.arange(12), method="auto")
+    np.testing.assert_array_equal(np.asarray(res.dist),
+                                  _ref_dists(g, np.arange(12)))
+    assert np.asarray(res.parent).shape == res.dist.shape
+    # eccentricity is the max productive sweep count over sources
+    dm = np.asarray(res.dist)
+    assert int(res.eccentricity) == int(dm.max())
+
+
+# -- serving: weighted queries in the batching loop -------------------------
+
+def test_graph_service_weighted_and_unweighted_flush():
+    from repro.serve import GraphQuery, GraphService
+    g = gen.watts_strogatz(128, 6, 0.1, seed=1)
+    rng = np.random.default_rng(0)
+    w = rng.uniform(0.5, 3.0, g.m_pad).astype(np.float32)
+    svc = GraphService(g, weights=w, max_batch=16)
+    for i in range(6):
+        svc.submit(GraphQuery(qid=i, source=i,
+                              target=None if i % 2 else 100))
+    for i in range(6, 12):
+        svc.submit(GraphQuery(qid=i, source=i, weighted=True,
+                              target=None if i % 2 else 100))
+    served = svc.flush()
+    assert len(served) == 12 and svc.pending() == 0
+    for q in served:
+        if q.weighted:
+            ref = dijkstra_oracle(g, w, q.source)
+            if q.target is None:
+                np.testing.assert_allclose(q.dist, ref, rtol=1e-5)
+            else:
+                np.testing.assert_allclose(q.cost, ref[q.target], rtol=1e-5)
+        else:
+            ref = bfs_queue_numpy(g, q.source)
+            if q.target is None:
+                np.testing.assert_array_equal(q.dist, ref)
+            else:
+                assert q.hops == int(ref[q.target])
+
+
+def test_graph_service_rejects_weighted_without_weights():
+    from repro.serve import GraphQuery, GraphService
+    g = gen.grid2d(8, 8)
+    svc = GraphService(g, max_batch=8)
+    with pytest.raises(ValueError):
+        svc.submit(GraphQuery(qid=0, source=0, weighted=True))
