@@ -2,6 +2,7 @@
 benchmarks (bench_apsp boolean engine, bench_weighted tropical engine)."""
 from __future__ import annotations
 
+import statistics
 import time
 from typing import Callable, Dict
 
@@ -12,19 +13,24 @@ TOLERANCE = 1.25       # auto vs best fixed: timing-noise allowance (when
 BEAT_MARGIN = 1.25     # auto vs worse fixed: require a real win
 
 
-def time_interleaved(fns: Dict[str, Callable], repeats: int
-                     ) -> Dict[str, float]:
-    """Best-of-``repeats`` per mode, modes interleaved within each round so
-    machine-load drift hits all modes equally."""
+def time_interleaved_stats(fns: Dict[str, Callable], repeats: int
+                           ) -> Dict[str, Dict[str, float]]:
+    """Per-mode ``{"best": min, "median": median}`` over ``repeats``
+    rounds, modes interleaved within each round so machine-load drift
+    hits all modes equally.  ``best`` drives the fixed-vs-auto acceptance
+    booleans (least-noise estimator); ``median`` is what the CI
+    regression gate compares run-over-run (robust to a single slow
+    round)."""
     for fn in fns.values():
         fn()  # warmup: jit compile + calibration cache + device transfer
-    best = {k: float("inf") for k in fns}
+    samples: Dict[str, list] = {k: [] for k in fns}
     for _ in range(repeats):
         for k, fn in fns.items():
             t0 = time.perf_counter()
             fn()
-            best[k] = min(best[k], time.perf_counter() - t0)
-    return best
+            samples[k].append(time.perf_counter() - t0)
+    return {k: {"best": min(v), "median": statistics.median(v)}
+            for k, v in samples.items()}
 
 
 def auto_vs_fixed(row: Dict, fixed_modes) -> None:

@@ -30,7 +30,8 @@ import numpy as np
 from repro.core import EngineConfig, apsp_engine, prepare_graph
 from repro.graph import generators as gen
 
-from ._timing import BEAT_MARGIN, TOLERANCE, auto_vs_fixed, time_interleaved
+from ._timing import (BEAT_MARGIN, TOLERANCE, auto_vs_fixed,
+                      time_interleaved_stats)
 
 FAMILIES: Dict[str, Callable] = {
     "grid_road": lambda: gen.grid2d(32, 32),
@@ -69,10 +70,11 @@ def run(quick: bool = False, n_sources: int = 64, repeats: int = 10,
                     last_auto[:] = [res]
             return go
 
-        times = time_interleaved(
+        stats = time_interleaved_stats(
             {m: make_go(m) for m in ("push", "pull", "auto")}, repeats)
-        for mode, t in times.items():
-            row[f"t_{mode}"] = t
+        for mode, st in stats.items():
+            row[f"t_{mode}"] = st["best"]
+            row[f"t_{mode}_median"] = st["median"]
         res = last_auto[0]
         row["sweeps"] = int(res.sweeps)
         row["auto_direction_counts"] = dict(

@@ -27,7 +27,8 @@ from repro.core import (WeightedConfig, dijkstra_oracle, minplus_sssp,
                         prepare_weighted, weighted_apsp)
 from repro.graph import generators as gen
 
-from ._timing import BEAT_MARGIN, TOLERANCE, auto_vs_fixed, time_interleaved
+from ._timing import (BEAT_MARGIN, TOLERANCE, auto_vs_fixed,
+                      time_interleaved_stats)
 
 FAMILIES: Dict[str, Callable] = {
     "grid_road": lambda: gen.grid2d(32, 32),
@@ -68,9 +69,11 @@ def run(quick: bool = False, n_sources: int = 32, repeats: int = 5,
                     last_auto[:] = [res]
             return go
 
-        times = time_interleaved({m: make_go(m) for m in _MODES}, repeats)
-        for mode, t in times.items():
-            row[f"t_{mode}"] = t
+        stats = time_interleaved_stats({m: make_go(m) for m in _MODES},
+                                       repeats)
+        for mode, st in stats.items():
+            row[f"t_{mode}"] = st["best"]
+            row[f"t_{mode}_median"] = st["median"]
         res = last_auto[0]
         row["sweeps"] = int(res.sweeps)
         row["auto_direction_counts"] = dict(

@@ -1,0 +1,126 @@
+"""Benchmark regression gate: compare a fresh BENCH_RESULTS aggregate
+against a committed baseline (``BENCH_BASELINE.json``) and fail CI when
+something real regressed.
+
+Two classes of checks, calibrated to what is and is not deterministic:
+
+  * **hard gates** — fields that are exact given the seeds: the set of
+    benchmark rows (nothing silently dropped), per-family graph shapes
+    (``n_nodes``/``n_edges``) and **sweep counts** (the Fact-1 iteration
+    counts; any change means the algorithm did different work, not that
+    the machine was slow).  A mismatch always fails.
+  * **timing gates** — per-family interleaved best-of-N *medians*
+    (``t_<mode>_median`` from ``_timing.time_interleaved_stats``).  Wall
+    clock is ±30% noisy on shared runners and the baseline may have been
+    recorded on different hardware, so the threshold is generous
+    (``time_tol``, stored in the baseline's ``gate`` block) and timings
+    under ``min_gate_seconds`` are ignored entirely.
+
+The acceptance booleans (``auto_no_slower_than_best`` etc.) are
+themselves timing-derived, so they warn rather than fail.
+
+    PYTHONPATH=src python -m benchmarks.run --quick \
+        --check-against benchmarks/BENCH_BASELINE.json
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Tuple
+
+# The baseline may have been recorded on different hardware than the CI
+# runner and --quick medians come from 2-3 samples, so both knobs are
+# deliberately loose: the timing gate exists to catch order-of-magnitude
+# regressions (an accidental O(n^2) hot path, a dropped jit), not single-
+# digit-percent drift — that's what the hard sweep-count gates and the
+# uploaded aggregates are for.
+DEFAULT_TIME_TOL = 6.0        # median may grow this much before failing
+MIN_GATE_SECONDS = 5e-3       # ignore timings too small to be stable
+
+_HARD_FAMILY_FIELDS = ("n_nodes", "n_edges", "n_sources", "sweeps")
+_BENCHES = ("bench_apsp", "bench_weighted")
+
+
+def load(path: str) -> Dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(current: Dict, baseline: Dict
+            ) -> Tuple[List[str], List[str]]:
+    """Returns (failures, warnings).  Empty failures == gate passes."""
+    failures: List[str] = []
+    warnings: List[str] = []
+    gate = baseline.get("gate", {})
+    time_tol = float(gate.get("time_tol", DEFAULT_TIME_TOL))
+    min_gate = float(gate.get("min_gate_seconds", MIN_GATE_SECONDS))
+
+    # -- structural: every baseline CSV row still exists -------------------
+    cur_rows = {r["name"] for r in current.get("rows", [])}
+    for r in baseline.get("rows", []):
+        if r["name"] not in cur_rows:
+            failures.append(f"row {r['name']!r} present in baseline but "
+                            f"missing from this run")
+
+    for bench in _BENCHES:
+        base_b = baseline.get(bench) or {}
+        cur_b = current.get(bench) or {}
+        for fam, brow in base_b.get("families", {}).items():
+            crow = cur_b.get("families", {}).get(fam)
+            if crow is None:
+                failures.append(f"{bench}/{fam}: family missing")
+                continue
+            # hard: deterministic-by-seed fields
+            for field in _HARD_FAMILY_FIELDS:
+                if field in brow and crow.get(field) != brow[field]:
+                    failures.append(
+                        f"{bench}/{fam}: {field} changed "
+                        f"{brow[field]} -> {crow.get(field)} "
+                        f"(deterministic field; the algorithm did "
+                        f"different work)")
+            # timing: interleaved medians, generous tolerance
+            for key, bval in brow.items():
+                if not key.endswith("_median"):
+                    continue
+                cval = crow.get(key)
+                if cval is None:
+                    failures.append(f"{bench}/{fam}: {key} missing")
+                    continue
+                if cval < min_gate:
+                    continue
+                # floor the baseline so a sub-millisecond baseline can't
+                # hide an unbounded regression (tiny/tiny stays exempt
+                # via the cval check above)
+                ratio = cval / max(bval, min_gate)
+                if ratio > time_tol:
+                    failures.append(
+                        f"{bench}/{fam}: {key} regressed {ratio:.2f}x "
+                        f"({bval * 1e3:.2f} ms -> {cval * 1e3:.2f} ms, "
+                        f"tol {time_tol}x)")
+                elif ratio > 0.5 * time_tol + 0.5:
+                    warnings.append(
+                        f"{bench}/{fam}: {key} drifted {ratio:.2f}x "
+                        f"(under the {time_tol}x gate)")
+            # advisory: timing-derived acceptance booleans
+            for flag in ("auto_no_slower_than_best", "auto_beats_worse"):
+                if brow.get(flag) and not crow.get(flag, True):
+                    warnings.append(f"{bench}/{fam}: {flag} flipped "
+                                    f"True -> False (timing-derived; "
+                                    f"not gated)")
+    return failures, warnings
+
+
+def check_against(current: Dict, baseline_path: str) -> int:
+    """Print a report; return the number of hard failures."""
+    baseline = load(baseline_path)
+    failures, warnings = compare(current, baseline)
+    for w in warnings:
+        print(f"[bench-gate] WARN {w}")
+    for f in failures:
+        print(f"[bench-gate] FAIL {f}")
+    if failures:
+        print(f"[bench-gate] {len(failures)} regression(s) vs "
+              f"{baseline_path}")
+    else:
+        print(f"[bench-gate] OK — no regressions vs {baseline_path} "
+              f"({len(warnings)} warning(s))")
+    return len(failures)

@@ -30,7 +30,7 @@ import time
 import jax
 
 from . import (bench_apsp, bench_batching, bench_complexity, bench_memory,
-               bench_scaling, bench_sssp, bench_weighted)
+               bench_scaling, bench_sssp, bench_weighted, regression)
 
 
 def _csv_rows_to_records(rows):
@@ -49,6 +49,11 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", type=str, default="BENCH_RESULTS.json",
                     help="aggregate JSON path ('' to disable)")
+    ap.add_argument("--check-against", type=str, default=None,
+                    metavar="BASELINE.json",
+                    help="regression gate: compare this run against a "
+                         "committed baseline aggregate and exit non-zero "
+                         "on hard regressions (see benchmarks/regression.py)")
     args = ap.parse_args()
 
     rows = ["name,us_per_call,derived"]
@@ -66,21 +71,26 @@ def main() -> None:
     print("\n".join(rows))
     print(f"# total {total:.1f}s", file=sys.stderr)
 
+    aggregate = {
+        "schema": 2,
+        "quick": args.quick,
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "total_seconds": total,
+        "gate": {"time_tol": regression.DEFAULT_TIME_TOL,
+                 "min_gate_seconds": regression.MIN_GATE_SECONDS},
+        "rows": _csv_rows_to_records(rows),
+        "bench_apsp": apsp,
+        "bench_weighted": weighted,
+    }
     if args.out:
-        aggregate = {
-            "schema": 1,
-            "quick": args.quick,
-            "backend": jax.default_backend(),
-            "platform": platform.platform(),
-            "total_seconds": total,
-            "rows": _csv_rows_to_records(rows),
-            "bench_apsp": apsp,
-            "bench_weighted": weighted,
-        }
         with open(args.out, "w") as f:
             json.dump(aggregate, f, indent=2)
             f.write("\n")
         print(f"# aggregate written to {args.out}", file=sys.stderr)
+    if args.check_against:
+        if regression.check_against(aggregate, args.check_against):
+            sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -262,7 +262,7 @@ def measure_sweep_costs(pg: "PreparedGraph", s: int, cfg: EngineConfig, *,
     the PreparedGraph per (batch size, tiles, path) — calibration costs a
     few warm sweeps once per graph, then is free.
     """
-    key = (s, cfg.bn, cfg.bk, cfg.pull_chunk, use_kernel)
+    key = (s, cfg.bn, cfg.bk, cfg.pull_chunk, use_kernel, interpret)
     if key in pg.cost_cache:
         return pg.cost_cache[key]
     n_pad = pg.n_pad

@@ -44,7 +44,7 @@ from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..kernels.bovm import kernel as K
+from ..kernels import registry as kernel_registry
 from .frontier import UNREACHED, pack_bits
 
 PUSH, PULL, SPARSE = 0, 1, 2
@@ -209,21 +209,26 @@ def boolean_forms(adj, adj_pull, src_idx, dst_idx, *, n_pad: int, s: int,
     maintains the shortest-path tree in-loop on the sparse form (any
     active in-neighbor, max src id wins — the same tie-break
     :func:`derive_parents` applies as a post-pass).
+
+    ``use_kernel`` swaps the push/pull closures for the boolean Pallas
+    kernels looked up in :mod:`repro.kernels.registry`.
     """
     bs = min(s, 128)
     chunk = _pull_chunk_size(n_pad, pull_chunk)
     wk = _pull_kernel_wk(max(n_pad // 32, 1))
 
     if use_kernel:
+        K = kernel_registry.get(BOOLEAN).forms
+
         def push(f, d, p, step):
-            new, dist = K.fused_sweep(f, adj, d, step, bs=bs, bn=bn, bk=bk,
-                                      interpret=interpret)
+            new, dist = K["push"](f, adj, d, step, bs=bs, bn=bn, bk=bk,
+                                  interpret=interpret)
             return new, dist, p
 
         def pull(f, d, p, step):
-            new, dist = K.packed_pull_sweep(pack_bits(f != 0), adj_pull, d,
-                                            step, bs=min(s, 8), bn=bn, wk=wk,
-                                            interpret=interpret)
+            new, dist = K["pull"](pack_bits(f != 0), adj_pull, d,
+                                  step, bs=min(s, 8), bn=bn, wk=wk,
+                                  interpret=interpret)
             return new, dist, p
     else:
         def push(f, d, p, step):
@@ -268,26 +273,74 @@ def boolean_forms(adj, adj_pull, src_idx, dst_idx, *, n_pad: int, s: int,
 
 def tropical_forms(wdense, src_idx, dst_idx, w_edges, *,
                    n_pad: int = 0, chunk: int = 128,
-                   use_frontier: bool = True) -> Tuple[SweepForm, ...]:
+                   use_frontier: bool = True,
+                   use_kernel: bool = False, interpret: bool = True,
+                   bn: int = 128, bk: int = 128,
+                   eb: int = 128) -> Tuple[SweepForm, ...]:
     """(dense, sparse) (min,+) sweep forms.
 
     dense  — the f32 min-plus GEMM-analogue of the boolean push sweep:
              ``cand[s, j] = min_k (dist[s, k] + W[k, j])`` over frontier
-             rows, evaluated ``chunk`` destination columns per
-             ``lax.map`` step so the (S, chunk, n) broadcast stays
-             bounded.  ``wdense`` is (n_pad, n_pad) f32 with +inf
-             non-edges (pass ``None`` when only the sparse form runs).
+             rows.  ``wdense`` is (n_pad, n_pad) f32 with +inf non-edges
+             (pass ``None`` when only the sparse form runs).  Reference
+             path: ``chunk`` destination columns per ``lax.map`` step so
+             the (S, chunk, n) broadcast stays bounded.  Kernel path
+             (``use_kernel=True``): the fused Pallas min-plus sweep with
+             settled-bound tile skipping, looked up in
+             :mod:`repro.kernels.registry` exactly as
+             :func:`boolean_forms` does.
     sparse — edge-parallel relaxation: ``cand = dist[src] + w`` scattered
              with min into ``dst`` — Bellman-Ford restricted to the
              improved frontier (sound for non-negative weights:
              un-improved sources cannot produce new improvements).
              ``use_frontier=False`` relaxes every edge every sweep (the
-             level-synchronous baseline semantics).
+             level-synchronous baseline semantics; reference path only).
+             Kernel path: the edge-parallel Pallas relax over CSR lane
+             blocks (batched 2D state only) — *interpret mode only*: its
+             dynamic gathers/scatters are interpret-validated and its
+             whole-(S, n_pad)-state VMEM footprint is unbounded in
+             ``n_pad``, so a compiled (real-TPU) kernel path dispatches
+             the XLA sparse form instead, per the registry notes.
 
     Fact 1 generalizes: the new frontier is the improved set, and a sweep
     that improves nothing terminates.  Sweep count is bounded by the
     longest shortest path's hop count (Bellman-Ford depth).
     """
+    def sparse_ref(f, d, p, step):
+        cand = d[..., src_idx] + w_edges
+        if use_frontier:
+            cand = jnp.where(f[..., src_idx] != 0, cand, INF)
+        nd = d.at[..., dst_idx].min(cand)
+        new = nd < d
+        return new.astype(jnp.int8), nd, p
+
+    if use_kernel:
+        assert use_frontier, "kernel path is frontier-gated by construction"
+        ks = kernel_registry.get(TROPICAL)
+        K = ks.forms
+        # min finite edge weight — drives the kernel's settled-skip table
+        # (padded lanes are +inf and fall out of the min)
+        w_min = jnp.min(w_edges)
+
+        dense = None
+        if wdense is not None:
+            def dense(f, d, p, step):
+                fd = jnp.where(f != 0, d, INF)           # frontier rows only
+                new, nd = K["dense"](fd, wdense, d, w_min,
+                                     bs=min(f.shape[0], 128), bn=bn,
+                                     bk=bk, interpret=interpret)
+                return new, nd, p
+
+        if not interpret and "sparse" in ks.interpret_only:
+            sparse = sparse_ref    # compiled path: XLA scatter-min relax
+        else:
+            def sparse(f, d, p, step):
+                new, nd = K["sparse"](f, d, src_idx, dst_idx, w_edges,
+                                      eb=eb, interpret=interpret)
+                return new, nd, p
+
+        return dense, sparse
+
     dense = None
     if wdense is not None:
         c = _pull_chunk_size(n_pad, chunk)
@@ -305,15 +358,7 @@ def tropical_forms(wdense, src_idx, dst_idx, w_edges, *,
             new = nd < d
             return new.astype(jnp.int8), nd, p
 
-    def sparse(f, d, p, step):
-        cand = d[..., src_idx] + w_edges
-        if use_frontier:
-            cand = jnp.where(f[..., src_idx] != 0, cand, INF)
-        nd = d.at[..., dst_idx].min(cand)
-        new = nd < d
-        return new.astype(jnp.int8), nd, p
-
-    return dense, sparse
+    return dense, sparse_ref
 
 
 # --------------------------------------------------------------------------

@@ -10,9 +10,12 @@ picks between the tropical forms —
 
   DENSE  — f32 min-plus GEMM-analogue of the boolean push sweep
            (``cand[s, j] = min_k dist[s, k] + W[k, j]`` over frontier
-           rows; cost proportional to the live tile fraction);
+           rows; cost proportional to the live tile fraction); on the
+           kernel path this is the fused Pallas min-plus sweep with
+           settled-bound tile skipping (kernels/tropical);
   SPARSE — edge-parallel scatter-min relaxation over CSR lanes (cost
-           O(S · m_pad) regardless of occupancy)
+           O(S · m_pad) regardless of occupancy); kernel path: the
+           Pallas edge-block relax
 
 — chosen per sweep by the occupancy cost model (dynamic regime) or pinned
 per graph by wall-clock calibration of both forms (CPU regime), exactly
@@ -42,7 +45,7 @@ import numpy as np
 
 from ..graph.csr import CSRGraph
 from . import sweep as S
-from .engine import frontier_stats
+from .engine import _resolve_kernel, frontier_stats
 from .frontier import one_hot_frontier
 from .sovm import sovm_sssp
 
@@ -71,12 +74,24 @@ class WeightedConfig:
     Cost-model units: ``c_dense`` per f32 add+min lane in a live dense
     tile, ``c_sparse`` per CSR relax lane — same shape as the boolean
     engine's model with the pull form removed (bit-packing does not apply
-    to f32 distances)."""
+    to f32 distances).
+
+    ``use_kernel=None`` resolves to "Pallas kernels iff on TPU", exactly
+    like ``EngineConfig``; the kernel closures come from the semiring
+    kernel registry via ``sweep.tropical_forms``.  ``dynamic=None``
+    mirrors the boolean engine too: per-sweep occupancy switching on the
+    kernel path, per-graph wall-clock calibration on the reference path.
+    """
     source_batch: int = 64           # sources per tile (multiple of 8)
     mode: str = "auto"               # auto | dense | sparse
-    dynamic: Optional[bool] = None   # per-sweep switch; None -> calibrated
+    use_kernel: Optional[bool] = None  # None -> Pallas kernels iff on TPU
+    dynamic: Optional[bool] = None   # per-sweep switch; None -> use_kernel
     max_sweeps: Optional[int] = None  # None -> n_nodes (hop bound)
     chunk: int = 128                 # dense min-plus dst cols per map step
+    # dense min-plus kernel tiles (bs adapts to the source batch)
+    bn: int = 128
+    bk: int = 128
+    eb: int = 128                    # sparse relax kernel edges per step
     c_dense: float = 1.0
     c_sparse: float = 8.0
 
@@ -158,10 +173,11 @@ def minplus_sssp(g: CSRGraph, weights: jax.Array, source, *,
 
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "n_real", "n_pad", "max_sweeps",
-                                    "forced_dir"))
+                                    "use_kernel", "interpret", "forced_dir"))
 def _run_weighted_batch(wdense, src_idx, dst_idx, w_edges, deg, sources,
                         n_valid, *, cfg: WeightedConfig, n_real: int,
-                        n_pad: int, max_sweeps: int,
+                        n_pad: int, max_sweeps: int, use_kernel: bool,
+                        interpret: bool,
                         forced_dir: Optional[int]) -> S.SweepState:
     s = sources.shape[0]
     m_pad = src_idx.shape[0]
@@ -175,7 +191,9 @@ def _run_weighted_batch(wdense, src_idx, dst_idx, w_edges, deg, sources,
     dist0 = jnp.where(f0 != 0, 0.0, jnp.full((s, n_pad), INF))
 
     forms = S.tropical_forms(wdense, src_idx, dst_idx, w_edges,
-                             n_pad=n_pad, chunk=cfg.chunk)
+                             n_pad=n_pad, chunk=cfg.chunk,
+                             use_kernel=use_kernel, interpret=interpret,
+                             bn=cfg.bn, bk=cfg.bk, eb=cfg.eb)
     if forms[0] is None:
         forms = (forms[1], forms[1])  # sparse pinned; keep switch arity 2
 
@@ -196,10 +214,14 @@ def _run_weighted_batch(wdense, src_idx, dst_idx, w_edges, deg, sources,
 
 
 def measure_weighted_costs(pw: PreparedWeightedGraph, s: int,
-                           cfg: WeightedConfig) -> Tuple[float, float]:
+                           cfg: WeightedConfig, *,
+                           use_kernel: bool = False,
+                           interpret: bool = True) -> Tuple[float, float]:
     """Wall-clock one mid-run sweep of each tropical form on this graph
-    (mirror of engine.measure_sweep_costs; cached on the prepared graph)."""
-    key = (s, cfg.chunk)
+    (mirror of engine.measure_sweep_costs; cached on the prepared graph).
+    Times the same closures ``_run_weighted_batch`` will dispatch (kernel
+    or reference, per ``use_kernel``)."""
+    key = (s, cfg.chunk, cfg.bn, cfg.bk, cfg.eb, use_kernel, interpret)
     if key in pw.cost_cache:
         return pw.cost_cache[key]
     n_pad = pw.n_pad
@@ -208,21 +230,25 @@ def measure_weighted_costs(pw: PreparedWeightedGraph, s: int,
     dist = np.full((s, n_pad), np.inf, np.float32)
     dist[:, ::4] = 1.0
     forms = S.tropical_forms(pw.wdense, pw.graph.src, pw.graph.dst,
-                             pw.w_edges, n_pad=n_pad, chunk=cfg.chunk)
+                             pw.w_edges, n_pad=n_pad, chunk=cfg.chunk,
+                             use_kernel=use_kernel, interpret=interpret,
+                             bn=cfg.bn, bk=cfg.bk, eb=cfg.eb)
     result = S.time_sweep_forms(forms, jnp.asarray(f), jnp.asarray(dist))
     pw.cost_cache[key] = result
     return result
 
 
 def _resolve_weighted_direction(pw: PreparedWeightedGraph, s: int,
-                                cfg: WeightedConfig) -> Optional[int]:
+                                cfg: WeightedConfig, use_kernel: bool,
+                                interpret: bool) -> Optional[int]:
     """None -> per-sweep dynamic switch; int -> form fixed per batch."""
     if cfg.mode != "auto":
         return WEIGHTED_FORM_NAMES.index(cfg.mode)
-    dynamic = False if cfg.dynamic is None else cfg.dynamic
+    dynamic = use_kernel if cfg.dynamic is None else cfg.dynamic
     if dynamic:
         return None
-    return int(np.argmin(measure_weighted_costs(pw, s, cfg)))
+    return int(np.argmin(measure_weighted_costs(
+        pw, s, cfg, use_kernel=use_kernel, interpret=interpret)))
 
 
 def weighted_apsp(g: Union[CSRGraph, PreparedWeightedGraph],
@@ -250,7 +276,11 @@ def weighted_apsp(g: Union[CSRGraph, PreparedWeightedGraph],
             f"[{srcs.min()}, {srcs.max()}]")
     max_sweeps = config.max_sweeps or n
     B = config.source_batch
-    forced = _resolve_weighted_direction(pw, B, config)
+    # one resolution policy for both semirings: _resolve_kernel only
+    # reads cfg.use_kernel, which WeightedConfig shares with EngineConfig
+    use_kernel, interpret = _resolve_kernel(config)
+    forced = _resolve_weighted_direction(pw, B, config, use_kernel,
+                                         interpret)
     # only materialize the O(n_pad^2) dense operand when it can dispatch
     wdense = pw.wdense if forced in (None, DENSE) else None
 
@@ -267,6 +297,7 @@ def weighted_apsp(g: Union[CSRGraph, PreparedWeightedGraph],
                                  pw.deg, jnp.asarray(padded),
                                  jnp.int32(valid), cfg=config, n_real=n,
                                  n_pad=pw.n_pad, max_sweeps=max_sweeps,
+                                 use_kernel=use_kernel, interpret=interpret,
                                  forced_dir=forced)
         rows.append(st.dist[:valid, :n])
         sweeps = jnp.maximum(sweeps, st.step)

@@ -1,3 +1,10 @@
 """Pallas TPU kernels for the paper's compute hot spots (validated with
-interpret=True on CPU)."""
-from . import bovm
+interpret=True on CPU).
+
+One tiling substrate (``common``), N semirings: each subpackage
+registers its fused sweep kernels in ``registry`` keyed by semiring
+name; the core sweep layer dispatches through the registry.
+"""
+from . import common, registry
+from . import bovm       # registers "boolean"
+from . import tropical   # registers "tropical"

@@ -2,3 +2,32 @@ from .ops import (sweep, msbfs_kernel, msbfs_packed, pack_adjacency_pull,
                   KernelDawnResult)
 from .kernel import fused_sweep, packed_pull_sweep
 from .ref import sweep_ref, packed_pull_ref
+
+from .. import common, registry
+
+
+def vmem_bytes(*, form: str = "push", bs: int | None = None, bn: int = 128,
+               bk: int = 512, wk: int = 128) -> int:
+    """Resident VMEM of one grid step (docs/ARCHITECTURE.md table).
+
+    ``bs`` defaults to the tile the engine actually dispatches: 128 for
+    the push form, 8 for the bit-packed pull form (``sweep.boolean_forms``
+    caps the pull source tile at ``min(s, 8)``).
+    """
+    if form == "push":   # int8 frontier + int8 adj + i32 dist/acc, i8+i32 out
+        return common.push_vmem_bytes(128 if bs is None else bs, bn, bk,
+                                      f_itemsize=1, a_itemsize=1,
+                                      d_itemsize=4, acc_itemsize=4,
+                                      out_itemsizes=(1, 4))
+    assert form == "pull", form    # uint32 words + i32 dist/acc, i8+i32 out
+    return common.pull_vmem_bytes(8 if bs is None else bs, bn, wk,
+                                  word_itemsize=4, d_itemsize=4,
+                                  acc_itemsize=4, out_itemsizes=(1, 4))
+
+
+registry.register(registry.KernelSet(
+    semiring="boolean",
+    forms={"push": fused_sweep, "pull": packed_pull_sweep},
+    vmem_bytes=vmem_bytes,
+    notes="fused boolean GEMM sweep (MXU) + bit-packed pull sweep (VPU)",
+))

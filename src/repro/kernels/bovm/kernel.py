@@ -32,11 +32,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-# jax < 0.5 names the TPU compiler-params struct TPUCompilerParams
-_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
-    pltpu.TPUCompilerParams
+from .. import common
 
 
 # --------------------------------------------------------------------------
@@ -78,35 +75,23 @@ def fused_sweep(frontier: jax.Array, adj: jax.Array, dist: jax.Array,
     dist (S,n) int32; S % bs == 0, n % bn == 0, n % bk == 0."""
     s, n = frontier.shape
     assert adj.shape == (n, n) and dist.shape == (s, n)
-    assert s % bs == 0 and n % bn == 0 and n % bk == 0, (s, n, bs, bn, bk)
+    common.check_push_tiles(s, n, bs, bn, bk)
     gi, gj, gk = s // bs, n // bn, n // bk
 
     # occupancy tables (computed by XLA; cheap VPU reproductions per sweep)
-    f_occ = jnp.any(frontier.reshape(gi, bs, gk, bk) != 0, axis=(1, 3))
-    o_occ = jnp.any(dist.reshape(gi, bs, gj, bn) < 0, axis=(1, 3))
+    f_occ = common.block_any(frontier != 0, gi, bs, gk, bk)
+    o_occ = common.block_any(dist < 0, gi, bs, gj, bn)
     step_arr = jnp.asarray(step, jnp.int32).reshape(1)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(gi, gj, gk),
-        in_specs=[
-            pl.BlockSpec((bs, bk), lambda i, j, k, *_: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k, *_: (k, j)),
-            pl.BlockSpec((bs, bn), lambda i, j, k, *_: (i, j)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bs, bn), lambda i, j, k, *_: (i, j)),
-            pl.BlockSpec((bs, bn), lambda i, j, k, *_: (i, j)),
-        ],
-        scratch_shapes=[pltpu.VMEM((bs, bn), jnp.float32)],
-    )
+    grid_spec = common.push_grid_spec(gi, gj, gk, bs=bs, bn=bn, bk=bk,
+                                      num_scalar_prefetch=3,
+                                      acc_dtype=jnp.float32)
     new, dist_out = pl.pallas_call(
         _fused_sweep_kernel,
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((s, n), jnp.int8),
                    jax.ShapeDtypeStruct((s, n), jnp.int32)],
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=common.sweep_compiler_params(),
         interpret=interpret,
     )(f_occ.astype(jnp.int32), o_occ.astype(jnp.int32), step_arr,
       frontier, adj, dist)
@@ -161,27 +146,15 @@ def packed_pull_sweep(frontier_packed: jax.Array, adj_in_packed: jax.Array,
     gi, gj, gk = s // bs, n // bn, w // wk
     step_arr = jnp.asarray(step, jnp.int32).reshape(1)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(gi, gj, gk),
-        in_specs=[
-            pl.BlockSpec((bs, wk), lambda i, j, k, *_: (i, k)),
-            pl.BlockSpec((bn, wk), lambda i, j, k, *_: (j, k)),
-            pl.BlockSpec((bs, bn), lambda i, j, k, *_: (i, j)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bs, bn), lambda i, j, k, *_: (i, j)),
-            pl.BlockSpec((bs, bn), lambda i, j, k, *_: (i, j)),
-        ],
-        scratch_shapes=[pltpu.VMEM((bs, bn), jnp.int32)],
-    )
+    grid_spec = common.pull_grid_spec(gi, gj, gk, bs=bs, bn=bn, wk=wk,
+                                      num_scalar_prefetch=1,
+                                      acc_dtype=jnp.int32)
     new, dist_out = pl.pallas_call(
         _packed_pull_kernel,
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((s, n), jnp.int8),
                    jax.ShapeDtypeStruct((s, n), jnp.int32)],
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=common.sweep_compiler_params(),
         interpret=interpret,
     )(step_arr, frontier_packed, adj_in_packed, dist)
     return new, dist_out

@@ -12,12 +12,11 @@ import jax
 import jax.numpy as jnp
 
 from ...core.frontier import UNREACHED, one_hot_frontier, pack_bits
+from .. import common
 from . import kernel as K
 from . import ref as R
 
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+_default_interpret = common.default_interpret
 
 
 class KernelDawnResult(NamedTuple):

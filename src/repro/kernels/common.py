@@ -1,0 +1,137 @@
+"""Shared tiling / occupancy / grid machinery for every semiring kernel.
+
+One substrate, N semirings: the boolean push/pull kernels
+(``kernels/bovm``) and the tropical min-plus kernels
+(``kernels/tropical``) are instantiations of the same skeleton —
+
+  * a ``(S/bs, n/bn, n/bk)`` grid with K innermost ("arbitrary") so each
+    output tile accumulates operand-block products in a VMEM scratch and
+    fuses the DAWN epilogue on the last K step;
+  * scalar-prefetched occupancy tables (``f_occ`` input sparsity,
+    ``o_occ`` output sparsity — Thm 3.2 at tile rank) that gate each grid
+    step before any VMEM compute;
+  * MXU-aligned tile sizes validated against the per-core VMEM budget.
+
+This module owns the pieces the semirings share: the jax-version
+compiler-params shim, interpret-mode backend detection, the blockwise
+``any`` reduction behind both occupancy tables, the push/pull grid-spec
+builders, and the VMEM budget math quoted in docs/ARCHITECTURE.md.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax < 0.5 names the TPU compiler-params struct TPUCompilerParams
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+MXU_ALIGN = 128                      # matmul dims must be multiples of this
+VMEM_BUDGET_BYTES = 16 * 2 ** 20     # ~16 MB/core; tiles must sit well under
+
+
+def default_interpret() -> bool:
+    """Pallas kernels execute op-by-op (interpret mode) off-TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def sweep_compiler_params():
+    """The shared grid semantics: (i, j) output tiles are parallel, the
+    K reduction axis is sequential (scratch accumulator carries state)."""
+    return CompilerParams(
+        dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+
+# --------------------------------------------------------------------------
+# occupancy tables (the Thm 3.2 tile-skip signals, semiring-generic)
+# --------------------------------------------------------------------------
+
+def block_any(mask: jax.Array, gi: int, bi: int, gj: int, bj: int
+              ) -> jax.Array:
+    """(gi*bi, gj*bj) bool -> (gi, gj) bool: does block (i, j) contain any
+    True?  This one reduction is both occupancy tables:
+
+      f_occ = block_any(frontier-active mask, gi, bs, gk, bk)
+      o_occ = block_any(semiring's improvable mask, gi, bs, gj, bn)
+
+    where "improvable" is ``dist == UNREACHED`` for the boolean semiring
+    (settled distances never change) and the settled-bound test
+    ``dist > min_frontier_dist + w_min`` for the tropical semiring (see
+    kernels/tropical/kernel.py for the soundness argument).
+    """
+    return jnp.any(mask.reshape(gi, bi, gj, bj), axis=(1, 3))
+
+
+def check_push_tiles(s: int, n: int, bs: int, bn: int, bk: int) -> None:
+    """Tile divisibility contract shared by the push-style kernels."""
+    assert s % bs == 0 and n % bn == 0 and n % bk == 0, (s, n, bs, bn, bk)
+
+
+# --------------------------------------------------------------------------
+# grid specs (one (i, j, k) skeleton, two operand layouts)
+# --------------------------------------------------------------------------
+
+def push_grid_spec(gi: int, gj: int, gk: int, *, bs: int, bn: int, bk: int,
+                   num_scalar_prefetch: int, acc_dtype) -> "pltpu.PrefetchScalarGridSpec":
+    """Grid spec for push-direction sweeps (boolean GEMM, tropical
+    min-plus "GEMM"): frontier-state block (i, k), operand block (k, j),
+    per-(i, j) dist/out tiles, one (bs, bn) scratch accumulator."""
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=num_scalar_prefetch,
+        grid=(gi, gj, gk),
+        in_specs=[
+            pl.BlockSpec((bs, bk), lambda i, j, k, *_: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k, *_: (k, j)),
+            pl.BlockSpec((bs, bn), lambda i, j, k, *_: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bs, bn), lambda i, j, k, *_: (i, j)),
+            pl.BlockSpec((bs, bn), lambda i, j, k, *_: (i, j)),
+        ],
+        scratch_shapes=[pltpu.VMEM((bs, bn), acc_dtype)],
+    )
+
+
+def pull_grid_spec(gi: int, gj: int, gk: int, *, bs: int, bn: int, wk: int,
+                   num_scalar_prefetch: int, acc_dtype) -> "pltpu.PrefetchScalarGridSpec":
+    """Grid spec for pull-direction sweeps (bit-packed boolean): packed
+    frontier block (i, k), packed in-neighbour block (j, k)."""
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=num_scalar_prefetch,
+        grid=(gi, gj, gk),
+        in_specs=[
+            pl.BlockSpec((bs, wk), lambda i, j, k, *_: (i, k)),
+            pl.BlockSpec((bn, wk), lambda i, j, k, *_: (j, k)),
+            pl.BlockSpec((bs, bn), lambda i, j, k, *_: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bs, bn), lambda i, j, k, *_: (i, j)),
+            pl.BlockSpec((bs, bn), lambda i, j, k, *_: (i, j)),
+        ],
+        scratch_shapes=[pltpu.VMEM((bs, bn), acc_dtype)],
+    )
+
+
+# --------------------------------------------------------------------------
+# VMEM budget math (the numbers in docs/ARCHITECTURE.md)
+# --------------------------------------------------------------------------
+
+def push_vmem_bytes(bs: int, bn: int, bk: int, *, f_itemsize: int,
+                    a_itemsize: int, d_itemsize: int, acc_itemsize: int,
+                    out_itemsizes: Sequence[int]) -> int:
+    """Resident VMEM for one push-style grid step: frontier-state tile
+    (bs, bk) + operand tile (bk, bn) + dist tile + scratch + outputs."""
+    return (bs * bk * f_itemsize + bk * bn * a_itemsize
+            + bs * bn * (d_itemsize + acc_itemsize + sum(out_itemsizes)))
+
+
+def pull_vmem_bytes(bs: int, bn: int, wk: int, *, word_itemsize: int,
+                    d_itemsize: int, acc_itemsize: int,
+                    out_itemsizes: Sequence[int]) -> int:
+    """Resident VMEM for one pull-style grid step."""
+    return ((bs + bn) * wk * word_itemsize
+            + bs * bn * (d_itemsize + acc_itemsize + sum(out_itemsizes)))

@@ -1,0 +1,74 @@
+"""Kernel registry: one tiling substrate, N semirings.
+
+Each kernel package (``kernels/bovm``, ``kernels/tropical``) registers a
+:class:`KernelSet` — its fused Pallas sweep entry points plus a VMEM
+budget estimator — keyed by the semiring name used by
+``repro.core.sweep.Semiring``.  The core sweep layer
+(``core/sweep.py::boolean_forms`` / ``tropical_forms``) looks its kernels
+up here instead of importing a kernel module directly, so adding a
+semiring's hardware path is: write the kernels, register them, and the
+direction-optimizing engines dispatch them with zero core changes.
+
+Keys are plain strings so this module has no dependency on the core
+layer (``get`` also accepts any object with a ``.name``, e.g. a
+``Semiring`` instance).  Registration happens on import of
+``repro.kernels`` (each subpackage registers itself at the bottom of its
+``__init__``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSet:
+    """The Pallas entry points one semiring contributes.
+
+    ``forms`` maps a form name (the same vocabulary the core layer uses:
+    "push"/"pull" for boolean, "dense"/"sparse" for tropical) to the
+    jitted kernel wrapper.  ``vmem_bytes`` estimates the resident VMEM of
+    one grid step at the given tile sizes (used by tests to enforce the
+    budget and by docs/ARCHITECTURE.md's table).  ``interpret_only``
+    names forms validated only under ``interpret=True`` — the core layer
+    must not dispatch them compiled (it falls back to the XLA form);
+    registering the capability here keeps that policy out of core.
+    """
+    semiring: str
+    forms: Mapping[str, Callable]
+    vmem_bytes: Callable[..., int]
+    notes: str = ""
+    interpret_only: frozenset = frozenset()
+
+
+_REGISTRY: dict = {}
+
+
+def _key(semiring) -> str:
+    return semiring if isinstance(semiring, str) else semiring.name
+
+
+def register(kernel_set: KernelSet) -> KernelSet:
+    """Idempotent per name: re-registering the same semiring replaces it
+    (supports module reloads in tests)."""
+    _REGISTRY[kernel_set.semiring] = kernel_set
+    return kernel_set
+
+
+def has(semiring) -> bool:
+    return _key(semiring) in _REGISTRY
+
+
+def get(semiring) -> KernelSet:
+    """Look up the kernel set for a semiring (str or Semiring)."""
+    key = _key(semiring)
+    try:
+        return _REGISTRY[key]
+    except KeyError:
+        raise KeyError(
+            f"no Pallas kernels registered for semiring {key!r}; "
+            f"available: {sorted(_REGISTRY)}") from None
+
+
+def available() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

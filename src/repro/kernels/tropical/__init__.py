@@ -1,0 +1,34 @@
+from .kernel import fused_minplus_sweep, sparse_relax_sweep
+from .ref import minplus_sweep_ref, sparse_relax_ref
+
+from .. import common, registry
+
+
+def vmem_bytes(*, form: str = "dense", bs: int = 128, bn: int = 128,
+               bk: int = 128, s: int = 64, n_pad: int = 1152,
+               eb: int = 128) -> int:
+    """Resident VMEM of one grid step (docs/ARCHITECTURE.md table)."""
+    if form == "dense":  # f32 fdist + f32 W + f32 dist/acc, i8+f32 out
+        return common.push_vmem_bytes(bs, bn, bk, f_itemsize=4, a_itemsize=4,
+                                      d_itemsize=4, acc_itemsize=4,
+                                      out_itemsizes=(1, 4))
+    assert form == "sparse", form
+    # i8 frontier + f32 dist/acc/out + i8 out, whole (S, n_pad) state,
+    # plus 3 (1, eb) edge-lane blocks (src/dst int32, w f32)
+    return s * n_pad * (1 + 4 + 4 + 4 + 1) + 3 * eb * 4
+
+
+registry.register(registry.KernelSet(
+    semiring="tropical",
+    forms={"dense": fused_minplus_sweep, "sparse": sparse_relax_sweep},
+    vmem_bytes=vmem_bytes,
+    notes="fused min-plus push sweep (settled-bound tile skip) + "
+          "edge-parallel sparse relax (interpret-validated; prefer the "
+          "dense kernel or the XLA sparse form on real TPUs)",
+    # sparse only: data-dependent gathers/scatters by edge index are not
+    # validated under Mosaic compilation and the whole-(S, n_pad) state is
+    # VMEM-unbounded in n_pad.  The dense form stays compiled-dispatchable:
+    # its per-lane fori_loop/dynamic-slice schedule is the one the boolean
+    # pull kernel has always shipped compiled with.
+    interpret_only=frozenset({"sparse"}),
+))

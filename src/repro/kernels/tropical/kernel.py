@@ -1,0 +1,210 @@
+"""Pallas TPU kernels for the tropical (min,+) sweep — the weighted
+engine's hot path (paper §5 grown onto the same substrate as BOVM).
+
+``fused_minplus_sweep`` — dense direction (min-plus "GEMM" push).
+  Grid (Si, Nj, Kk), K innermost, exactly the boolean ``fused_sweep``
+  skeleton from ``kernels/common.py``: each (i, j) output tile
+  accumulates ``min_k(fdist_block[s, k] + W_block[k, j])`` in a VMEM
+  scratch (⊕ = min replaces the MXU add-accumulate; the inner min-plus
+  runs one k lane per VPU step, the same per-lane schedule as the packed
+  pull kernel's word loop), then fuses the DAWN epilogue: improved-mask
+  test, distance write.  Two scalar-prefetched occupancy tables gate
+  every grid step:
+
+    * f_occ[i, k] — frontier block (i, k) has any active source
+                    (``isfinite`` of the frontier-masked distances);
+    * o_occ[i, j] — output tile (i, j) has any *improvable* target.
+
+  The boolean o_occ ("any unreached") is unsound for (min,+) — finite
+  distances can still improve — so the tropical table generalizes
+  Thm 3.2 through Dijkstra's settled criterion at tile rank:
+
+    skip (i, j)  iff  dist[s, j'] <= min_k fdist[s, k] + w_min
+                      for every (s, j') in the tile,
+
+  where ``w_min`` is the graph's minimum edge weight.  Every candidate
+  this sweep can produce for row s is >= min_fd[s] + w_min, so a tile of
+  settled targets cannot improve: the skip is exact, not heuristic, and
+  with unit weights it degenerates to the boolean "any unreached" table.
+
+``sparse_relax_sweep`` — edge-parallel relaxation over CSR lanes.
+  Grid (m_pad / eb,), sequential: each step gathers ``dist[:, src]``,
+  adds the lane weights, masks to the frontier, and scatter-mins an
+  (S, n_pad) VMEM accumulator (``eb`` edges relax in parallel per step);
+  the last step fuses the epilogue.  Padded lanes carry the CSR sentinel
+  (src = dst = n, w = +inf) and are inert.  Gather/scatter by edge index
+  is validated under ``interpret=True`` (the CPU path this repo tests);
+  on real TPU hardware prefer the dense kernel or the XLA sparse form —
+  the registry notes record this caveat.
+
+VMEM budgets (defaults): dense tiles (128×128 f32 fdist + 128×128 f32 W
++ 128×128 f32 dist/acc + i8+f32 out) ≈ 0.4 MB.  The sparse kernel keeps
+whole (S, n_pad) state blocks resident (~14 B/entry: i8 frontier, f32
+dist/acc/out, i8 out), so its footprint scales with S × n_pad — (64,
+1152) ≈ 1.0 MB, but a 131k-node graph at S=64 would need ~117 MB: on
+large graphs keep S small or prefer the dense kernel / XLA sparse form.
+All dense dims are multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .. import common
+
+
+# --------------------------------------------------------------------------
+# dense direction: fused min-plus "GEMM" sweep
+# --------------------------------------------------------------------------
+
+def _minplus_sweep_kernel(f_occ_ref, o_occ_ref,        # scalar prefetch
+                          fd_ref, w_ref, dist_ref,     # VMEM in
+                          new_ref, dist_out_ref,       # VMEM out
+                          acc_ref):                    # VMEM scratch f32
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, jnp.inf)
+
+    live = (f_occ_ref[i, k] > 0) & (o_occ_ref[i, j] > 0)
+
+    @pl.when(live)
+    def _accumulate():
+        fd = fd_ref[...]                       # (bs, bk) f32, +inf off-front
+        w = w_ref[...]                         # (bk, bn) f32, +inf non-edge
+
+        def lane(kk, acc):
+            col = jax.lax.dynamic_slice_in_dim(fd, kk, 1, 1)   # (bs, 1)
+            row = jax.lax.dynamic_slice_in_dim(w, kk, 1, 0)    # (1, bn)
+            return jnp.minimum(acc, col + row)
+
+        acc_ref[...] = jax.lax.fori_loop(0, fd.shape[1], lane, acc_ref[...])
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        dist = dist_ref[...]
+        cand = acc_ref[...]
+        new = cand < dist
+        new_ref[...] = new.astype(jnp.int8)
+        dist_out_ref[...] = jnp.where(new, cand, dist)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bn", "bk", "interpret"))
+def fused_minplus_sweep(fdist: jax.Array, wdense: jax.Array,
+                        dist: jax.Array, w_min: jax.Array, *, bs: int = 128,
+                        bn: int = 128, bk: int = 128,
+                        interpret: bool = False):
+    """One fused (min,+) sweep.  Shapes: fdist (S, n) f32 — the
+    frontier-masked distances (``where(frontier, dist, +inf)``), wdense
+    (n, n) f32 with +inf non-edges, dist (S, n) f32; ``w_min`` the
+    scalar minimum finite edge weight (traced; drives the settled-skip
+    table).  S % bs == 0, n % bn == 0, n % bk == 0.  Returns
+    (new int8 (S, n), dist f32 (S, n)) — bit-identical to the dense
+    reference form (f32 min is exact, the skips are provably inert)."""
+    s, n = fdist.shape
+    assert wdense.shape == (n, n) and dist.shape == (s, n)
+    common.check_push_tiles(s, n, bs, bn, bk)
+    gi, gj, gk = s // bs, n // bn, n // bk
+
+    f_occ = common.block_any(jnp.isfinite(fdist), gi, bs, gk, bk)
+    # Dijkstra-style settled bound: row s cannot improve any target whose
+    # distance is already <= min_k fdist[s, k] + w_min
+    bound = jnp.min(fdist, axis=1, keepdims=True) + w_min    # (S, 1)
+    o_occ = common.block_any(dist > bound, gi, bs, gj, bn)
+
+    grid_spec = common.push_grid_spec(gi, gj, gk, bs=bs, bn=bn, bk=bk,
+                                      num_scalar_prefetch=2,
+                                      acc_dtype=jnp.float32)
+    new, dist_out = pl.pallas_call(
+        _minplus_sweep_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((s, n), jnp.int8),
+                   jax.ShapeDtypeStruct((s, n), jnp.float32)],
+        compiler_params=common.sweep_compiler_params(),
+        interpret=interpret,
+    )(f_occ.astype(jnp.int32), o_occ.astype(jnp.int32), fdist, wdense, dist)
+    return new, dist_out
+
+
+# --------------------------------------------------------------------------
+# sparse direction: edge-parallel relax over CSR lanes
+# --------------------------------------------------------------------------
+
+def _sparse_relax_kernel(f_ref, d_ref, src_ref, dst_ref, w_ref,  # VMEM in
+                         new_ref, dist_out_ref,                  # VMEM out
+                         acc_ref):                               # scratch f32
+    k = pl.program_id(0)
+    nk = pl.num_programs(0)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, jnp.inf)
+
+    src = src_ref[0, :]                       # (eb,) int32 lanes
+    dst = dst_ref[0, :]
+    w = w_ref[0, :]
+    d = d_ref[...]                            # (S, n_pad) f32
+    active = f_ref[...][:, src] != 0          # frontier gate per lane
+    cand = jnp.where(active, d[:, src] + w[None, :], jnp.inf)
+    acc_ref[...] = acc_ref[...].at[:, dst].min(cand)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        new = acc_ref[...] < d
+        new_ref[...] = new.astype(jnp.int8)
+        dist_out_ref[...] = jnp.where(new, acc_ref[...], d)
+
+
+@functools.partial(jax.jit, static_argnames=("eb", "interpret"))
+def sparse_relax_sweep(frontier: jax.Array, dist: jax.Array,
+                       src_idx: jax.Array, dst_idx: jax.Array,
+                       w_edges: jax.Array, *, eb: int = 128,
+                       interpret: bool = True):
+    """One edge-parallel (min,+) relax sweep.  frontier (S, n_pad) int8,
+    dist (S, n_pad) f32, src/dst (m_pad,) int32 CSR lanes (sentinel-
+    padded), w_edges (m_pad,) f32 (+inf padded lanes).  m_pad % eb == 0
+    (CSRGraph pads edges to multiples of 128)."""
+    s, n_pad = frontier.shape
+    m_pad = src_idx.shape[0]
+    assert dist.shape == (s, n_pad)
+    assert dst_idx.shape == (m_pad,) and w_edges.shape == (m_pad,)
+    assert m_pad % eb == 0, (m_pad, eb)
+    gk = m_pad // eb
+    # 2D (gk, eb) lane blocks: TPU block loads want >= 2D operands
+    src2 = src_idx.reshape(gk, eb)
+    dst2 = dst_idx.reshape(gk, eb)
+    w2 = w_edges.reshape(gk, eb)
+
+    full = lambda i: (0, 0)        # noqa: E731 — whole-state block per step
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(gk,),
+        in_specs=[
+            pl.BlockSpec((s, n_pad), full),
+            pl.BlockSpec((s, n_pad), full),
+            pl.BlockSpec((1, eb), lambda i: (i, 0)),
+            pl.BlockSpec((1, eb), lambda i: (i, 0)),
+            pl.BlockSpec((1, eb), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((s, n_pad), full),
+            pl.BlockSpec((s, n_pad), full),
+        ],
+        scratch_shapes=[pltpu.VMEM((s, n_pad), jnp.float32)],
+    )
+    new, dist_out = pl.pallas_call(
+        _sparse_relax_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((s, n_pad), jnp.int8),
+                   jax.ShapeDtypeStruct((s, n_pad), jnp.float32)],
+        compiler_params=common.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(frontier, dist, src2, dst2, w2)
+    return new, dist_out

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the tropical (min,+) sweep kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def minplus_sweep_ref(fdist: jnp.ndarray, wdense: jnp.ndarray,
+                      dist: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Reference fused min-plus sweep.
+
+    fdist  : (S, n) f32 — frontier-masked distances (+inf off-frontier)
+    wdense : (n, n) f32 — weight matrix, +inf non-edges
+    dist   : (S, n) f32 — current distances, +inf unreached
+
+    cand[s, j] = min_k fdist[s, k] + W[k, j]; returns
+    (new int8 — entries improved, dist f32 — min(dist, cand)).
+    """
+    cand = jnp.min(fdist[:, :, None] + wdense[None, :, :], axis=1)
+    new = cand < dist
+    return new.astype(jnp.int8), jnp.where(new, cand, dist)
+
+
+def sparse_relax_ref(frontier: jnp.ndarray, dist: jnp.ndarray,
+                     src_idx: jnp.ndarray, dst_idx: jnp.ndarray,
+                     w_edges: jnp.ndarray
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Reference edge-parallel relax: gather dist[:, src] + w over CSR
+    lanes, frontier-gated, scatter-min into dst columns."""
+    cand = jnp.where(frontier[:, src_idx] != 0,
+                     dist[:, src_idx] + w_edges[None, :], jnp.inf)
+    nd = dist.at[:, dst_idx].min(cand)
+    new = nd < dist
+    return new.astype(jnp.int8), nd

@@ -92,8 +92,12 @@ class GraphService:
         self.prepared: PreparedGraph = prepare_graph(graph)
         self.prepared_weighted: Optional[PreparedWeightedGraph] = \
             None if weights is None else prepare_weighted(graph, weights)
+        # weighted queries ride the same kernel-path resolution as the
+        # boolean engine: both semirings dispatch Pallas kernels through
+        # the registry when the config (or TPU detection) says so
         self.weighted_config = weighted_config or \
-            WeightedConfig(source_batch=min(self.config.source_batch, 128))
+            WeightedConfig(source_batch=min(self.config.source_batch, 128),
+                           use_kernel=self.config.use_kernel)
         self.queue: deque[GraphQuery] = deque()
         self.completed: List[GraphQuery] = []
 

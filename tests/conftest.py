@@ -1,0 +1,20 @@
+"""Shared test fixtures."""
+import numpy as np
+import pytest
+
+from repro.graph.csr import CSRGraph
+
+
+@pytest.fixture
+def random_weighted():
+    """Factory fixture: seeded random directed graph + non-negative f32
+    edge weights over the padded lanes — the graphs both the
+    sweep-equivalence and the kernel-equivalence suites run on."""
+    def make(n, avg_deg, seed):
+        rng = np.random.default_rng(seed)
+        m = max(1, int(n * avg_deg))
+        g = CSRGraph.from_edges(rng.integers(0, n, m),
+                                rng.integers(0, n, m), n)
+        w = rng.uniform(0.1, 5.0, g.m_pad).astype(np.float32)
+        return g, w
+    return make

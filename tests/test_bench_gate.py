@@ -1,0 +1,85 @@
+"""The benchmark regression gate (benchmarks/regression.py): hard gates
+on deterministic fields, generous median timing gates, advisory warnings
+for timing-derived booleans."""
+import copy
+
+import pytest
+
+from benchmarks.regression import MIN_GATE_SECONDS, compare
+
+
+def _aggregate(sweeps=9, median=0.05, flag=True):
+    return {
+        "schema": 2,
+        "gate": {"time_tol": 4.0, "min_gate_seconds": MIN_GATE_SECONDS},
+        "rows": [{"name": "apsp_grid_road", "us_per_call": 1.0,
+                  "derived": "x"}],
+        "bench_apsp": {"families": {"grid_road": {
+            "n_nodes": 1024, "n_edges": 3968, "n_sources": 64,
+            "sweeps": sweeps,
+            "t_auto": median * 0.9, "t_auto_median": median,
+            "auto_no_slower_than_best": flag,
+        }}},
+        "bench_weighted": {"families": {}},
+    }
+
+
+def test_identical_aggregates_pass():
+    base = _aggregate()
+    failures, warnings = compare(copy.deepcopy(base), base)
+    assert failures == [] and warnings == []
+
+
+def test_sweep_count_change_is_a_hard_failure():
+    base = _aggregate(sweeps=9)
+    cur = _aggregate(sweeps=11)
+    failures, _ = compare(cur, base)
+    assert any("sweeps" in f for f in failures)
+
+
+def test_median_regression_beyond_tolerance_fails():
+    base = _aggregate(median=0.05)
+    cur = _aggregate(median=0.05 * 5)        # 5x > 4x tolerance
+    failures, _ = compare(cur, base)
+    assert any("t_auto_median" in f and "regressed" in f for f in failures)
+
+
+def test_median_within_tolerance_passes():
+    base = _aggregate(median=0.05)
+    cur = _aggregate(median=0.05 * 2)        # 2x < 4x tolerance
+    failures, _ = compare(cur, base)
+    assert failures == []
+
+
+def test_sub_threshold_timings_never_gate():
+    base = _aggregate(median=MIN_GATE_SECONDS / 10)
+    cur = _aggregate(median=MIN_GATE_SECONDS / 2)   # 5x but micro-timing
+    failures, _ = compare(cur, base)
+    assert failures == []
+
+
+def test_tiny_baseline_cannot_hide_a_large_regression():
+    """A sub-threshold baseline must not disable the gate when the
+    current timing is real: the baseline is floored, not skipped."""
+    base = _aggregate(median=MIN_GATE_SECONDS / 2)
+    cur = _aggregate(median=1.0)
+    failures, _ = compare(cur, base)
+    assert any("t_auto_median" in f and "regressed" in f for f in failures)
+
+
+def test_missing_family_and_row_fail():
+    base = _aggregate()
+    cur = copy.deepcopy(base)
+    cur["bench_apsp"]["families"] = {}
+    cur["rows"] = []
+    failures, _ = compare(cur, base)
+    assert any("family missing" in f for f in failures)
+    assert any("missing from this run" in f for f in failures)
+
+
+def test_acceptance_boolean_flip_warns_not_fails():
+    base = _aggregate(flag=True)
+    cur = _aggregate(flag=False)
+    failures, warnings = compare(cur, base)
+    assert failures == []
+    assert any("auto_no_slower_than_best" in w for w in warnings)

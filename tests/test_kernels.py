@@ -1,17 +1,31 @@
-"""Pallas kernel validation (interpret=True): shape/dtype sweeps + full
-BFS drivers vs the pure-jnp oracle and the queue-BFS reference."""
+"""Pallas kernel validation (interpret=True): the semiring kernel registry,
+shape/dtype sweeps + full BFS drivers vs the pure-jnp oracles for the
+boolean kernels, and the tropical min-plus kernels vs their oracles, the
+dense reference forms, and scipy Dijkstra.
+
+This module runs without hypothesis (only the property-based test is
+guarded) so CI can execute it as its own fast kernel-layer job step.
+"""
 import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # property test skips; everything else runs
+    HAVE_HYPOTHESIS = False
 
 from repro.graph import generators as gen
-from repro.core import bfs_queue_numpy, pack_bits
+from repro.core import (WeightedConfig, bfs_queue_numpy, dijkstra_oracle,
+                        pack_bits, weighted_apsp)
+from repro.kernels import common, registry
 from repro.kernels.bovm import (fused_sweep, packed_pull_sweep, sweep_ref,
                                 packed_pull_ref, msbfs_kernel, msbfs_packed,
                                 pack_adjacency_pull)
+from repro.kernels.tropical import (fused_minplus_sweep, sparse_relax_sweep,
+                                    minplus_sweep_ref, sparse_relax_ref)
 
 
 def _random_state(rng, s, n, density=0.05, visited=0.2):
@@ -19,6 +33,42 @@ def _random_state(rng, s, n, density=0.05, visited=0.2):
     dist = np.where(rng.random((s, n)) < visited, 1, -1).astype(np.int32)
     return jnp.asarray(f), jnp.asarray(dist)
 
+
+# --------------------------------------------------------------------------
+# the registry: one substrate, N semirings
+# --------------------------------------------------------------------------
+
+def test_registry_has_both_semirings():
+    assert registry.available() == ("boolean", "tropical")
+    assert registry.has("boolean") and registry.has("tropical")
+    assert set(registry.get("boolean").forms) == {"push", "pull"}
+    assert set(registry.get("tropical").forms) == {"dense", "sparse"}
+
+
+def test_registry_accepts_semiring_objects():
+    from repro.core import BOOLEAN, TROPICAL
+    assert registry.get(BOOLEAN).forms["push"] is fused_sweep
+    assert registry.get(TROPICAL).forms["dense"] is fused_minplus_sweep
+    with pytest.raises(KeyError, match="min_label"):
+        registry.get("min_label")    # no kernels for label propagation
+
+
+def test_vmem_budgets_under_per_core_limit():
+    """Every registered kernel's default tiles sit well under ~16 MB."""
+    assert registry.get("boolean").vmem_bytes(form="push") \
+        < common.VMEM_BUDGET_BYTES // 4
+    assert registry.get("boolean").vmem_bytes(form="pull") \
+        < common.VMEM_BUDGET_BYTES // 4
+    assert registry.get("tropical").vmem_bytes(form="dense") \
+        < common.VMEM_BUDGET_BYTES // 4
+    assert registry.get("tropical").vmem_bytes(form="sparse", s=128,
+                                               n_pad=2048) \
+        < common.VMEM_BUDGET_BYTES // 4
+
+
+# --------------------------------------------------------------------------
+# boolean semiring kernels (paper Algs. 1/2)
+# --------------------------------------------------------------------------
 
 @pytest.mark.parametrize("s,n,bs,bn,bk", [
     (64, 256, 64, 128, 128),
@@ -57,22 +107,28 @@ def test_packed_pull_shapes(s, n, bs, bn, wk):
     np.testing.assert_array_equal(np.asarray(dist_k), np.asarray(dist_r))
 
 
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(0, 10_000), density=st.floats(0.0, 0.3),
-       visited=st.floats(0.0, 1.0))
-def test_fused_sweep_property(seed, density, visited):
-    """Property: kernel == oracle for arbitrary frontier/visited states."""
-    rng = np.random.default_rng(seed)
-    n, s = 256, 64
-    adj = jnp.asarray((rng.random((n, n)) < 0.02).astype(np.int8))
-    f = jnp.asarray((rng.random((s, n)) < density).astype(np.int8))
-    dist = jnp.asarray(
-        np.where(rng.random((s, n)) < visited, 2, -1).astype(np.int32))
-    new_k, dist_k = fused_sweep(f, adj, dist, 7, bs=64, bn=128, bk=128,
-                                interpret=True)
-    new_r, dist_r = sweep_ref(f, adj, dist, 7)
-    np.testing.assert_array_equal(np.asarray(new_k), np.asarray(new_r))
-    np.testing.assert_array_equal(np.asarray(dist_k), np.asarray(dist_r))
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000), density=st.floats(0.0, 0.3),
+           visited=st.floats(0.0, 1.0))
+    def test_fused_sweep_property(seed, density, visited):
+        """Property: kernel == oracle for arbitrary frontier/visited
+        states."""
+        rng = np.random.default_rng(seed)
+        n, s = 256, 64
+        adj = jnp.asarray((rng.random((n, n)) < 0.02).astype(np.int8))
+        f = jnp.asarray((rng.random((s, n)) < density).astype(np.int8))
+        dist = jnp.asarray(
+            np.where(rng.random((s, n)) < visited, 2, -1).astype(np.int32))
+        new_k, dist_k = fused_sweep(f, adj, dist, 7, bs=64, bn=128, bk=128,
+                                    interpret=True)
+        new_r, dist_r = sweep_ref(f, adj, dist, 7)
+        np.testing.assert_array_equal(np.asarray(new_k), np.asarray(new_r))
+        np.testing.assert_array_equal(np.asarray(dist_k), np.asarray(dist_r))
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_fused_sweep_property():
+        """Stub so the missing property coverage shows up as a skip."""
 
 
 def test_msbfs_kernel_end_to_end():
@@ -115,3 +171,139 @@ def test_tile_skip_preserves_semantics():
     new_r, dist_r = sweep_ref(jnp.asarray(f), adj, jnp.asarray(dist), 4)
     np.testing.assert_array_equal(np.asarray(new_k), np.asarray(new_r))
     np.testing.assert_array_equal(np.asarray(dist_k), np.asarray(dist_r))
+
+
+# --------------------------------------------------------------------------
+# tropical semiring kernels (paper §5, min-plus)
+# --------------------------------------------------------------------------
+
+def _random_tropical_state(rng, s, n, *, density=0.03, wdensity=0.03):
+    w = np.full((n, n), np.inf, np.float32)
+    mask = rng.random((n, n)) < wdensity
+    w[mask] = rng.uniform(0.5, 4.0, mask.sum())
+    dist = np.where(rng.random((s, n)) < 0.3,
+                    rng.uniform(0.0, 10.0, (s, n)), np.inf).astype(np.float32)
+    f = (rng.random((s, n)) < density).astype(np.int8)
+    fdist = np.where(f != 0, dist, np.inf).astype(np.float32)
+    finite = w[np.isfinite(w)]
+    w_min = np.float32(finite.min() if finite.size else np.inf)
+    return (jnp.asarray(f), jnp.asarray(fdist), jnp.asarray(w),
+            jnp.asarray(dist), w_min)
+
+
+@pytest.mark.parametrize("s,n,bs,bn,bk", [
+    (64, 256, 64, 128, 128),
+    (8, 128, 8, 128, 128),
+    (16, 384, 16, 128, 128),
+])
+def test_minplus_sweep_shapes(s, n, bs, bn, bk):
+    rng = np.random.default_rng(s * n + 1)
+    _, fdist, w, dist, w_min = _random_tropical_state(rng, s, n)
+    new_k, dist_k = fused_minplus_sweep(fdist, w, dist, w_min, bs=bs, bn=bn,
+                                        bk=bk, interpret=True)
+    new_r, dist_r = minplus_sweep_ref(fdist, w, dist)
+    np.testing.assert_array_equal(np.asarray(new_k), np.asarray(new_r))
+    np.testing.assert_array_equal(np.asarray(dist_k), np.asarray(dist_r))
+
+
+def test_minplus_settled_skip_preserves_semantics():
+    """The tropical o_occ table (Dijkstra settled bound at tile rank) must
+    be exact: tiles whose distances all sit under min_frontier + w_min are
+    skipped, and the result still matches the unskipped oracle."""
+    rng = np.random.default_rng(7)
+    s, n = 64, 256
+    w = np.full((n, n), np.inf, np.float32)
+    mask = rng.random((n, n)) < 0.05
+    w[mask] = rng.uniform(1.0, 2.0, mask.sum())
+    dist = np.full((s, n), np.inf, np.float32)
+    dist[:, :128] = rng.uniform(0.0, 0.5, (s, 128))    # settled out-tile
+    f = np.zeros((s, n), np.int8)
+    f[:, :64] = (rng.random((s, 64)) < 0.2)            # half the k-tiles dead
+    fdist = np.where(f != 0, dist, np.inf).astype(np.float32)
+    w_min = np.float32(w[np.isfinite(w)].min())
+    new_k, dist_k = fused_minplus_sweep(
+        jnp.asarray(fdist), jnp.asarray(w), jnp.asarray(dist), w_min,
+        bs=64, bn=128, bk=128, interpret=True)
+    new_r, dist_r = minplus_sweep_ref(jnp.asarray(fdist), jnp.asarray(w),
+                                      jnp.asarray(dist))
+    np.testing.assert_array_equal(np.asarray(new_k), np.asarray(new_r))
+    np.testing.assert_array_equal(np.asarray(dist_k), np.asarray(dist_r))
+
+
+@pytest.mark.parametrize("s,n_pad,eb", [(8, 128, 128), (16, 256, 128),
+                                        (32, 256, 256)])
+def test_sparse_relax_shapes(s, n_pad, eb):
+    rng = np.random.default_rng(s + n_pad)
+    n = n_pad - 1                                     # room for the sentinel
+    m = 4 * n
+    m_pad = ((m + eb - 1) // eb) * eb
+    src = np.full(m_pad, n, np.int32)
+    dst = np.full(m_pad, n, np.int32)
+    w = np.full(m_pad, np.inf, np.float32)
+    src[:m] = rng.integers(0, n, m)
+    dst[:m] = rng.integers(0, n, m)
+    w[:m] = rng.uniform(0.5, 4.0, m)
+    f = (rng.random((s, n_pad)) < 0.1).astype(np.int8)
+    dist = np.where(rng.random((s, n_pad)) < 0.4,
+                    rng.uniform(0.0, 8.0, (s, n_pad)),
+                    np.inf).astype(np.float32)
+    args = (jnp.asarray(f), jnp.asarray(dist), jnp.asarray(src),
+            jnp.asarray(dst), jnp.asarray(w))
+    new_k, dist_k = sparse_relax_sweep(*args, eb=eb, interpret=True)
+    new_r, dist_r = sparse_relax_ref(*args)
+    np.testing.assert_array_equal(np.asarray(new_k), np.asarray(new_r))
+    np.testing.assert_array_equal(np.asarray(dist_k), np.asarray(dist_r))
+
+
+# --------------------------------------------------------------------------
+# cross-semiring kernel equivalence (acceptance)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["dense", "sparse", "auto"])
+def test_weighted_kernel_path_matches_dijkstra(mode, random_weighted):
+    """weighted_apsp dispatching the tropical Pallas kernels under
+    interpret=True == scipy Dijkstra (the PR's acceptance criterion)."""
+    g, w = random_weighted(100, 3.0, 41)
+    sources = np.arange(12, dtype=np.int32)
+    ref = np.stack([dijkstra_oracle(g, w, int(s)) for s in sources])
+    res = weighted_apsp(g, w, sources,
+                        config=WeightedConfig(mode=mode, source_batch=16,
+                                              use_kernel=True))
+    np.testing.assert_allclose(np.asarray(res.dist), ref, rtol=1e-5)
+    assert int(res.direction_counts.sum()) == int(res.sweeps) > 0
+
+
+def test_weighted_kernel_matches_reference_forms(random_weighted):
+    """Kernel forms and XLA reference forms are the same sweeps: identical
+    distances AND identical sweep counts on the same graph."""
+    g, w = random_weighted(90, 4.0, 43)
+    sources = np.arange(8, dtype=np.int32)
+    for mode in ("dense", "sparse"):
+        kern = weighted_apsp(g, w, sources,
+                             config=WeightedConfig(mode=mode, source_batch=8,
+                                                   use_kernel=True))
+        ref = weighted_apsp(g, w, sources,
+                            config=WeightedConfig(mode=mode, source_batch=8,
+                                                  use_kernel=False))
+        np.testing.assert_array_equal(np.asarray(kern.dist),
+                                      np.asarray(ref.dist))
+        assert int(kern.sweeps) == int(ref.sweeps)
+
+
+def test_unit_weight_tropical_kernel_equals_boolean_kernel():
+    """(min,+) with unit weights through the tropical kernel == boolean
+    BFS through the boolean kernel — the cross-semiring contract at the
+    kernel layer."""
+    g = gen.rmat(8, 5, directed=False, seed=51)
+    n_pad = g.n_padded(128)
+    w = jnp.ones((g.m_pad,), jnp.float32)
+    sources = np.arange(16, dtype=np.int32)
+    trop = weighted_apsp(g, np.asarray(w), sources,
+                         config=WeightedConfig(mode="dense", source_batch=16,
+                                               use_kernel=True))
+    adj = jnp.asarray(np.asarray(g.to_dense_padded(n_pad)), jnp.int8)
+    boolean = msbfs_kernel(adj, jnp.asarray(sources), max_steps=n_pad,
+                           interpret=True, bs=16, bn=128, bk=128)
+    bdist = np.asarray(boolean.dist)[:, :g.n_nodes].astype(np.float64)
+    bdist = np.where(bdist < 0, np.inf, bdist)
+    np.testing.assert_allclose(np.asarray(trop.dist), bdist)

@@ -14,19 +14,11 @@ from repro.core import (EngineConfig, WeightedConfig, apsp_engine,
                         minplus_sssp, multi_source, prepare_weighted,
                         reconstruct_path, sovm_sssp, sssp, weighted_apsp)
 from repro.graph import generators as gen
-from repro.graph.csr import CSRGraph
+
 
 
 def _ref_dists(g, sources):
     return np.stack([bfs_queue_numpy(g, int(s)) for s in sources])
-
-
-def _random_weighted(n, avg_deg, seed):
-    rng = np.random.default_rng(seed)
-    m = max(1, int(n * avg_deg))
-    g = CSRGraph.from_edges(rng.integers(0, n, m), rng.integers(0, n, m), n)
-    w = rng.uniform(0.1, 5.0, g.m_pad).astype(np.float32)
-    return g, w
 
 
 # -- structural invariant: ONE sweep driver ---------------------------------
@@ -50,6 +42,37 @@ def test_every_layer_imports_the_sweep_layer():
         text = (core_dir / f"{name}.py").read_text()
         assert re.search(r"from \. import sweep as S|from \.sweep import",
                          text), name
+
+
+def test_core_reaches_kernels_only_through_the_registry():
+    """The kernel-layer contract: no core module imports a semiring
+    kernel package directly — the registry is the single seam, so adding
+    a semiring's hardware path never touches core."""
+    core_dir = Path(core.__file__).parent
+    for path in sorted(core_dir.glob("*.py")):
+        for line in path.read_text().splitlines():
+            if line.strip().startswith(("import", "from")):
+                assert "kernels.bovm" not in line, (path.name, line)
+                assert "kernels.tropical" not in line, (path.name, line)
+
+
+def test_weighted_kernel_and_reference_share_the_one_driver(random_weighted):
+    """Kernel-backed tropical forms run through the same sweep_loop: the
+    sweep counters agree with the reference path on the same graph."""
+    g, w = random_weighted(80, 3.0, 37)
+    sources = np.arange(8, dtype=np.int32)
+    kern = weighted_apsp(g, w, sources,
+                         config=WeightedConfig(mode="sparse", source_batch=8,
+                                               use_kernel=True))
+    ref = weighted_apsp(g, w, sources,
+                        config=WeightedConfig(mode="sparse", source_batch=8,
+                                              use_kernel=False))
+    assert int(kern.sweeps) == int(ref.sweeps)
+    np.testing.assert_array_equal(np.asarray(kern.direction_counts),
+                                  np.asarray(ref.direction_counts))
+    np.testing.assert_array_equal(np.asarray(kern.dist), np.asarray(ref.dist))
+    np.testing.assert_allclose(float(kern.edges_touched),
+                               float(ref.edges_touched))
 
 
 # -- cross-form equivalence (boolean semiring) ------------------------------
@@ -103,10 +126,10 @@ def test_weighted_apsp_unit_weights_equals_boolean_engine():
 # -- the weighted engine vs Dijkstra ----------------------------------------
 
 @pytest.mark.parametrize("seed", [0, 1, 2])
-def test_weighted_apsp_auto_matches_dijkstra(seed):
+def test_weighted_apsp_auto_matches_dijkstra(seed, random_weighted):
     """Acceptance: weighted_apsp auto mode == scipy Dijkstra on random
     non-negative graphs."""
-    g, w = _random_weighted(80 + 30 * seed, 3.0, seed)
+    g, w = random_weighted(80 + 30 * seed, 3.0, seed)
     sources = np.arange(min(12, g.n_nodes), dtype=np.int32)
     ref = np.stack([dijkstra_oracle(g, w, int(s)) for s in sources])
     res = weighted_apsp(g, w, sources,
@@ -116,8 +139,8 @@ def test_weighted_apsp_auto_matches_dijkstra(seed):
 
 
 @pytest.mark.parametrize("mode", ["dense", "sparse"])
-def test_weighted_fixed_forms_agree(mode):
-    g, w = _random_weighted(120, 3.0, 11)
+def test_weighted_fixed_forms_agree(mode, random_weighted):
+    g, w = random_weighted(120, 3.0, 11)
     sources = np.arange(10, dtype=np.int32)
     ref = np.stack([dijkstra_oracle(g, w, int(s)) for s in sources])
     res = weighted_apsp(g, w, sources,
@@ -128,8 +151,8 @@ def test_weighted_fixed_forms_agree(mode):
     assert counts[idx] == counts.sum() > 0
 
 
-def test_weighted_dynamic_switch_is_exact():
-    g, w = _random_weighted(100, 4.0, 13)
+def test_weighted_dynamic_switch_is_exact(random_weighted):
+    g, w = random_weighted(100, 4.0, 13)
     sources = np.arange(8, dtype=np.int32)
     ref = np.stack([dijkstra_oracle(g, w, int(s)) for s in sources])
     res = weighted_apsp(g, w, sources,
@@ -137,8 +160,8 @@ def test_weighted_dynamic_switch_is_exact():
     np.testing.assert_allclose(np.asarray(res.dist), ref, rtol=1e-5)
 
 
-def test_weighted_apsp_tiling_and_prepared_reuse():
-    g, w = _random_weighted(90, 3.0, 17)
+def test_weighted_apsp_tiling_and_prepared_reuse(random_weighted):
+    g, w = random_weighted(90, 3.0, 17)
     pw = prepare_weighted(g, w)
     sources = np.arange(21, dtype=np.int32)       # 3 tiles of 8
     res = weighted_apsp(pw, sources=sources,
@@ -192,8 +215,8 @@ def test_derive_parents_matches_inloop_sovm():
     np.testing.assert_array_equal(post, np.asarray(st.parent))
 
 
-def test_derive_parents_weighted():
-    g, w = _random_weighted(70, 3.0, 29)
+def test_derive_parents_weighted(random_weighted):
+    g, w = random_weighted(70, 3.0, 29)
     res = weighted_apsp(g, w, np.arange(8),
                         config=WeightedConfig(source_batch=8))
     parent = np.asarray(derive_parents(g, res.dist,
