@@ -1,0 +1,155 @@
+"""Sharded executor vs the fixed single-device engine — the collective
+overhead / scale-out tradeoff, per semiring, as JSON.
+
+For each family, one source tile runs through (a) the single-device
+direction-optimized engine (``apsp_engine`` / ``weighted_apsp``) and
+(b) the semiring-generic sharded executor
+(``core/distributed.py::sharded_apsp``) over a mesh built from every
+device jax can see.  Results are asserted bit-identical before timing —
+a sharded run that drifts from the single-device engine is a bug, not a
+data point.  The JSON carries the hard-gate fields (``n_nodes``,
+``n_edges``, ``n_sources``, ``sweeps`` — sweep counts are identical by
+construction, so the gate pins both paths at once) plus interleaved
+best/median timings for the regression gate.
+
+Under ``benchmarks.run`` jax is already initialized, so the mesh covers
+however many devices exist (1 on CI: the benchmark then measures pure
+shard_map overhead).  Standalone invocation forces 8 virtual host
+devices BEFORE jax initializes:
+
+    PYTHONPATH=src python -m benchmarks.bench_sharded [--quick] [--out f.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from ._timing import time_interleaved_stats
+
+
+def _families() -> Dict[str, Callable]:
+    # lazy: main() must set XLA_FLAGS before anything imports jax
+    from repro.graph import generators as gen
+    return {
+        "grid_road": lambda: gen.grid2d(32, 32),
+        "ws_citation": lambda: gen.watts_strogatz(1024, 8, 0.05, seed=3),
+    }
+
+
+QUICK_FAMILIES = ("grid_road",)
+
+
+def _mesh():
+    import jax
+    from repro.launch.mesh import make_mesh
+    n_dev = len(jax.devices())
+    if n_dev > 1 and n_dev % 2 == 0:
+        return make_mesh((n_dev // 2, 2), ("data", "model"))
+    return make_mesh((n_dev,), ("data",))
+
+
+def run(quick: bool = False, n_sources: int = 32, repeats: int = 3,
+        csv: Optional[List[str]] = None) -> Dict:
+    from repro.core import (EngineConfig, ShardedConfig, WeightedConfig,
+                            apsp_engine, prepare_graph, prepare_sharded,
+                            prepare_weighted, sharded_apsp, weighted_apsp)
+
+    mesh = _mesh()
+    rng = np.random.default_rng(0)
+    names = QUICK_FAMILIES if quick else tuple(_families())
+    families = {}
+    for name in names:
+        g = _families()[name]()
+        w = rng.uniform(0.5, 4.0, g.m_pad).astype(np.float32)
+        sources = np.arange(min(n_sources, g.n_nodes), dtype=np.int32)
+        row: Dict = {"n_nodes": g.n_nodes, "n_edges": g.n_edges,
+                     "n_sources": int(len(sources))}
+
+        pg = prepare_graph(g)
+        pw = prepare_weighted(g, w)
+        ops_b = prepare_sharded(g, mesh, config=ShardedConfig(
+            semiring="boolean", mode="dense"))
+        ops_t = prepare_sharded(g, mesh, weights=w, config=ShardedConfig(
+            semiring="tropical", mode="dense"))
+        bcfg = EngineConfig(mode="push", source_batch=32)
+        wcfg = WeightedConfig(mode="dense", source_batch=32)
+
+        # bit-identical before any timing (sweeps recorded as hard gate)
+        single_b = apsp_engine(pg, sources, config=bcfg)
+        shard_b = sharded_apsp(ops_b, sources)
+        np.testing.assert_array_equal(np.asarray(shard_b.dist),
+                                      np.asarray(single_b.dist))
+        assert int(shard_b.sweeps) == int(single_b.sweeps)
+        single_t = weighted_apsp(pw, sources=sources, config=wcfg)
+        shard_t = sharded_apsp(ops_t, sources)
+        np.testing.assert_array_equal(np.asarray(shard_t.dist),
+                                      np.asarray(single_t.dist))
+        assert int(shard_t.sweeps) == int(single_t.sweeps)
+        row["sweeps"] = int(single_b.sweeps)
+        row["sweeps_tropical"] = int(single_t.sweeps)
+
+        def go_single_boolean():
+            apsp_engine(pg, sources, config=bcfg).dist.block_until_ready()
+
+        def go_sharded_boolean():
+            sharded_apsp(ops_b, sources).dist.block_until_ready()
+
+        def go_single_tropical():
+            weighted_apsp(pw, sources=sources,
+                          config=wcfg).dist.block_until_ready()
+
+        def go_sharded_tropical():
+            sharded_apsp(ops_t, sources).dist.block_until_ready()
+
+        stats = time_interleaved_stats(
+            {"single_boolean": go_single_boolean,
+             "sharded_boolean": go_sharded_boolean,
+             "single_tropical": go_single_tropical,
+             "sharded_tropical": go_sharded_tropical}, repeats)
+        for mode, st in stats.items():
+            row[f"t_{mode}"] = st["best"]
+            row[f"t_{mode}_median"] = st["median"]
+        row["sharded_overhead_boolean"] = \
+            row["t_sharded_boolean"] / row["t_single_boolean"]
+        row["sharded_overhead_tropical"] = \
+            row["t_sharded_tropical"] / row["t_single_tropical"]
+        families[name] = row
+        if csv is not None:
+            csv.append(
+                f"sharded_{name},{row['t_sharded_boolean'] * 1e6:.1f},"
+                f"overhead_bool={row['sharded_overhead_boolean']:.2f}x")
+    import jax
+    return {
+        "benchmark": "bench_sharded",
+        "n_devices": len(jax.devices()),
+        "mesh": {k: int(v) for k, v in dict(mesh.shape).items()},
+        "families": families,
+    }
+
+
+def main() -> None:
+    if "jax" not in sys.modules:     # standalone: virtual 8-device host
+        os.environ.setdefault(
+            "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--sources", type=int, default=32)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+    result = run(quick=args.quick, n_sources=args.sources,
+                 repeats=args.repeats)
+    text = json.dumps(result, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

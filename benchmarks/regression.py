@@ -36,8 +36,9 @@ from typing import Dict, List, Tuple
 DEFAULT_TIME_TOL = 6.0        # median may grow this much before failing
 MIN_GATE_SECONDS = 5e-3       # ignore timings too small to be stable
 
-_HARD_FAMILY_FIELDS = ("n_nodes", "n_edges", "n_sources", "sweeps")
-_BENCHES = ("bench_apsp", "bench_weighted")
+_HARD_FAMILY_FIELDS = ("n_nodes", "n_edges", "n_sources", "sweeps",
+                       "sweeps_tropical")
+_BENCHES = ("bench_apsp", "bench_weighted", "bench_sharded")
 
 
 def load(path: str) -> Dict:

@@ -18,6 +18,9 @@ work:
                         Dijkstra baseline
   * bench_apsp        — direction-optimized batched APSP engine:
                         fixed-push vs fixed-pull vs auto (JSON)
+  * bench_sharded     — semiring-generic sharded executor vs the fixed
+                        single-device engine (bit-identical asserted,
+                        collective overhead measured; JSON)
 """
 from __future__ import annotations
 
@@ -30,7 +33,8 @@ import time
 import jax
 
 from . import (bench_apsp, bench_batching, bench_complexity, bench_memory,
-               bench_scaling, bench_sssp, bench_weighted, regression)
+               bench_scaling, bench_sharded, bench_sssp, bench_weighted,
+               regression)
 
 
 def _csv_rows_to_records(rows):
@@ -67,6 +71,8 @@ def main() -> None:
                                   repeats=2 if args.quick else 5, csv=rows)
     apsp = bench_apsp.run(quick=args.quick,
                           repeats=3 if args.quick else 10, csv=rows)
+    sharded = bench_sharded.run(quick=args.quick,
+                                repeats=2 if args.quick else 5, csv=rows)
     total = time.time() - t0
     print("\n".join(rows))
     print(f"# total {total:.1f}s", file=sys.stderr)
@@ -82,6 +88,7 @@ def main() -> None:
         "rows": _csv_rows_to_records(rows),
         "bench_apsp": apsp,
         "bench_weighted": weighted,
+        "bench_sharded": sharded,
     }
     if args.out:
         with open(args.out, "w") as f:

@@ -1,5 +1,12 @@
-"""Sharded DAWN APSP over virtual devices — the multi-pod execution path
-at demo scale (8 host-platform devices, mesh (2, 4)).
+"""Sharded DAWN APSP over virtual devices — the multi-device execution
+path at demo scale (8 host-platform devices).
+
+The semiring-generic sharded executor runs the SAME sweep forms as the
+single-device engines, sharded over sources (mesh axis ``data``) and
+optionally over vertices (axis ``model``, cross-shard ⊕-reduction per
+sweep), for both the boolean (unweighted BFS) and tropical ((min,+)
+weighted) semirings.  Results are bit-identical to the single-device
+engines — this script asserts it.
 
 MUST run as its own process (device count is locked at jax init):
 
@@ -12,41 +19,57 @@ os.environ.setdefault("XLA_FLAGS",
 import time  # noqa: E402
 
 import numpy as np  # noqa: E402
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
-from repro.core import bfs_queue_numpy, make_sharded_msbfs, shard_inputs \
-    # noqa: E402
+from repro.core import (EngineConfig, ShardedConfig, WeightedConfig,  # noqa: E402
+                        apsp_engine, prepare_sharded, sharded_apsp,
+                        weighted_apsp)
 from repro.graph import generators as gen  # noqa: E402
 from repro.launch.mesh import make_mesh  # noqa: E402
 
 
+def _timed(tag, fn):
+    fn()                                    # compile
+    t0 = time.perf_counter()
+    out = fn()
+    out.dist.block_until_ready()
+    print(f"{tag:42s}: {(time.perf_counter() - t0) * 1e3:7.1f} ms "
+          f"({int(out.sweeps)} sweeps)")
+    return out
+
+
 def main():
-    mesh = make_mesh((2, 4), ("data", "model"))
-    print(f"mesh: {dict(mesh.shape)} over {mesh.devices.size} devices")
+    g = gen.rmat(10, 8, directed=False, seed=7)       # n = 1024
+    w = np.random.default_rng(0).uniform(0.5, 4.0, g.m_pad).astype(
+        np.float32)
+    sources = np.arange(32, dtype=np.int32)
+    print(f"graph: n={g.n_nodes} m={g.n_edges}, {len(sources)} sources")
 
-    g = gen.rmat(10, 8, directed=False, seed=7)
-    n_pad = 1024
-    adj = jnp.asarray(np.asarray(g.to_dense_padded(n_pad)), jnp.int8)
-    sources = jnp.arange(32, dtype=jnp.int32)
+    single_b = _timed("single-device boolean (push)", lambda: apsp_engine(
+        g, sources, config=EngineConfig(mode="push", source_batch=32)))
+    single_t = _timed("single-device tropical (dense)",
+                      lambda: weighted_apsp(g, w, sources,
+                                            config=WeightedConfig(
+                                                mode="dense",
+                                                source_batch=32)))
 
-    for schedule, bitpack in [("psum", False), ("allgather", False),
-                              ("allgather", True)]:
-        fn = make_sharded_msbfs(mesh, schedule=schedule, bitpack=bitpack)
-        a, s = shard_inputs(mesh, adj, sources, schedule)
-        out = fn(a, s)                      # compile
-        t0 = time.perf_counter()
-        out = fn(a, s)
-        out.dist.block_until_ready()
-        dt = time.perf_counter() - t0
-        tag = f"{schedule}{'+bitpack' if bitpack else ''}"
-        print(f"{tag:20s}: 32-source sweep set in {dt * 1e3:.1f} ms "
-              f"({int(out.sweeps)} sweeps)")
+    for shape, axes in [((8,), ("data",)), ((4, 2), ("data", "model"))]:
+        mesh = make_mesh(shape, axes)
+        tag = "x".join(map(str, shape)) + " " + "/".join(axes)
+        ops_b = prepare_sharded(g, mesh,
+                                config=ShardedConfig(mode="dense"))
+        ops_t = prepare_sharded(g, mesh, weights=w,
+                                config=ShardedConfig(semiring="tropical",
+                                                     mode="dense"))
+        res_b = _timed(f"sharded boolean  mesh {tag}",
+                       lambda: sharded_apsp(ops_b, sources))
+        res_t = _timed(f"sharded tropical mesh {tag}",
+                       lambda: sharded_apsp(ops_t, sources))
+        assert (np.asarray(res_b.dist) == np.asarray(single_b.dist)).all()
+        assert (np.asarray(res_t.dist) == np.asarray(single_t.dist)).all()
+        assert int(res_b.sweeps) == int(single_b.sweeps)
+        assert int(res_t.sweeps) == int(single_t.sweeps)
 
-    dist = np.asarray(out.dist)[:, :g.n_nodes]
-    refs = np.stack([bfs_queue_numpy(g, i) for i in range(32)])
-    assert (dist == refs).all()
-    print("distances verified against queue-BFS oracle ✓")
+    print("sharded distances bit-identical to the single-device engines ✓")
 
 
 if __name__ == "__main__":

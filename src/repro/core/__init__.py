@@ -3,14 +3,17 @@ from .frontier import (UNREACHED, pack_bits, unpack_bits, popcount,
                        one_hot_frontier, packed_width)
 from .sweep import (Semiring, BOOLEAN, TROPICAL, MIN_LABEL, SEMIRINGS,
                     SweepState, make_state, sweep_loop, boolean_forms,
-                    tropical_forms, minlabel_form, derive_parents,
-                    time_sweep_forms, PUSH, PULL, SPARSE, DIRECTION_NAMES)
+                    tropical_forms, minlabel_form, minplus_candidates,
+                    derive_parents, time_sweep_forms, PUSH, PULL, SPARSE,
+                    DIRECTION_NAMES)
 from .bovm import bovm_sweep, bovm_msbfs, bovm_sssp, DawnState
 from .sovm import sovm_sweep, sovm_sssp, sovm_msbfs, SovmState, reconstruct_path
 from .bfs import bfs_queue_numpy, bfs_scipy, bfs_level_sync_jax
 from .sssp import sssp, multi_source, apsp, apsp_dense, SsspResult
 from .wcc import wcc, wcc_stats, WccResult
-from .distributed import make_sharded_msbfs, shard_inputs, ShardedDawnResult
+from .distributed import (ShardedConfig, ShardedOperands, ShardedApspResult,
+                          prepare_sharded, sharded_apsp,
+                          SHARDED_FORM_NAMES)
 from .weighted import (minplus_sssp, bucketed_sssp, expand_integer_weights,
                        dijkstra_oracle, WeightedResult, weighted_apsp,
                        WeightedApspResult, WeightedConfig,
@@ -33,7 +36,9 @@ __all__ = [
     "bfs_queue_numpy", "bfs_scipy", "bfs_level_sync_jax",
     "sssp", "multi_source", "apsp", "apsp_dense", "SsspResult",
     "wcc", "wcc_stats", "WccResult",
-    "make_sharded_msbfs", "shard_inputs", "ShardedDawnResult",
+    "ShardedConfig", "ShardedOperands", "ShardedApspResult",
+    "prepare_sharded", "sharded_apsp", "SHARDED_FORM_NAMES",
+    "minplus_candidates",
     "minplus_sssp", "bucketed_sssp", "expand_integer_weights",
     "dijkstra_oracle", "WeightedResult", "weighted_apsp",
     "WeightedApspResult", "WeightedConfig", "PreparedWeightedGraph",

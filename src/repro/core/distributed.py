@@ -1,130 +1,448 @@
-"""Distributed DAWN under shard_map — the multi-pod execution path.
+"""Semiring-generic sharded sweep executor — DAWN's multi-device path.
 
-Layout (DESIGN.md §6):
-  * sources sharded over the data-parallel axes (``pod`` × ``data``) —
-    APSP source blocks are embarrassingly parallel;
-  * adjacency sharded over ``model``;
-  * per-sweep collective stitches the frontier back together.
+The paper's APSP regime O(S_wcc · E_wcc) is embarrassingly parallel over
+sources, and the algebraic formulation (Burkhardt 2019's algebraic BFS;
+the paper's Eq. 9 union-as-matrix-op) makes the per-sweep relaxation
+itself shardable over vertices.  This module scales BOTH axes, for any
+semiring the sweep layer knows:
 
-Two collective schedules are provided (compared in EXPERIMENTS.md §Perf):
+  * **sources** shard over the mesh's data-parallel axes (every axis not
+    named ``model``): each shard runs the unified driver
+    (:func:`repro.core.sweep.sweep_loop`) on its ``(S/D, n_pad)`` state
+    rows with zero per-sweep communication; only the Fact-1 convergence
+    predicate is psum'd across the whole mesh so every shard executes the
+    same trip count.
+  * **vertices** (optional, mesh axis ``model``) shard the sweep operand:
+    the dense adjacency / weight matrix splits into K-row blocks (the
+    contraction dim), the CSR lanes into per-shard dst-block partitions
+    (:func:`repro.graph.partition.edge_partition_global`).  Each sweep
+    computes a *partial* candidate set from its local block and
+    cross-shard combines with the semiring's ⊕ — OR (``lax.pmax``) for
+    boolean, min (``lax.pmin``) for tropical — before the epilogue.
+    Both ⊕'s are associative, commutative and exact (f32 min does not
+    round), so sharded distances and sweep counts are **bit-identical**
+    to the single-device engines.
 
-  ``schedule="psum"``        adjacency row-sharded; every sweep psums f32
-                             partial counts of shape (S_local, n) — the
-                             naive SUMMA-style schedule, 4·S_l·n bytes/sweep.
-  ``schedule="allgather"``   adjacency column-sharded; every sweep
-                             all-gathers the *boolean* local hit block
-                             (S_l · n/C bytes), optionally bit-packed
-                             (``bitpack=True`` → S_l · n/(8C) bytes) —
-                             32·C× fewer collective bytes than psum.
-
-Both wrap the shared sweep layer: the collective matmul is just another
-sweep *form* handed to :func:`repro.core.sweep.sweep_loop`, with Fact-1
-convergence overridden by a psum so every shard agrees on termination —
-this module carries no loop of its own.
+Forms dispatch through :mod:`repro.kernels.registry` exactly as the
+single-device engines do (``use_kernel`` / ``interpret`` resolve the same
+way; the rectangular Pallas push / min-plus kernels take the K-row
+blocks directly), and this module carries no loop of its own — the ONE
+``lax.while_loop`` stays in ``core/sweep.py``; the old boolean-only
+msbfs builder and its private loop plumbing are gone.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .. import compat
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .. import compat
+from ..graph.csr import CSRGraph, _round_up
+from ..graph.partition import edge_partition_global
+from ..kernels import registry as kernel_registry
 from . import sweep as S
-from .frontier import UNREACHED, one_hot_frontier, pack_bits, unpack_bits
+from .engine import _resolve_kernel, frontier_stats
+from .frontier import (UNREACHED, one_hot_frontier, pack_bits,
+                       unpack_bits)
+
+INF = jnp.float32(jnp.inf)
+
+MODEL_AXIS = "model"
+
+DENSE, SPARSE = 0, 1
+SHARDED_FORM_NAMES = ("dense", "sparse")
 
 
-class ShardedDawnResult(NamedTuple):
-    dist: jax.Array      # (S, n) int32
-    sweeps: jax.Array    # scalar int32
+@dataclasses.dataclass(frozen=True)
+class ShardedConfig:
+    """Static sharded-executor parameters (hashable jit static arg).
+
+    ``semiring`` picks the algebra ("boolean" unweighted BFS, "tropical"
+    (min,+) APSP — weights required).  ``mode`` pins the sweep form —
+    dense (the GEMM-analogue push; the collective-friendly matrix form)
+    or sparse (edge-partitioned scatter) — or lets ``auto`` switch per
+    sweep on the same occupancy cost model the single-device engines use
+    (stats pmean'd over the data axes so every shard picks the same
+    branch).  ``use_kernel=None`` resolves to "Pallas kernels iff on
+    TPU", exactly like ``EngineConfig``/``WeightedConfig``.
+    """
+    semiring: str = "boolean"          # boolean | tropical
+    mode: str = "dense"                # dense | sparse | auto
+    use_kernel: Optional[bool] = None  # None -> Pallas kernels iff on TPU
+    max_sweeps: Optional[int] = None   # None -> n_nodes (hop bound)
+    # kernel / reference tiling knobs (mirror the single-device configs)
+    bn: int = 128
+    bk: int = 128
+    eb: int = 128
+    chunk: int = 128
+    # auto-mode cost constants (same units as the single-device engines)
+    c_dense: float = 1.0
+    c_sparse: float = 8.0
+
+    def __post_init__(self):
+        assert self.semiring in ("boolean", "tropical"), self.semiring
+        assert self.mode in ("auto",) + SHARDED_FORM_NAMES, self.mode
+
+    @property
+    def tropical(self) -> bool:
+        return self.semiring == "tropical"
+
+    @property
+    def need_dense(self) -> bool:
+        return self.mode in ("dense", "auto")
+
+    @property
+    def need_sparse(self) -> bool:
+        return self.mode in ("sparse", "auto")
+
+
+class ShardedApspResult(NamedTuple):
+    dist: jax.Array              # (S, n) int32 boolean / float32 tropical
+    sweeps: jax.Array            # scalar int32 — matches the 1-device count
+    direction_counts: jax.Array  # (2,) int32 — dense/sparse sweeps run
+
+
+@dataclasses.dataclass
+class ShardedOperands:
+    """Device-resident sharded operands, built once per (graph, mesh,
+    config) and reused across calls (the serving path caches one)."""
+    graph: CSRGraph
+    mesh: Mesh
+    config: ShardedConfig
+    n_pad: int
+    n_shards: int            # model-axis extent C (1 = no vertex sharding)
+    m_local: int             # padded CSR lanes per shard (cost model)
+    dense_op: jax.Array      # (n_pad, n_pad) adj int8 / weights f32,
+    #                          K-row-sharded over model; (1, 1) dummy
+    src_l: jax.Array         # (C, e_pad) sharded / (m_pad,) replicated
+    dst_l: jax.Array         #   global ids, CSR sentinel n
+    w_l: jax.Array           # tropical lane weights (+inf pad); (1,) dummy
+    w_min: jax.Array         # scalar f32 min finite edge weight (0 dummy)
 
 
 def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
-    return tuple(a for a in mesh.axis_names if a != "model")
+    return tuple(a for a in mesh.axis_names if a != MODEL_AXIS)
 
 
-def make_sharded_msbfs(mesh: Mesh, *, schedule: str = "allgather",
-                       bitpack: bool = True, max_steps: int = 0):
-    """Build a jitted multi-source DAWN for ``mesh``.
+def dp_extent(mesh: Mesh) -> int:
+    out = 1
+    for a in _dp_axes(mesh):
+        out *= mesh.shape[a]
+    return out
 
-    Returns fn(adj (n, n) int8, sources (S,) int32) -> ShardedDawnResult.
-    ``n`` must divide by mesh model-axis size × 32 (bitpack) and ``S`` by
-    the data-parallel extent.
-    """
-    dp = _dp_axes(mesh)
-    model_ax = "model"
 
-    adj_spec = P(model_ax, None) if schedule == "psum" else P(None, model_ax)
-    f_spec = P(dp, None)
+def prepare_sharded(g: CSRGraph, mesh: Mesh, *, weights=None,
+                    config: ShardedConfig = ShardedConfig(),
+                    dense_op: Optional[jax.Array] = None
+                    ) -> ShardedOperands:
+    """Pad, partition and device_put the operands ``config`` can
+    dispatch.  ``n_pad`` rounds to a multiple of 128·C so the K-row
+    blocks stay MXU-tileable; arbitrary (non-divisible) n and source
+    counts are handled by padding, exactly like the single-device
+    engines.  Pass ``dense_op`` (an already-materialized (n_pad, n_pad)
+    adjacency / weight matrix, e.g. ``PreparedGraph.adj`` /
+    ``PreparedWeightedGraph.wdense``) to avoid holding a second dense
+    copy when the padded size matches — the serving path does this on
+    meshes without vertex sharding."""
+    C = dict(mesh.shape).get(MODEL_AXIS, 1)
+    n_pad = g.n_padded(128 * C)
+    tropical = config.tropical
 
-    def run_local(adj_l, f0_l, dist0_l, steps):
-        n = f0_l.shape[1]
+    lanes = None
+    w_min = jnp.float32(0.0)
+    if tropical:
+        if weights is None:
+            raise ValueError("tropical sharding needs edge weights")
+        w = np.asarray(weights, np.float32)
+        assert w.ndim == 1 and w.size >= g.n_edges, \
+            f"need >= {g.n_edges} weights, got shape {w.shape}"
+        assert (w[: g.n_edges] >= 0).all(), "weights must be non-negative"
+        lanes = np.full(g.m_pad, np.inf, np.float32)
+        lanes[: g.n_edges] = w[: g.n_edges]
+        w_min = jnp.float32(lanes[: g.n_edges].min() if g.n_edges
+                            else np.inf)
 
-        def sweep_fn(f, dist, parent, step):
-            if schedule == "psum":
-                # adj_l: (n/C, n); f slice for my rows
-                row0 = jax.lax.axis_index(model_ax) * adj_l.shape[0]
-                f_rows = jax.lax.dynamic_slice_in_dim(f, row0,
-                                                      adj_l.shape[0], 1)
-                part = jax.lax.dot_general(
-                    f_rows.astype(jnp.float32), adj_l.astype(jnp.float32),
-                    (((1,), (0,)), ((), ())),
-                    preferred_element_type=jnp.float32)
-                counts = jax.lax.psum(part, model_ax)        # (S_l, n) f32
-                hits = counts > 0
+    if not config.need_dense:
+        if dense_op is not None:
+            raise ValueError(
+                "prepare_sharded: dense_op= passed but config.mode="
+                f"{config.mode!r} never dispatches the dense form — it "
+                "would be silently dropped")
+        dense_op = jnp.zeros((1, 1), jnp.float32 if tropical else jnp.int8)
+    else:
+        if dense_op is None:
+            if tropical:
+                dense_op = jnp.full((n_pad, n_pad), INF).at[
+                    g.src, g.dst].min(jnp.asarray(lanes))
             else:
-                # adj_l: (n, n/C) — local columns
-                counts = jax.lax.dot_general(
-                    f.astype(jnp.float32), adj_l.astype(jnp.float32),
-                    (((1,), (0,)), ((), ())),
-                    preferred_element_type=jnp.float32)
-                hits_l = counts > 0                          # (S_l, n/C)
-                if bitpack:
-                    packed = pack_bits(hits_l)               # (S_l, n/(32C))
-                    gathered = jax.lax.all_gather(
-                        packed, model_ax, axis=1, tiled=True)
-                    hits = unpack_bits(gathered, n)
+                dense_op = g.to_dense_padded(n_pad, dtype=jnp.int8)
+        else:
+            assert dense_op.shape == (n_pad, n_pad), \
+                (dense_op.shape, n_pad)
+        spec = P(MODEL_AXIS, None) if C > 1 else P()
+        dense_op = jax.device_put(dense_op, NamedSharding(mesh, spec))
+
+    src_l = dst_l = jnp.zeros((1,), jnp.int32)
+    w_l = jnp.zeros((1,), jnp.float32)
+    m_local = g.m_pad
+    if config.need_sparse:
+        if C > 1:
+            parts = edge_partition_global(g, C, weights=lanes)
+            lane_sharding = NamedSharding(mesh, P(MODEL_AXIS, None))
+            src_l = jax.device_put(parts["src"], lane_sharding)
+            dst_l = jax.device_put(parts["dst"], lane_sharding)
+            if tropical:
+                w_l = jax.device_put(parts["w"], lane_sharding)
+            m_local = parts["e_pad"]
+        else:
+            src_l, dst_l = g.src, g.dst
+            if tropical:
+                w_l = jnp.asarray(lanes)
+            m_local = g.m_pad
+
+    return ShardedOperands(graph=g, mesh=mesh, config=config, n_pad=n_pad,
+                           n_shards=C, m_local=m_local, dense_op=dense_op,
+                           src_l=src_l, dst_l=dst_l, w_l=w_l, w_min=w_min)
+
+
+# --------------------------------------------------------------------------
+# the shard_map'd runner (built once per mesh/config/shape, lru-cached)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _make_runner(mesh: Mesh, cfg: ShardedConfig, n_pad: int, n_real: int,
+                 m_local: int, use_kernel: bool, interpret: bool,
+                 C: int):
+    dp = _dp_axes(mesh)
+    tropical = cfg.tropical
+    vertex_sharded = C > 1
+    nk = n_pad // C
+    all_axes = tuple(mesh.axis_names)
+
+    def run_local(dense_l, src_e, dst_e, w_e, w_min, f0_l, dist0_l, steps):
+        if src_e.ndim == 2:              # (1, e_pad) model-axis block row
+            src_e, dst_e = src_e[0], dst_e[0]
+            w_e = w_e[0] if w_e.ndim == 2 else w_e
+        s_l = f0_l.shape[0]
+
+        def or_combine(new_p):
+            """Cross-shard ⊕ = OR, bit-packed: all-gather uint32 words
+            (S_l·n_pad/8 bytes/shard — 8x under an int8 pmax; OR of words
+            is exactly the union of bits) and fold them locally."""
+            packed = pack_bits(new_p != 0)                     # (S_l, W)
+            gathered = jax.lax.all_gather(packed, MODEL_AXIS)  # (C, ...)
+            words = functools.reduce(jnp.bitwise_or,
+                                     [gathered[i] for i in range(C)])
+            return unpack_bits(words, n_pad).astype(jnp.int8)
+
+        # ---- dense form: the GEMM-analogue push over the local K block
+        dense_form = None
+        if cfg.need_dense:
+            if tropical:
+                if use_kernel:
+                    K = kernel_registry.get("tropical").forms
+                    bs = min(s_l, 128)
+
+                    def partial_nd(fd_k, d):
+                        _, nd = K["dense"](fd_k, dense_l, d, w_min, bs=bs,
+                                           bn=cfg.bn, bk=cfg.bk,
+                                           interpret=interpret)
+                        return nd
                 else:
-                    hits = jax.lax.all_gather(
-                        hits_l, model_ax, axis=1, tiled=True)
-            new = hits & (dist == UNREACHED)
-            return new, jnp.where(new, step, dist), parent
+                    def partial_nd(fd_k, d):
+                        cand = S.minplus_candidates(fd_k, dense_l,
+                                                    chunk=cfg.chunk)
+                        return jnp.minimum(d, cand)
+
+                if vertex_sharded:
+                    def dense_form(f, d, p, step):
+                        k0 = jax.lax.axis_index(MODEL_AXIS) * nk
+                        f_k = jax.lax.dynamic_slice_in_dim(f, k0, nk, 1)
+                        d_k = jax.lax.dynamic_slice_in_dim(d, k0, nk, 1)
+                        fd_k = jnp.where(f_k != 0, d_k, INF)
+                        # ⊕ = min: exact cross-shard combine of partials
+                        nd = jax.lax.pmin(partial_nd(fd_k, d), MODEL_AXIS)
+                        return (nd < d).astype(jnp.int8), nd, p
+                else:
+                    def dense_form(f, d, p, step):
+                        fd = jnp.where(f != 0, d, INF)
+                        nd = partial_nd(fd, d)
+                        return (nd < d).astype(jnp.int8), nd, p
+            else:
+                push = S.boolean_forms(
+                    dense_l, jnp.zeros((1, 1), jnp.uint32),
+                    jnp.zeros((1,), jnp.int32), jnp.zeros((1,), jnp.int32),
+                    n_pad=n_pad, s=s_l, bn=cfg.bn, bk=cfg.bk,
+                    use_kernel=use_kernel, interpret=interpret)[S.PUSH]
+                if vertex_sharded:
+                    def dense_form(f, d, p, step):
+                        k0 = jax.lax.axis_index(MODEL_AXIS) * nk
+                        f_k = jax.lax.dynamic_slice_in_dim(f, k0, nk, 1)
+                        new_p, _, _ = push(f_k, d, p, step)
+                        # ⊕ = OR: any shard's partial discovery counts
+                        new = or_combine(new_p)
+                        return new, jnp.where(new != 0, step, d), p
+                else:
+                    dense_form = push
+
+        # ---- sparse form: scatter-⊕ over the shard's CSR lanes --------
+        sparse_form = None
+        if cfg.need_sparse:
+            if tropical:
+                _, sparse_c = S.tropical_forms(
+                    None, src_e, dst_e, w_e, n_pad=n_pad, chunk=cfg.chunk,
+                    use_kernel=use_kernel, interpret=interpret, eb=cfg.eb)
+                if vertex_sharded:
+                    def sparse_form(f, d, p, step):
+                        _, nd_p, _ = sparse_c(f, d, p, step)
+                        nd = jax.lax.pmin(nd_p, MODEL_AXIS)
+                        return (nd < d).astype(jnp.int8), nd, p
+                else:
+                    sparse_form = sparse_c
+            else:
+                sparse_c = S.boolean_forms(
+                    jnp.zeros((1, 1), jnp.int8),
+                    jnp.zeros((1, 1), jnp.uint32), src_e, dst_e,
+                    n_pad=n_pad, s=s_l, use_kernel=False,
+                    interpret=interpret)[S.SPARSE]
+                if vertex_sharded:
+                    def sparse_form(f, d, p, step):
+                        new_p, _, _ = sparse_c(f, d, p, step)
+                        new = or_combine(new_p)
+                        return new, jnp.where(new != 0, step, d), p
+                else:
+                    sparse_form = sparse_c
+
+        forms = (dense_form or sparse_form, sparse_form or dense_form)
+
+        choose = None
+        if cfg.mode == "auto":
+            bs = min(s_l, 128)
+
+            def choose(st: S.SweepState):
+                stats = frontier_stats(
+                    st.frontier, st.dist, bs=bs, bn=128, bk=128,
+                    unreached=jnp.isinf(st.dist) if tropical else None)
+                live = stats.live_tile_frac
+                if dp:
+                    # the lax.switch predicate must agree on every shard
+                    # or the collectives inside the forms deadlock
+                    live = jax.lax.pmean(live, dp)
+                dense_c = cfg.c_dense * s_l * nk * n_pad * live
+                sparse_c_ = jnp.float32(cfg.c_sparse * s_l * m_local)
+                return (dense_c > sparse_c_).astype(jnp.int32)
 
         def converged(new):
-            # Fact 1 must fire on every shard at once: reduce over the
-            # whole mesh so the while_loop predicates agree
-            return jax.lax.psum(jnp.any(new).astype(jnp.int32),
-                                dp + (model_ax,)) == 0
+            # Fact 1 must fire everywhere at once: reduce over the whole
+            # mesh so every shard's while_loop predicate agrees
+            return jax.lax.psum(jnp.any(new != 0).astype(jnp.int32),
+                                all_axes) == 0
 
-        st = S.sweep_loop((sweep_fn,),
-                          S.make_state(f0_l, dist0_l, n_forms=1),
-                          max_steps=steps, converged=converged)
-        return st.dist, st.step
+        st = S.sweep_loop(forms, S.make_state(f0_l, dist0_l, n_forms=2),
+                          max_steps=steps, choose=choose,
+                          forced_dir=0 if cfg.mode in ("auto", "dense")
+                          else 1,
+                          converged=converged)
+        return st.dist, st.step, st.dir_counts
+
+    row_spec = P(dp, None) if dp else P(None, None)
+    dense_spec = P(MODEL_AXIS, None) \
+        if (vertex_sharded and cfg.need_dense) else P()
+    lane_spec = P(MODEL_AXIS, None) \
+        if (vertex_sharded and cfg.need_sparse) else P()
+    w_spec = lane_spec if tropical else P()   # boolean w_l is a 1-D dummy
 
     sharded = compat.shard_map(
         run_local, mesh=mesh,
-        in_specs=(adj_spec, f_spec, f_spec, P()),
-        out_specs=(f_spec, P()),
+        in_specs=(dense_spec, lane_spec, lane_spec, w_spec, P(),
+                  row_spec, row_spec, P()),
+        out_specs=(row_spec, P(), P()),
         check_vma=False)
 
     @jax.jit
-    def msbfs(adj: jax.Array, sources: jax.Array) -> ShardedDawnResult:
-        n = adj.shape[0]
-        steps = jnp.int32(max_steps if max_steps else n)
-        f0 = one_hot_frontier(sources, n)
-        dist0 = jnp.where(f0, 0, jnp.full(f0.shape, UNREACHED))
-        dist, sweeps = sharded(adj, f0, dist0, steps)
-        return ShardedDawnResult(dist, sweeps)
+    def runner(dense_op, src_l, dst_l, w_l, w_min, sources, n_valid,
+               steps):
+        s_pad = sources.shape[0]
+        f0 = one_hot_frontier(sources, n_pad, dtype=jnp.int8)
+        row_ok = (jnp.arange(s_pad) < n_valid)[:, None]
+        f0 = jnp.where(row_ok, f0, 0)
+        if tropical:
+            # pad rows/cols stay +inf with empty frontiers: inert
+            dist0 = jnp.where(f0 != 0, 0.0, jnp.full((s_pad, n_pad), INF))
+        else:
+            dist0 = jnp.where(f0 != 0, 0,
+                              jnp.full((s_pad, n_pad), UNREACHED))
+            # pad rows/cols are born "visited" — same trick as the engine
+            dist0 = jnp.where(
+                row_ok & (jnp.arange(n_pad)[None, :] < n_real), dist0, 0)
+        return sharded(dense_op, src_l, dst_l, w_l, w_min, f0, dist0,
+                       steps)
 
-    return msbfs
+    return runner
 
 
-def shard_inputs(mesh: Mesh, adj: jax.Array, sources: jax.Array,
-                 schedule: str = "allgather"):
-    """Device-put inputs with the layout make_sharded_msbfs expects."""
-    adj_spec = P("model", None) if schedule == "psum" else P(None, "model")
-    adj = jax.device_put(adj, NamedSharding(mesh, adj_spec))
-    sources = jax.device_put(sources, NamedSharding(mesh, P(_dp_axes(mesh))))
-    return adj, sources
+# --------------------------------------------------------------------------
+# public entry point
+# --------------------------------------------------------------------------
+
+def sharded_apsp(g: Union[CSRGraph, ShardedOperands],
+                 sources: Optional[Sequence[int]] = None, *,
+                 mesh: Optional[Mesh] = None, weights=None,
+                 config: Optional[ShardedConfig] = None
+                 ) -> ShardedApspResult:
+    """Multi-device batched APSP through the semiring sweep layer.
+
+    Pass a :class:`ShardedOperands` (from :func:`prepare_sharded`) to
+    reuse device-resident operands across calls; otherwise a
+    :class:`CSRGraph` plus ``mesh`` (and ``weights`` for the tropical
+    semiring).  Sources are padded up to the data-parallel extent and
+    distances/sweep counts come back bit-identical to the single-device
+    ``apsp_engine`` / ``weighted_apsp``.
+    """
+    if isinstance(g, ShardedOperands):
+        if mesh is not None or weights is not None or config is not None:
+            raise ValueError(
+                "sharded_apsp: mesh=/weights=/config= are baked into the "
+                "prepared ShardedOperands — passing them alongside would "
+                "be silently ignored; call prepare_sharded again instead")
+        ops = g
+    else:
+        if mesh is None:
+            raise ValueError("sharded_apsp needs mesh= (or prepared "
+                             "ShardedOperands)")
+        ops = prepare_sharded(g, mesh, weights=weights,
+                              config=config or ShardedConfig())
+    graph, cfg = ops.graph, ops.config
+    n = graph.n_nodes
+    srcs = np.arange(n, dtype=np.int32) if sources is None else \
+        np.asarray(sources, np.int32)
+    if srcs.size == 0:
+        raise ValueError("sharded_apsp: empty source list")
+    if srcs.min() < 0 or srcs.max() >= n:
+        raise ValueError(
+            f"sharded_apsp: sources must be in [0, {n}), got "
+            f"[{srcs.min()}, {srcs.max()}]")
+    D = dp_extent(ops.mesh)
+    # every dp shard gets the same multiple-of-8 (kernel-tileable) row
+    # count; above one source tile the local rows must tile by 128
+    s_pad = _round_up(len(srcs), D * 8)
+    if s_pad // D > 128:
+        s_pad = _round_up(s_pad, D * 128)
+    padded = np.zeros(s_pad, np.int32)
+    padded[: len(srcs)] = srcs
+
+    use_kernel, interpret = _resolve_kernel(cfg)
+    runner = _make_runner(ops.mesh, cfg, ops.n_pad, n, ops.m_local,
+                          use_kernel, interpret, ops.n_shards)
+    dist, step, dir_counts = runner(
+        ops.dense_op, ops.src_l, ops.dst_l, ops.w_l, ops.w_min,
+        jnp.asarray(padded), jnp.int32(len(srcs)),
+        jnp.int32(cfg.max_sweeps or n))
+    return ShardedApspResult(dist=dist[: len(srcs), :n], sweeps=step,
+                             direction_counts=dir_counts)

@@ -331,7 +331,7 @@ def tropical_forms(wdense, src_idx, dst_idx, w_edges, *,
                                      bk=bk, interpret=interpret)
                 return new, nd, p
 
-        if not interpret and "sparse" in ks.interpret_only:
+        if not ks.dispatchable("sparse", interpret=interpret):
             sparse = sparse_ref    # compiled path: XLA scatter-min relax
         else:
             def sparse(f, d, p, step):
@@ -343,22 +343,33 @@ def tropical_forms(wdense, src_idx, dst_idx, w_edges, *,
 
     dense = None
     if wdense is not None:
-        c = _pull_chunk_size(n_pad, chunk)
-        blocks = wdense.T.reshape(n_pad // c, c, n_pad)  # (nb, C, n) in-wts
-
         def dense(f, d, p, step):
             fd = jnp.where(f != 0, d, INF)               # frontier rows only
-
-            def one(block):                              # (C, n)
-                return jnp.min(fd[:, None, :] + block[None], axis=-1)
-
-            cand = jnp.moveaxis(jax.lax.map(one, blocks), 0, 1)
-            cand = cand.reshape(d.shape)
+            cand = minplus_candidates(fd, wdense, chunk=chunk)
             nd = jnp.minimum(d, cand)
             new = nd < d
             return new.astype(jnp.int8), nd, p
 
     return dense, sparse_ref
+
+
+def minplus_candidates(fd: jax.Array, wdense: jax.Array, *,
+                       chunk: int = 128) -> jax.Array:
+    """The (min,+) matrix product ``cand[s, j] = min_k fd[s, k] + W[k, j]``
+    — the GEMM-analogue behind the dense tropical form, factored out so
+    the sharded executor can run it on a rectangular (K, N) row-block of
+    the weight matrix (its k-partial sweeps).  ``chunk`` destination
+    columns per ``lax.map`` step bound the (S, chunk, K) broadcast
+    intermediate."""
+    kdim, ndim = wdense.shape
+    c = _pull_chunk_size(ndim, chunk)
+    blocks = wdense.T.reshape(ndim // c, c, kdim)        # (nb, C, K) in-wts
+
+    def one(block):                                      # (C, K)
+        return jnp.min(fd[:, None, :] + block[None], axis=-1)
+
+    cand = jnp.moveaxis(jax.lax.map(one, blocks), 0, 1)
+    return cand.reshape(fd.shape[:-1] + (ndim,))
 
 
 # --------------------------------------------------------------------------

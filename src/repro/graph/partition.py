@@ -38,6 +38,59 @@ def block_dense(g: CSRGraph, r_blocks: int, c_blocks: int,
     return jnp.asarray(tiles, dtype=dtype), nb_r
 
 
+def _dst_block_partition(g: CSRGraph, n_parts: int):
+    """Shared dst-block bucketing: (src, dst, per-part selection masks,
+    n_local, common multiple-of-128 lane count).  Both partitioners below
+    derive from this so the padding/sentinel rules cannot diverge."""
+    n = g.n_nodes
+    n_local = (n + n_parts - 1) // n_parts
+    src, dst = g.edge_arrays_np()
+    part = dst // n_local
+    sels = [part == p for p in range(n_parts)]
+    e_pad = max(_round_up(int(max((int(s.sum()) for s in sels),
+                                  default=0)), 128), 128)
+    return src, dst, sels, n_local, e_pad
+
+
+def edge_partition_global(g: CSRGraph, n_parts: int, weights=None):
+    """Per-shard padded COO with GLOBAL ids — the sharded executor's
+    sparse operand (``core/distributed.py``).  Edges are partitioned by
+    destination block (scatter locality: each shard's scatter-⊕ lands in
+    one contiguous dst range), every part padded to a common
+    multiple-of-128 lane count with the CSR sentinel (src = dst = n,
+    w = +inf) so the stack is shard_map-able as-is.  Returns:
+
+      src  (P, e_pad) int32    global source ids (sentinel n)
+      dst  (P, e_pad) int32    global destination ids (sentinel n)
+      w    (P, e_pad) float32  lane weights, +inf padding (when
+                               ``weights`` — per real edge — is given)
+      e_pad, n_parts, n_nodes
+    """
+    n = g.n_nodes
+    src, dst, sels, _, e_pad = _dst_block_partition(g, n_parts)
+    src_out = np.full((n_parts, e_pad), n, dtype=np.int32)
+    dst_out = np.full((n_parts, e_pad), n, dtype=np.int32)
+    w_out = np.full((n_parts, e_pad), np.inf, dtype=np.float32)
+    w = None if weights is None else \
+        np.asarray(weights, np.float32)[: g.n_edges]
+    for p, sel in enumerate(sels):
+        k = int(sel.sum())
+        src_out[p, :k] = src[sel]
+        dst_out[p, :k] = dst[sel]
+        if w is not None:
+            w_out[p, :k] = w[sel]
+    out = {
+        "src": jnp.asarray(src_out),
+        "dst": jnp.asarray(dst_out),
+        "e_pad": e_pad,
+        "n_parts": n_parts,
+        "n_nodes": n,
+    }
+    if w is not None:
+        out["w"] = jnp.asarray(w_out)
+    return out
+
+
 def edge_partition(g: CSRGraph, n_parts: int):
     """Partition COO edges by dst block. Returns dict of stacked padded arrays:
 
@@ -46,14 +99,10 @@ def edge_partition(g: CSRGraph, n_parts: int):
       n_local (int)           nodes per part (last part padded)
     """
     n = g.n_nodes
-    n_local = (n + n_parts - 1) // n_parts
-    src, dst = g.edge_arrays_np()
-    part = dst // n_local
-    e_pad = max(_round_up(int(max((part == p).sum() for p in range(n_parts))), 128), 128)
+    src, dst, sels, n_local, e_pad = _dst_block_partition(g, n_parts)
     src_out = np.full((n_parts, e_pad), n, dtype=np.int32)
     dst_out = np.full((n_parts, e_pad), n_local, dtype=np.int32)
-    for p in range(n_parts):
-        sel = part == p
+    for p, sel in enumerate(sels):
         k = int(sel.sum())
         src_out[p, :k] = src[sel]
         dst_out[p, :k] = dst[sel] - p * n_local

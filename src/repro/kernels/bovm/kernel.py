@@ -71,12 +71,16 @@ def _fused_sweep_kernel(f_occ_ref, o_occ_ref, step_ref,        # scalar prefetch
 def fused_sweep(frontier: jax.Array, adj: jax.Array, dist: jax.Array,
                 step: jax.Array, *, bs: int = 128, bn: int = 128,
                 bk: int = 512, interpret: bool = False):
-    """One fused DAWN sweep. Shapes: frontier (S,n) int8, adj (n,n) int8,
-    dist (S,n) int32; S % bs == 0, n % bn == 0, n % bk == 0."""
-    s, n = frontier.shape
-    assert adj.shape == (n, n) and dist.shape == (s, n)
-    common.check_push_tiles(s, n, bs, bn, bk)
-    gi, gj, gk = s // bs, n // bn, n // bk
+    """One fused DAWN sweep. Shapes: frontier (S,k) int8, adj (k,n) int8,
+    dist (S,n) int32; S % bs == 0, n % bn == 0, k % bk == 0.  The square
+    single-device operand has k == n; the sharded executor dispatches a
+    K-row block (k = n/C) and OR-combines the partial across shards."""
+    s, k = frontier.shape
+    ka, n = adj.shape
+    assert ka == k and dist.shape == (s, n), \
+        (frontier.shape, adj.shape, dist.shape)
+    common.check_push_tiles(s, n, bs, bn, bk, k=k)
+    gi, gj, gk = s // bs, n // bn, k // bk
 
     # occupancy tables (computed by XLA; cheap VPU reproductions per sweep)
     f_occ = common.block_any(frontier != 0, gi, bs, gk, bk)

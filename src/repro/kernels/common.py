@@ -66,9 +66,13 @@ def block_any(mask: jax.Array, gi: int, bi: int, gj: int, bj: int
     return jnp.any(mask.reshape(gi, bi, gj, bj), axis=(1, 3))
 
 
-def check_push_tiles(s: int, n: int, bs: int, bn: int, bk: int) -> None:
-    """Tile divisibility contract shared by the push-style kernels."""
-    assert s % bs == 0 and n % bn == 0 and n % bk == 0, (s, n, bs, bn, bk)
+def check_push_tiles(s: int, n: int, bs: int, bn: int, bk: int,
+                     k: int | None = None) -> None:
+    """Tile divisibility contract shared by the push-style kernels.
+    ``k`` is the contraction dim — it equals ``n`` for the square
+    single-device operands and ``n/C`` for a sharded K-row block."""
+    k = n if k is None else k
+    assert s % bs == 0 and n % bn == 0 and k % bk == 0, (s, n, k, bs, bn, bk)
 
 
 # --------------------------------------------------------------------------

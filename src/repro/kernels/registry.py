@@ -40,6 +40,14 @@ class KernelSet:
     notes: str = ""
     interpret_only: frozenset = frozenset()
 
+    def dispatchable(self, form: str, *, interpret: bool) -> bool:
+        """May ``form`` run at this execution mode?  Interpret-only forms
+        (gather/scatter kernels validated op-by-op only) must never be
+        compiled on a real TPU backend; callers dispatch the XLA/ref form
+        instead when this returns False — the single policy seam the core
+        sweep layer consults (``sweep.tropical_forms``)."""
+        return interpret or form not in self.interpret_only
+
 
 _REGISTRY: dict = {}
 

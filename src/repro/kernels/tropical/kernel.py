@@ -100,17 +100,21 @@ def fused_minplus_sweep(fdist: jax.Array, wdense: jax.Array,
                         dist: jax.Array, w_min: jax.Array, *, bs: int = 128,
                         bn: int = 128, bk: int = 128,
                         interpret: bool = False):
-    """One fused (min,+) sweep.  Shapes: fdist (S, n) f32 — the
+    """One fused (min,+) sweep.  Shapes: fdist (S, k) f32 — the
     frontier-masked distances (``where(frontier, dist, +inf)``), wdense
-    (n, n) f32 with +inf non-edges, dist (S, n) f32; ``w_min`` the
+    (k, n) f32 with +inf non-edges (square, k == n, on the single-device
+    path; a K-row block, k = n/C, under the sharded executor — partials
+    are min-combined across shards), dist (S, n) f32; ``w_min`` the
     scalar minimum finite edge weight (traced; drives the settled-skip
-    table).  S % bs == 0, n % bn == 0, n % bk == 0.  Returns
+    table).  S % bs == 0, n % bn == 0, k % bk == 0.  Returns
     (new int8 (S, n), dist f32 (S, n)) — bit-identical to the dense
     reference form (f32 min is exact, the skips are provably inert)."""
-    s, n = fdist.shape
-    assert wdense.shape == (n, n) and dist.shape == (s, n)
-    common.check_push_tiles(s, n, bs, bn, bk)
-    gi, gj, gk = s // bs, n // bn, n // bk
+    s, k = fdist.shape
+    ka, n = wdense.shape
+    assert ka == k and dist.shape == (s, n), \
+        (fdist.shape, wdense.shape, dist.shape)
+    common.check_push_tiles(s, n, bs, bn, bk, k=k)
+    gi, gj, gk = s // bs, n // bn, k // bk
 
     f_occ = common.block_any(jnp.isfinite(fdist), gi, bs, gk, bk)
     # Dijkstra-style settled bound: row s cannot improve any target whose
@@ -169,7 +173,20 @@ def sparse_relax_sweep(frontier: jax.Array, dist: jax.Array,
     """One edge-parallel (min,+) relax sweep.  frontier (S, n_pad) int8,
     dist (S, n_pad) f32, src/dst (m_pad,) int32 CSR lanes (sentinel-
     padded), w_edges (m_pad,) f32 (+inf padded lanes).  m_pad % eb == 0
-    (CSRGraph pads edges to multiples of 128)."""
+    (CSRGraph pads edges to multiples of 128).
+
+    Interpret-only: the per-lane gathers/scatters are validated op-by-op,
+    not under Mosaic compilation, and the whole-(S, n_pad)-state VMEM
+    footprint is unbounded in n_pad — the registry marks the form
+    ``interpret_only`` and ``sweep.tropical_forms`` dispatches the XLA
+    scatter-min form instead on compiled backends.  This guard makes the
+    contract a hard error rather than a registry convention."""
+    if not interpret:
+        raise RuntimeError(
+            "sparse_relax_sweep is interpret-only (see the tropical "
+            "KernelSet's interpret_only marker): compiled TPU dispatch "
+            "must fall back to the XLA sparse form — "
+            "sweep.tropical_forms does this automatically")
     s, n_pad = frontier.shape
     m_pad = src_idx.shape[0]
     assert dist.shape == (s, n_pad)

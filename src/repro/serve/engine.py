@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.distributed import (ShardedConfig, ShardedOperands,
+                                prepare_sharded, sharded_apsp)
 from ..core.engine import EngineConfig, PreparedGraph, apsp_engine_blocks, \
     prepare_graph
 from ..core.weighted import (PreparedWeightedGraph, WeightedConfig,
@@ -75,13 +77,25 @@ class GraphService:
     additionally serve weighted queries: each flush runs at most one
     boolean and one tropical micro-batch, both through the shared semiring
     sweep layer.
+
+    Pass ``mesh`` to scale flushes past one device: micro-batches of at
+    least ``sharded_threshold`` queries route through the semiring-generic
+    sharded executor (``core/distributed.py::sharded_apsp`` — sources
+    sharded over the mesh's data axes, the operand optionally over
+    ``model``), whose results are bit-identical to the single-device
+    engines; smaller flushes stay on the single-device path where the
+    collective overhead isn't worth it.
     """
 
     def __init__(self, graph: CSRGraph, *,
                  config: Optional[EngineConfig] = None,
                  weights=None,
                  weighted_config: Optional[WeightedConfig] = None,
-                 max_batch: int = 32):
+                 max_batch: int = 32,
+                 mesh=None,
+                 sharded_threshold: int = 16,
+                 sharded_config: Optional[ShardedConfig] = None,
+                 sharded_weighted_config: Optional[ShardedConfig] = None):
         batch = max(8, ((max_batch + 7) // 8) * 8)
         if batch > 128:  # EngineConfig: above one push tile, multiple of 128
             batch = ((batch + 127) // 128) * 128
@@ -98,8 +112,46 @@ class GraphService:
         self.weighted_config = weighted_config or \
             WeightedConfig(source_batch=min(self.config.source_batch, 128),
                            use_kernel=self.config.use_kernel)
+        self.mesh = mesh
+        self.sharded_threshold = max(1, sharded_threshold)
+        self._sharded_cfg = {
+            "boolean": sharded_config or
+            ShardedConfig(semiring="boolean", mode="dense",
+                          use_kernel=self.config.use_kernel),
+            "tropical": sharded_weighted_config or
+            ShardedConfig(semiring="tropical", mode="dense",
+                          use_kernel=self.config.use_kernel),
+        }
+        self._weights = weights
+        self._sharded_ops: Dict[str, ShardedOperands] = {}
+        self.sharded_flushes = 0
         self.queue: deque[GraphQuery] = deque()
         self.completed: List[GraphQuery] = []
+
+    def _sharded_operands(self, semiring: str) -> ShardedOperands:
+        """Lazy per-semiring ShardedOperands (dense/partitioned operands
+        built and device_put once, reused every sharded flush).  On a
+        mesh without vertex sharding the padded size matches the
+        single-device operands, so those are handed over instead of
+        materializing a second O(n_pad^2) dense copy."""
+        if semiring not in self._sharded_ops:
+            cfg = self._sharded_cfg[semiring]
+            dense_op = None
+            if "model" not in self.mesh.axis_names or \
+                    dict(self.mesh.shape).get("model", 1) == 1:
+                if semiring == "boolean" and cfg.need_dense:
+                    dense_op = self.prepared.adj
+                elif semiring == "tropical" and cfg.need_dense:
+                    dense_op = self.prepared_weighted.wdense
+            self._sharded_ops[semiring] = prepare_sharded(
+                self.prepared.graph, self.mesh,
+                weights=self._weights if semiring == "tropical" else None,
+                config=cfg, dense_op=dense_op)
+        return self._sharded_ops[semiring]
+
+    def _route_sharded(self, n_queries: int) -> bool:
+        return self.mesh is not None and \
+            n_queries >= self.sharded_threshold
 
     def submit(self, query: GraphQuery):
         n = self.prepared.graph.n_nodes
@@ -127,9 +179,15 @@ class GraphService:
         weighted = [q for q in batch if q.weighted]
         if unweighted:
             sources = np.asarray([q.source for q in unweighted], np.int32)
-            (_, dist, _), = apsp_engine_blocks(self.prepared, sources,
-                                               config=self.config)
-            dist = np.asarray(dist)
+            if self._route_sharded(len(unweighted)):
+                dist = np.asarray(
+                    sharded_apsp(self._sharded_operands("boolean"),
+                                 sources).dist)
+                self.sharded_flushes += 1
+            else:
+                (_, dist, _), = apsp_engine_blocks(self.prepared, sources,
+                                                   config=self.config)
+                dist = np.asarray(dist)
             now = time.monotonic()
             for row, q in zip(dist, unweighted):
                 if q.target is None:
@@ -138,9 +196,15 @@ class GraphService:
                     q.hops = int(row[q.target])
         if weighted:
             sources = np.asarray([q.source for q in weighted], np.int32)
-            res = weighted_apsp(self.prepared_weighted, sources=sources,
-                                config=self.weighted_config)
-            dist = np.asarray(res.dist)
+            if self._route_sharded(len(weighted)):
+                dist = np.asarray(
+                    sharded_apsp(self._sharded_operands("tropical"),
+                                 sources).dist)
+                self.sharded_flushes += 1
+            else:
+                res = weighted_apsp(self.prepared_weighted, sources=sources,
+                                    config=self.weighted_config)
+                dist = np.asarray(res.dist)
             now = time.monotonic()
             for row, q in zip(dist, weighted):
                 if q.target is None:

@@ -1,0 +1,57 @@
+"""Pure-NumPy / SciPy shortest-path oracles shared by the test suite.
+
+Deliberately independent of the library under test: queue BFS (the
+paper's Alg. 3 semantics) is reimplemented here straight off the CSR
+arrays — it does NOT call ``repro.core.bfs_queue_numpy``, so a bug in
+the library's own baseline cannot mask an engine bug — and Dijkstra
+comes from ``scipy.sparse.csgraph``.  Dtypes match what the engines
+emit (int32 with -1 unreachable for BFS, float64/inf for Dijkstra) so
+tests compare with ``assert_array_equal`` / ``assert_allclose``
+directly.  Subprocess tests (``tests/test_distributed.py``) import this
+module after ``sys.path.insert(0, "tests")``.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+
+
+def bfs_dist(g, source: int) -> np.ndarray:
+    """Textbook queue BFS over the CSR arrays -> (n,) int32, -1 = unreachable."""
+    indptr = np.asarray(g.indptr)
+    indices = np.asarray(g.indices)
+    n = g.n_nodes
+    dist = np.full(n, -1, dtype=np.int32)
+    dist[source] = 0
+    q = deque([source])
+    while q:
+        u = q.popleft()
+        for e in range(indptr[u], indptr[u + 1]):
+            v = indices[e]
+            if v < n and dist[v] < 0:
+                dist[v] = dist[u] + 1
+                q.append(v)
+    return dist
+
+
+def bfs_dists(g, sources) -> np.ndarray:
+    """Stacked queue-BFS distances -> (S, n) int32."""
+    return np.stack([bfs_dist(g, int(s)) for s in np.asarray(sources)])
+
+
+def dijkstra_dist(g, weights, source: int) -> np.ndarray:
+    """scipy Dijkstra -> (n,) float64, +inf = unreachable.  ``weights``
+    may cover the padded edge lanes; only the first ``n_edges`` are read."""
+    import scipy.sparse as sp
+    import scipy.sparse.csgraph as csgraph
+    src, dst = g.edge_arrays_np()
+    mat = sp.csr_matrix((np.asarray(weights[: g.n_edges], np.float64),
+                         (src, dst)), shape=(g.n_nodes, g.n_nodes))
+    return csgraph.dijkstra(mat, indices=source, directed=True)
+
+
+def dijkstra_dists(g, weights, sources) -> np.ndarray:
+    """Stacked Dijkstra distances -> (S, n) float64."""
+    return np.stack([dijkstra_dist(g, weights, int(s))
+                     for s in np.asarray(sources)])

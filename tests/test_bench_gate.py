@@ -83,3 +83,21 @@ def test_acceptance_boolean_flip_warns_not_fails():
     failures, warnings = compare(cur, base)
     assert failures == []
     assert any("auto_no_slower_than_best" in w for w in warnings)
+
+
+def test_sharded_bench_sweeps_gate_hard():
+    """bench_sharded rides the same hard gates: a tropical sweep-count
+    change (sharded and single device are pinned to agree) fails."""
+    def agg(st=8):
+        out = _aggregate()
+        out["bench_sharded"] = {"families": {"grid_road": {
+            "n_nodes": 1024, "n_edges": 3968, "n_sources": 32,
+            "sweeps": 63, "sweeps_tropical": st,
+            "t_sharded_boolean_median": 0.4,
+        }}}
+        return out
+    failures, _ = compare(agg(st=9), agg(st=8))
+    assert any("bench_sharded" in f and "sweeps_tropical" in f
+               for f in failures)
+    failures, _ = compare(agg(), agg())
+    assert failures == []

@@ -8,6 +8,7 @@ from repro.graph import generators as gen
 from repro.core import (bovm_msbfs, bovm_sssp, bfs_queue_numpy, bfs_scipy,
                         bfs_level_sync_jax, multi_source, sssp, sovm_sssp,
                         sovm_msbfs, wcc_stats, reconstruct_path, UNREACHED)
+from oracles import bfs_dist, bfs_dists
 
 GRAPHS = {
     "grid": lambda: gen.grid2d(10, 13),
@@ -28,7 +29,7 @@ def graph(request):
 @pytest.mark.parametrize("source", [0, 3, 17])
 def test_sovm_matches_bfs(graph, source):
     source = source % graph.n_nodes
-    ref = bfs_queue_numpy(graph, source)
+    ref = bfs_dist(graph, source)
     got = np.asarray(sovm_sssp(graph, source).dist)
     np.testing.assert_array_equal(got, ref)
 
@@ -36,26 +37,28 @@ def test_sovm_matches_bfs(graph, source):
 @pytest.mark.parametrize("source", [0, 5])
 def test_bovm_matches_bfs(graph, source):
     source = source % graph.n_nodes
-    ref = bfs_queue_numpy(graph, source)
+    ref = bfs_dist(graph, source)
     got = np.asarray(bovm_sssp(graph.to_dense(), source).dist)
     np.testing.assert_array_equal(got, ref)
 
 
 def test_scipy_oracle_agrees(graph):
-    ref = bfs_queue_numpy(graph, 1)
-    sc = bfs_scipy(graph, 1)
-    np.testing.assert_array_equal(ref, sc)
+    """The library's own baselines agree with each other AND with the
+    test suite's independent oracle (tests/oracles.py)."""
+    ref = bfs_dist(graph, 1)
+    np.testing.assert_array_equal(bfs_queue_numpy(graph, 1), ref)
+    np.testing.assert_array_equal(bfs_scipy(graph, 1), ref)
 
 
 def test_level_sync_baseline(graph):
-    ref = bfs_queue_numpy(graph, 2)
+    ref = bfs_dist(graph, 2)
     got = np.asarray(bfs_level_sync_jax(graph, 2).dist)
     np.testing.assert_array_equal(got, ref)
 
 
 def test_multi_source_both_methods(graph):
     srcs = np.array([0, 1, 7, 11]) % graph.n_nodes
-    refs = np.stack([bfs_queue_numpy(graph, int(s)) for s in srcs])
+    refs = bfs_dists(graph, srcs)
     for method in ("sovm", "bovm"):
         got = np.asarray(multi_source(graph, srcs, method=method).dist)
         np.testing.assert_array_equal(got, refs, err_msg=method)
@@ -64,7 +67,7 @@ def test_multi_source_both_methods(graph):
 def test_auto_dispatch(graph):
     res = sssp(graph, 0, method="auto")
     np.testing.assert_array_equal(np.asarray(res.dist),
-                                  bfs_queue_numpy(graph, 0))
+                                  bfs_dist(graph, 0))
 
 
 def test_sweep_count_equals_eccentricity():
@@ -103,7 +106,7 @@ def test_unreachable_marked():
     g = gen.disconnected(4, 30, 3.0, seed=11)
     dist = np.asarray(sovm_sssp(g, 0).dist)
     assert (dist == UNREACHED).any()
-    ref = bfs_queue_numpy(g, 0)
+    ref = bfs_dist(g, 0)
     np.testing.assert_array_equal(dist, ref)
 
 
@@ -141,4 +144,4 @@ def test_vmapped_msbfs_consistent():
     st = sovm_msbfs(g, srcs)
     for i in range(8):
         np.testing.assert_array_equal(np.asarray(st.dist[i]),
-                                      bfs_queue_numpy(g, i))
+                                      bfs_dist(g, i))

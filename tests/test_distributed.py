@@ -20,28 +20,158 @@ def _run(body: str, devices: int = 8):
 
 
 @pytest.mark.slow
-def test_sharded_dawn_all_schedules():
+def test_sharded_apsp_boolean_bit_identical_to_single_device():
+    """Acceptance: sharded boolean APSP on an 8-virtual-device CPU mesh
+    returns bit-identical distances AND sweep counts vs the single-device
+    engine, across source-only and source×vertex meshes and all three
+    sweep modes — and matches the independent queue-BFS oracle."""
     out = _run("""
-        import numpy as np, jax, jax.numpy as jnp
+        import sys; sys.path.insert(0, "tests")
+        import numpy as np, jax
+        from oracles import bfs_dists
         from repro.graph import generators as gen
-        from repro.core import make_sharded_msbfs, shard_inputs, \\
-            bfs_queue_numpy
+        from repro.core import (EngineConfig, ShardedConfig, apsp_engine,
+                                sharded_apsp)
         from repro.launch.mesh import make_mesh
-        mesh = make_mesh((2, 4), ("data", "model"))
-        g = gen.rmat(9, 6, directed=False, seed=5)
-        adj = np.asarray(g.to_dense_padded(512))
-        sources = np.arange(8, dtype=np.int32)
-        refs = np.stack([bfs_queue_numpy(g, int(x)) for x in sources])
-        for schedule, bitpack in [("allgather", True),
-                                  ("allgather", False), ("psum", False)]:
-            fn = make_sharded_msbfs(mesh, schedule=schedule, bitpack=bitpack)
-            a, s = shard_inputs(mesh, jnp.asarray(adj, jnp.int8),
-                                jnp.asarray(sources), schedule)
-            out = fn(a, s)
-            dist = np.asarray(out.dist)[:, :g.n_nodes]
-            assert (dist == refs).all(), schedule
+        g = gen.rmat(9, 6, directed=False, seed=5)       # n = 512
+        sources = np.arange(24, dtype=np.int32)
+        single = apsp_engine(g, sources,
+                             config=EngineConfig(mode="push",
+                                                 source_batch=24))
+        np.testing.assert_array_equal(np.asarray(single.dist),
+                                      bfs_dists(g, sources))
+        for shape, axes in [((8,), ("data",)),
+                            ((2, 4), ("data", "model")),
+                            ((4, 2), ("data", "model"))]:
+            mesh = make_mesh(shape, axes)
+            for mode in ("dense", "sparse", "auto"):
+                res = sharded_apsp(g, sources, mesh=mesh,
+                                   config=ShardedConfig(mode=mode))
+                np.testing.assert_array_equal(np.asarray(res.dist),
+                                              np.asarray(single.dist))
+                assert int(res.sweeps) == int(single.sweeps), (shape, mode)
         print("OK")
     """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_apsp_tropical_bit_identical_to_single_device():
+    """Same acceptance for the tropical semiring: (min,+) APSP sharded
+    over sources and vertices is bit-identical (f32 min is exact) to
+    weighted_apsp and allclose to scipy Dijkstra."""
+    out = _run("""
+        import sys; sys.path.insert(0, "tests")
+        import numpy as np, jax
+        from oracles import dijkstra_dists
+        from repro.graph import generators as gen
+        from repro.core import (ShardedConfig, WeightedConfig,
+                                sharded_apsp, weighted_apsp)
+        from repro.launch.mesh import make_mesh
+        g = gen.rmat(9, 6, directed=False, seed=5)
+        w = np.random.default_rng(0).uniform(0.5, 4.0, g.m_pad).astype(
+            np.float32)
+        sources = np.arange(24, dtype=np.int32)
+        single = weighted_apsp(g, w, sources,
+                               config=WeightedConfig(mode="dense",
+                                                     source_batch=24))
+        np.testing.assert_allclose(np.asarray(single.dist),
+                                   dijkstra_dists(g, w, sources),
+                                   rtol=1e-5)
+        for shape, axes in [((8,), ("data",)),
+                            ((2, 4), ("data", "model"))]:
+            mesh = make_mesh(shape, axes)
+            for mode in ("dense", "sparse", "auto"):
+                res = sharded_apsp(g, sources, mesh=mesh, weights=w,
+                                   config=ShardedConfig(
+                                       semiring="tropical", mode=mode))
+                np.testing.assert_array_equal(np.asarray(res.dist),
+                                              np.asarray(single.dist))
+                assert int(res.sweeps) == int(single.sweeps), (shape, mode)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_apsp_non_divisible_padding():
+    """n=237 doesn't divide the 4-way vertex shard and S=13 doesn't
+    divide the 2-way source shard: the executor's padding must keep both
+    semirings bit-identical to the single-device engines."""
+    out = _run("""
+        import sys; sys.path.insert(0, "tests")
+        import numpy as np, jax
+        from repro.graph import generators as gen
+        from repro.core import (EngineConfig, ShardedConfig,
+                                WeightedConfig, apsp_engine, sharded_apsp,
+                                weighted_apsp)
+        from repro.launch.mesh import make_mesh
+        g = gen.erdos_renyi(237, 3.0, seed=9)
+        sources = np.arange(13, dtype=np.int32)
+        mesh = make_mesh((2, 4), ("data", "model"))
+        single = apsp_engine(g, sources,
+                             config=EngineConfig(mode="sparse",
+                                                 source_batch=16))
+        for mode in ("dense", "sparse"):
+            res = sharded_apsp(g, sources, mesh=mesh,
+                               config=ShardedConfig(mode=mode))
+            np.testing.assert_array_equal(np.asarray(res.dist),
+                                          np.asarray(single.dist))
+            assert int(res.sweeps) == int(single.sweeps), mode
+        w = np.random.default_rng(1).uniform(0.1, 5.0, g.m_pad).astype(
+            np.float32)
+        wsingle = weighted_apsp(g, w, sources,
+                                config=WeightedConfig(mode="sparse",
+                                                      source_batch=16))
+        for mode in ("dense", "sparse"):
+            res = sharded_apsp(g, sources, mesh=mesh, weights=w,
+                               config=ShardedConfig(semiring="tropical",
+                                                    mode=mode))
+            np.testing.assert_array_equal(np.asarray(res.dist),
+                                          np.asarray(wsingle.dist))
+            assert int(res.sweeps) == int(wsingle.sweeps), mode
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_kernel_path_rides_the_executor():
+    """use_kernel=True dispatches the rectangular Pallas kernels through
+    the registry inside the sharded executor (interpret mode on CPU)."""
+    out = _run("""
+        import numpy as np, jax
+        from repro.graph import generators as gen
+        from repro.core import (EngineConfig, ShardedConfig,
+                                WeightedConfig, apsp_engine, sharded_apsp,
+                                weighted_apsp)
+        from repro.launch.mesh import make_mesh
+        g = gen.rmat(7, 4, directed=False, seed=3)       # n = 128
+        sources = np.arange(8, dtype=np.int32)
+        mesh = make_mesh((2, 2), ("data", "model"))
+        single = apsp_engine(g, sources,
+                             config=EngineConfig(mode="push",
+                                                 source_batch=8))
+        res = sharded_apsp(g, sources, mesh=mesh,
+                           config=ShardedConfig(mode="dense",
+                                                use_kernel=True))
+        np.testing.assert_array_equal(np.asarray(res.dist),
+                                      np.asarray(single.dist))
+        assert int(res.sweeps) == int(single.sweeps)
+        w = np.random.default_rng(0).uniform(0.5, 4.0, g.m_pad).astype(
+            np.float32)
+        wsingle = weighted_apsp(g, w, sources,
+                                config=WeightedConfig(mode="dense",
+                                                      source_batch=8))
+        res = sharded_apsp(g, sources, mesh=mesh, weights=w,
+                           config=ShardedConfig(semiring="tropical",
+                                                mode="dense",
+                                                use_kernel=True))
+        np.testing.assert_array_equal(np.asarray(res.dist),
+                                      np.asarray(wsingle.dist))
+        assert int(res.sweeps) == int(wsingle.sweeps)
+        print("OK")
+    """, devices=4)
     assert "OK" in out
 
 

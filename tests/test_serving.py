@@ -54,3 +54,45 @@ def test_decode_active_mask_freezes_rows():
     assert int(cache["pos"][0]) == 1
     assert int(cache["pos"][1]) == 0
     assert float(jnp.abs(cache["k"][:, 1].astype(jnp.float32)).sum()) == 0.0
+
+
+def test_graph_service_routes_large_flushes_to_sharded_path():
+    """With a mesh configured, micro-batches at/above the threshold run
+    through the sharded executor; results stay oracle-exact and small
+    flushes stay on the single-device path."""
+    from oracles import bfs_dist, dijkstra_dist
+    from repro.graph import generators as gen
+    from repro.launch.mesh import make_mesh
+    from repro.serve import GraphQuery, GraphService
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    g = gen.watts_strogatz(96, 6, 0.1, seed=3)
+    w = np.random.default_rng(0).uniform(0.5, 3.0, g.m_pad).astype(
+        np.float32)
+    svc = GraphService(g, weights=w, max_batch=16, mesh=mesh,
+                       sharded_threshold=4)
+    for i in range(5):
+        svc.submit(GraphQuery(qid=i, source=i,
+                              target=None if i % 2 else 90))
+    for i in range(5, 10):
+        svc.submit(GraphQuery(qid=i, source=i, weighted=True,
+                              target=None if i % 2 else 90))
+    served = svc.flush()
+    assert len(served) == 10 and svc.sharded_flushes == 2
+    for q in served:
+        ref = dijkstra_dist(g, w, q.source) if q.weighted \
+            else bfs_dist(g, q.source)
+        if q.target is not None:
+            got = q.cost if q.weighted else q.hops
+            np.testing.assert_allclose(got, ref[q.target], rtol=1e-6)
+        elif q.weighted:
+            np.testing.assert_allclose(q.dist, ref, rtol=1e-6)
+        else:
+            np.testing.assert_array_equal(q.dist, ref)
+
+    # under the threshold the single-device path serves the flush
+    svc2 = GraphService(g, max_batch=16, mesh=mesh, sharded_threshold=8)
+    for i in range(3):
+        svc2.submit(GraphQuery(qid=i, source=i))
+    svc2.flush()
+    assert svc2.sharded_flushes == 0

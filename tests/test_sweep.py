@@ -10,15 +10,12 @@ import jax.numpy as jnp
 
 import repro.core as core
 from repro.core import (EngineConfig, WeightedConfig, apsp_engine,
-                        bfs_queue_numpy, derive_parents, dijkstra_oracle,
-                        minplus_sssp, multi_source, prepare_weighted,
-                        reconstruct_path, sovm_sssp, sssp, weighted_apsp)
+                        derive_parents, minplus_sssp, multi_source,
+                        prepare_weighted, reconstruct_path, sovm_sssp,
+                        sssp, weighted_apsp)
 from repro.graph import generators as gen
 
-
-
-def _ref_dists(g, sources):
-    return np.stack([bfs_queue_numpy(g, int(s)) for s in sources])
+from oracles import bfs_dist, bfs_dists, dijkstra_dists
 
 
 # -- structural invariant: ONE sweep driver ---------------------------------
@@ -87,10 +84,10 @@ FAMILIES = {
 
 @pytest.mark.parametrize("family", sorted(FAMILIES))
 def test_push_pull_sparse_agree_with_queue_oracle(family):
-    """push ≡ pull ≡ sparse ≡ bfs_queue_numpy on every generator family."""
+    """push ≡ pull ≡ sparse ≡ the queue-BFS oracle on every family."""
     g = FAMILIES[family]()
     sources = np.arange(min(16, g.n_nodes), dtype=np.int32)
-    ref = _ref_dists(g, sources)
+    ref = bfs_dists(g, sources)
     for mode in ("push", "pull", "sparse"):
         res = apsp_engine(g, sources,
                           config=EngineConfig(mode=mode, source_batch=16))
@@ -131,7 +128,7 @@ def test_weighted_apsp_auto_matches_dijkstra(seed, random_weighted):
     non-negative graphs."""
     g, w = random_weighted(80 + 30 * seed, 3.0, seed)
     sources = np.arange(min(12, g.n_nodes), dtype=np.int32)
-    ref = np.stack([dijkstra_oracle(g, w, int(s)) for s in sources])
+    ref = dijkstra_dists(g, w, sources)
     res = weighted_apsp(g, w, sources,
                         config=WeightedConfig(source_batch=8))
     np.testing.assert_allclose(np.asarray(res.dist), ref, rtol=1e-5)
@@ -142,7 +139,7 @@ def test_weighted_apsp_auto_matches_dijkstra(seed, random_weighted):
 def test_weighted_fixed_forms_agree(mode, random_weighted):
     g, w = random_weighted(120, 3.0, 11)
     sources = np.arange(10, dtype=np.int32)
-    ref = np.stack([dijkstra_oracle(g, w, int(s)) for s in sources])
+    ref = dijkstra_dists(g, w, sources)
     res = weighted_apsp(g, w, sources,
                         config=WeightedConfig(mode=mode, source_batch=8))
     np.testing.assert_allclose(np.asarray(res.dist), ref, rtol=1e-5)
@@ -154,7 +151,7 @@ def test_weighted_fixed_forms_agree(mode, random_weighted):
 def test_weighted_dynamic_switch_is_exact(random_weighted):
     g, w = random_weighted(100, 4.0, 13)
     sources = np.arange(8, dtype=np.int32)
-    ref = np.stack([dijkstra_oracle(g, w, int(s)) for s in sources])
+    ref = dijkstra_dists(g, w, sources)
     res = weighted_apsp(g, w, sources,
                         config=WeightedConfig(source_batch=8, dynamic=True))
     np.testing.assert_allclose(np.asarray(res.dist), ref, rtol=1e-5)
@@ -167,7 +164,7 @@ def test_weighted_apsp_tiling_and_prepared_reuse(random_weighted):
     res = weighted_apsp(pw, sources=sources,
                         config=WeightedConfig(source_batch=8))
     assert res.dist.shape == (21, g.n_nodes)
-    ref = np.stack([dijkstra_oracle(g, w, int(s)) for s in sources])
+    ref = dijkstra_dists(g, w, sources)
     np.testing.assert_allclose(np.asarray(res.dist), ref, rtol=1e-5)
     assert pw.cost_cache                           # calibration cached
 
@@ -192,7 +189,7 @@ def test_sssp_parent_roundtrip_all_methods(method):
     g = gen.watts_strogatz(150, 6, 0.1, seed=21)
     res = sssp(g, 3, method=method)
     np.testing.assert_array_equal(np.asarray(res.dist),
-                                  bfs_queue_numpy(g, 3))
+                                  bfs_dist(g, 3))
     _check_paths(g, res.dist, res.parent, 3)
 
 
@@ -200,7 +197,7 @@ def test_multi_source_auto_parent_roundtrip():
     g = gen.grid2d(9, 9)
     sources = np.arange(6, dtype=np.int32)
     res = multi_source(g, sources, method="auto")
-    ref = _ref_dists(g, sources)
+    ref = bfs_dists(g, sources)
     np.testing.assert_array_equal(np.asarray(res.dist), ref)
     parent = np.asarray(res.parent)
     for i, s in enumerate(sources):
@@ -246,7 +243,7 @@ def test_public_auto_is_engine_dispatch():
     g = gen.disconnected(4, 30, 3.0, seed=31)
     res = multi_source(g, np.arange(12), method="auto")
     np.testing.assert_array_equal(np.asarray(res.dist),
-                                  _ref_dists(g, np.arange(12)))
+                                  bfs_dists(g, np.arange(12)))
     assert np.asarray(res.parent).shape == res.dist.shape
     # eccentricity is the max productive sweep count over sources
     dm = np.asarray(res.dist)
@@ -269,15 +266,16 @@ def test_graph_service_weighted_and_unweighted_flush():
                               target=None if i % 2 else 100))
     served = svc.flush()
     assert len(served) == 12 and svc.pending() == 0
+    from oracles import dijkstra_dist
     for q in served:
         if q.weighted:
-            ref = dijkstra_oracle(g, w, q.source)
+            ref = dijkstra_dist(g, w, q.source)
             if q.target is None:
                 np.testing.assert_allclose(q.dist, ref, rtol=1e-5)
             else:
                 np.testing.assert_allclose(q.cost, ref[q.target], rtol=1e-5)
         else:
-            ref = bfs_queue_numpy(g, q.source)
+            ref = bfs_dist(g, q.source)
             if q.target is None:
                 np.testing.assert_array_equal(q.dist, ref)
             else:

@@ -2,8 +2,11 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # the seeded variants below always run
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (bucketed_sssp, closeness, dijkstra_oracle,
                         eccentricity_sample, harmonic, minplus_sssp,
@@ -12,9 +15,7 @@ from repro.graph import generators as gen
 from repro.graph.csr import CSRGraph
 
 
-@settings(max_examples=15, deadline=None)
-@given(n=st.integers(3, 60), seed=st.integers(0, 10**6))
-def test_minplus_matches_dijkstra(n, seed):
+def _check_minplus_matches_dijkstra(n, seed):
     rng = np.random.default_rng(seed)
     m = n * 3
     src = rng.integers(0, n, m)
@@ -26,10 +27,7 @@ def test_minplus_matches_dijkstra(n, seed):
     np.testing.assert_allclose(got, ref, rtol=1e-5)
 
 
-@settings(max_examples=10, deadline=None)
-@given(n=st.integers(3, 40), w_max=st.integers(1, 4),
-       seed=st.integers(0, 10**6))
-def test_bucketed_matches_dijkstra(n, w_max, seed):
+def _check_bucketed_matches_dijkstra(n, w_max, seed):
     rng = np.random.default_rng(seed)
     m = n * 3
     g = CSRGraph.from_edges(rng.integers(0, n, m), rng.integers(0, n, m), n)
@@ -37,6 +35,34 @@ def test_bucketed_matches_dijkstra(n, w_max, seed):
     ref = dijkstra_oracle(g, w.astype(np.float64), 0)
     got = np.asarray(bucketed_sssp(g, w, 0).dist)
     np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_minplus_matches_dijkstra(seed):
+    rng = np.random.default_rng(seed * 3001 + 7)
+    _check_minplus_matches_dijkstra(int(rng.integers(3, 61)),
+                                    int(rng.integers(0, 10**6)))
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_bucketed_matches_dijkstra(seed):
+    rng = np.random.default_rng(seed * 1009 + 11)
+    _check_bucketed_matches_dijkstra(int(rng.integers(3, 41)),
+                                     int(rng.integers(1, 5)),
+                                     int(rng.integers(0, 10**6)))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(3, 60), seed=st.integers(0, 10**6))
+    def test_minplus_matches_dijkstra_hypothesis(n, seed):
+        _check_minplus_matches_dijkstra(n, seed)
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(3, 40), w_max=st.integers(1, 4),
+           seed=st.integers(0, 10**6))
+    def test_bucketed_matches_dijkstra_hypothesis(n, w_max, seed):
+        _check_bucketed_matches_dijkstra(n, w_max, seed)
 
 
 def test_minplus_on_unit_weights_equals_bfs():
