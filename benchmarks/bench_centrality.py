@@ -1,0 +1,169 @@
+"""Batched centrality analytics: NumPy per-source loop vs the jit-batched
+counting engine vs the Pallas kernel path.
+
+For each family, one source set runs the full analytics bundle
+(closeness + harmonic + eccentricity + exact betweenness) three ways:
+
+  * ``loop``    — the pre-subsystem style: textbook per-source queue-BFS
+                  Brandes in NumPy (reimplemented here; the shape of the
+                  old per-block host loop taken to its sequential limit);
+  * ``batched`` — ``repro.core.centrality.centrality`` through the
+                  counting-semiring sweep engine (XLA reference forms);
+  * ``kernel``  — the same with the fused counting Pallas kernel
+                  (interpret mode off-TPU: op-by-op exactness check, not
+                  a speed claim — the relative loop-vs-batched ordering
+                  is what CI watches).
+
+The JSON carries the hard-gate fields (``n_nodes``/``n_edges``/
+``n_sources``/``sweeps``) plus ``sigma_checksum`` — the sum of
+shortest-path counts over reachable pairs, an exact integer-in-f32
+fingerprint of the counting work that the regression gate pins hard: a
+changed checksum means the algorithm counted different paths, not that
+the machine was slow.  Betweenness results are asserted equal across all
+three paths before any timing.
+
+    PYTHONPATH=src python -m benchmarks.bench_centrality [--quick] [--out f.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import CentralityConfig, centrality, prepare_graph
+from repro.graph import generators as gen
+
+from ._timing import time_interleaved_stats
+
+FAMILIES: Dict[str, Callable] = {
+    "ws_small": lambda: gen.watts_strogatz(256, 6, 0.05, seed=3),
+    "grid_road": lambda: gen.grid2d(16, 16),
+}
+
+QUICK_FAMILIES = ("ws_small",)
+
+MEASURES = ("closeness", "harmonic", "eccentricity", "betweenness")
+
+
+def _numpy_loop_centrality(g, sources) -> np.ndarray:
+    """The sequential baseline: per-source queue BFS + Brandes stack,
+    pure NumPy/Python — returns the betweenness vector (the other
+    measures fall out of the same per-source pass and are folded into
+    the same loop so the comparison is bundle-vs-bundle)."""
+    indptr = np.asarray(g.indptr)
+    indices = np.asarray(g.indices)
+    n = g.n_nodes
+    bc = np.zeros(n)
+    clo = np.zeros(len(sources))
+    har = np.zeros(len(sources))
+    ecc = np.zeros(len(sources), np.int32)
+    for i, s in enumerate(np.asarray(sources)):
+        s = int(s)
+        dist = np.full(n, -1, np.int32)
+        sigma = np.zeros(n)
+        pred: List[List[int]] = [[] for _ in range(n)]
+        dist[s] = 0
+        sigma[s] = 1.0
+        order = []
+        q = deque([s])
+        while q:
+            u = q.popleft()
+            order.append(u)
+            for e in range(indptr[u], indptr[u + 1]):
+                v = indices[e]
+                if v >= n:
+                    continue
+                if dist[v] < 0:
+                    dist[v] = dist[u] + 1
+                    q.append(v)
+                if dist[v] == dist[u] + 1:
+                    sigma[v] += sigma[u]
+                    pred[v].append(u)
+        reach = dist > 0
+        r, tot = int(reach.sum()), int(dist[reach].sum())
+        clo[i] = (r / max(n - 1, 1)) * (r / tot) if tot else 0.0
+        har[i] = (1.0 / dist[reach]).sum()
+        ecc[i] = dist.max(initial=0)
+        delta = np.zeros(n)
+        for w in reversed(order):
+            for v in pred[w]:
+                delta[v] += sigma[v] / sigma[w] * (1.0 + delta[w])
+            if w != s:
+                bc[w] += delta[w]
+    return bc
+
+
+def run(quick: bool = False, n_sources: int = 32, repeats: int = 3,
+        csv: Optional[List[str]] = None) -> Dict:
+    names = QUICK_FAMILIES if quick else tuple(FAMILIES)
+    families = {}
+    for name in names:
+        g = FAMILIES[name]()
+        pg = prepare_graph(g)
+        sources = np.arange(min(n_sources, g.n_nodes), dtype=np.int32)
+        row: Dict = {"n_nodes": g.n_nodes, "n_edges": g.n_edges,
+                     "n_sources": int(len(sources))}
+        cfg = CentralityConfig(source_batch=32, use_kernel=False)
+        cfg_k = CentralityConfig(source_batch=32, use_kernel=True)
+
+        # exactness across all three paths before any timing
+        res_b = centrality(pg, sources, measures=MEASURES, config=cfg)
+        res_k = centrality(pg, sources, measures=MEASURES, config=cfg_k)
+        bc_loop = _numpy_loop_centrality(g, sources)
+        np.testing.assert_allclose(res_b.betweenness, bc_loop,
+                                   rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(res_k.betweenness, res_b.betweenness,
+                                   rtol=1e-6, atol=1e-9)
+        assert res_k.sigma_checksum == res_b.sigma_checksum
+        row["sweeps"] = int(res_b.sweeps)
+        row["sigma_checksum"] = float(res_b.sigma_checksum)
+
+        def go_loop():
+            _numpy_loop_centrality(g, sources)
+
+        def go_batched():
+            centrality(pg, sources, measures=MEASURES, config=cfg)
+
+        def go_kernel():
+            centrality(pg, sources, measures=MEASURES, config=cfg_k)
+
+        stats = time_interleaved_stats(
+            {"loop": go_loop, "batched": go_batched,
+             "kernel": go_kernel}, repeats)
+        for mode, st in stats.items():
+            row[f"t_{mode}"] = st["best"]
+            row[f"t_{mode}_median"] = st["median"]
+        row["batched_speedup_vs_loop"] = row["t_loop"] / row["t_batched"]
+        families[name] = row
+        if csv is not None:
+            csv.append(
+                f"centrality_{name},{row['t_batched'] * 1e6:.1f},"
+                f"batched_vs_loop={row['batched_speedup_vs_loop']:.2f}x")
+    return {
+        "benchmark": "bench_centrality",
+        "measures": list(MEASURES),
+        "families": families,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--sources", type=int, default=32)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+    result = run(quick=args.quick, n_sources=args.sources,
+                 repeats=args.repeats)
+    text = json.dumps(result, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

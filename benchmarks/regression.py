@@ -6,9 +6,11 @@ Two classes of checks, calibrated to what is and is not deterministic:
 
   * **hard gates** — fields that are exact given the seeds: the set of
     benchmark rows (nothing silently dropped), per-family graph shapes
-    (``n_nodes``/``n_edges``) and **sweep counts** (the Fact-1 iteration
-    counts; any change means the algorithm did different work, not that
-    the machine was slow).  A mismatch always fails.
+    (``n_nodes``/``n_edges``), **sweep counts** (the Fact-1 iteration
+    counts) and the counting semiring's **sigma checksum** (the sum of
+    shortest-path counts — exact integers in f32; any change means the
+    algorithm did different work, not that the machine was slow).  A
+    mismatch always fails.
   * **timing gates** — per-family interleaved best-of-N *medians*
     (``t_<mode>_median`` from ``_timing.time_interleaved_stats``).  Wall
     clock is ±30% noisy on shared runners and the baseline may have been
@@ -37,8 +39,9 @@ DEFAULT_TIME_TOL = 6.0        # median may grow this much before failing
 MIN_GATE_SECONDS = 5e-3       # ignore timings too small to be stable
 
 _HARD_FAMILY_FIELDS = ("n_nodes", "n_edges", "n_sources", "sweeps",
-                       "sweeps_tropical")
-_BENCHES = ("bench_apsp", "bench_weighted", "bench_sharded")
+                       "sweeps_tropical", "sigma_checksum")
+_BENCHES = ("bench_apsp", "bench_weighted", "bench_sharded",
+            "bench_centrality")
 
 
 def load(path: str) -> Dict:

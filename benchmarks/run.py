@@ -21,6 +21,10 @@ work:
   * bench_sharded     — semiring-generic sharded executor vs the fixed
                         single-device engine (bit-identical asserted,
                         collective overhead measured; JSON)
+  * bench_centrality  — counting-semiring analytics bundle: NumPy
+                        per-source loop vs jit-batched vs Pallas kernel
+                        (betweenness asserted equal, sigma checksum
+                        recorded for the hard gate; JSON)
 """
 from __future__ import annotations
 
@@ -32,9 +36,9 @@ import time
 
 import jax
 
-from . import (bench_apsp, bench_batching, bench_complexity, bench_memory,
-               bench_scaling, bench_sharded, bench_sssp, bench_weighted,
-               regression)
+from . import (bench_apsp, bench_batching, bench_centrality,
+               bench_complexity, bench_memory, bench_scaling, bench_sharded,
+               bench_sssp, bench_weighted, regression)
 
 
 def _csv_rows_to_records(rows):
@@ -73,6 +77,9 @@ def main() -> None:
                           repeats=3 if args.quick else 10, csv=rows)
     sharded = bench_sharded.run(quick=args.quick,
                                 repeats=2 if args.quick else 5, csv=rows)
+    central = bench_centrality.run(quick=args.quick,
+                                   repeats=2 if args.quick else 3,
+                                   csv=rows)
     total = time.time() - t0
     print("\n".join(rows))
     print(f"# total {total:.1f}s", file=sys.stderr)
@@ -89,6 +96,7 @@ def main() -> None:
         "bench_apsp": apsp,
         "bench_weighted": weighted,
         "bench_sharded": sharded,
+        "bench_centrality": central,
     }
     if args.out:
         with open(args.out, "w") as f:

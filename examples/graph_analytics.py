@@ -1,18 +1,21 @@
-"""End-to-end graph analytics driver built on DAWN.
+"""End-to-end graph analytics driver built on DAWN's batched subsystems.
 
 Computes, for any generated or on-disk graph:
-  connectivity (WCC sizes) → per-component BFS distances (blocked APSP) →
-  eccentricity / diameter estimates → sample shortest paths.
+  connectivity (WCC sizes) → one batched centrality run over the counting
+  semiring (closeness / harmonic / exact eccentricity + radius/diameter /
+  exact Brandes betweenness) → sample shortest paths → weighted APSP
+  through the tropical engine.
 
     PYTHONPATH=src python examples/graph_analytics.py --graph rmat \
-        --scale 12 --sources 128
+        --scale 10 --sources 128
 """
 import argparse
 import time
 
 import numpy as np
 
-from repro.core import multi_source, reconstruct_path, wcc_stats
+from repro.core import (CentralityConfig, centrality, reconstruct_path,
+                        sssp, wcc_stats, weighted_apsp)
 from repro.graph import generators as gen
 from repro.graph.io import load_edgelist
 
@@ -22,8 +25,12 @@ def main():
     ap.add_argument("--graph", default="rmat",
                     choices=["rmat", "grid", "ws", "disconnected", "file"])
     ap.add_argument("--path", help="edge list path for --graph file")
-    ap.add_argument("--scale", type=int, default=11)
-    ap.add_argument("--sources", type=int, default=64)
+    ap.add_argument("--scale", type=int, default=10)
+    ap.add_argument("--sources", type=int, default=128,
+                    help="sources for the centrality run (restricting "
+                         "them gives the standard source-sampled "
+                         "betweenness estimator; pass 0 for all nodes "
+                         "= exact)")
     args = ap.parse_args()
 
     if args.graph == "rmat":
@@ -45,36 +52,50 @@ def main():
           f"S_wcc={stats['S_wcc']} E_wcc={stats['E_wcc']} "
           f"({time.perf_counter() - t0:.2f}s)")
 
-    rng = np.random.default_rng(0)
-    sources = rng.integers(0, g.n_nodes, args.sources).astype(np.int32)
+    # ONE batched run over the counting semiring produces every measure:
+    # the forward sweeps carry (dist, sigma), the Brandes backward pass
+    # accumulates dependencies over the recorded levels, and the
+    # distance reductions fall out of the same dist rows.
+    n_src = g.n_nodes if args.sources in (0, None) else \
+        min(args.sources, g.n_nodes)
+    sources = np.arange(n_src, dtype=np.int32)
     t0 = time.perf_counter()
-    res = multi_source(g, sources)
-    dist = np.asarray(res.dist)
+    res = centrality(g, sources, config=CentralityConfig(source_batch=128))
     dt = time.perf_counter() - t0
-    ecc = np.where((dist >= 0).any(1), dist.max(1, initial=0), 0)
-    print(f"{args.sources}-source BFS in {dt:.2f}s "
-          f"({dt / args.sources * 1e3:.1f} ms/source)")
-    print(f"eccentricity: min={ecc.min()} mean={ecc.mean():.1f} "
-          f"max={ecc.max()} (diameter ≥ {ecc.max()})")
+    exact = "exact" if n_src == g.n_nodes else f"{n_src}-source estimate"
+    print(f"centrality ({exact}) in {dt:.2f}s "
+          f"({dt / n_src * 1e3:.1f} ms/source, {res.sweeps} sweeps)")
+    print(f"  eccentricity: radius={res.radius} diameter={res.diameter} "
+          f"mean={res.eccentricity.mean():.1f}")
+    top = np.argsort(res.betweenness)[-5:][::-1]
+    print("  top betweenness:",
+          [(int(v), round(float(res.betweenness[v]), 1)) for v in top])
+    top_c = np.argsort(res.closeness)[-3:][::-1]
+    print("  top closeness:  ",
+          [(int(sources[v]), round(float(res.closeness[v]), 4))
+           for v in top_c])
+    print(f"  harmonic: mean={res.harmonic.mean():.2f} "
+          f"max={res.harmonic.max():.2f}")
 
     # sample path reconstruction — every SsspResult carries a parent tree
-    from repro.core import sssp
-    res0 = sssp(g, int(sources[0]))
+    res0 = sssp(g, int(top[0]))
     d0 = np.asarray(res0.dist)
     far = int(np.argmax(d0))
-    path = reconstruct_path(res0.parent, int(sources[0]), far, g.n_nodes)
-    print(f"sample shortest path {sources[0]} → {far} "
+    path = reconstruct_path(res0.parent, int(top[0]), far, g.n_nodes)
+    print(f"sample shortest path {int(top[0])} → {far} "
           f"(len {d0[far]}): {path[:12]}{'...' if len(path) > 12 else ''}")
 
-    # weighted analytics ride the same engine through the tropical semiring
-    from repro.core import weighted_apsp
+    # weighted analytics ride the same sweep core through the tropical
+    # semiring
+    rng = np.random.default_rng(0)
     w = rng.uniform(0.5, 4.0, g.m_pad).astype(np.float32)
     t0 = time.perf_counter()
     wres = weighted_apsp(g, w, sources[: min(32, len(sources))])
     wd = np.asarray(wres.dist)
+    forms = dict(zip(("dense", "sparse"),
+                     np.asarray(wres.direction_counts).tolist()))
     print(f"weighted APSP ({wd.shape[0]} sources) in "
-          f"{time.perf_counter() - t0:.2f}s — forms "
-          f"{dict(zip(('dense', 'sparse'), np.asarray(wres.direction_counts).tolist()))}, "
+          f"{time.perf_counter() - t0:.2f}s — forms {forms}, "
           f"mean finite dist {wd[np.isfinite(wd)].mean():.2f}")
 
 

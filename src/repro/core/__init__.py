@@ -1,9 +1,10 @@
 """DAWN core — matrix-operation shortest paths (the paper's contribution)."""
 from .frontier import (UNREACHED, pack_bits, unpack_bits, popcount,
                        one_hot_frontier, packed_width)
-from .sweep import (Semiring, BOOLEAN, TROPICAL, MIN_LABEL, SEMIRINGS,
-                    SweepState, make_state, sweep_loop, boolean_forms,
-                    tropical_forms, minlabel_form, minplus_candidates,
+from .sweep import (Semiring, BOOLEAN, TROPICAL, MIN_LABEL, COUNTING,
+                    SEMIRINGS, SweepState, make_state, sweep_loop,
+                    boolean_forms, tropical_forms, minlabel_form,
+                    counting_forms, minplus_candidates,
                     derive_parents, time_sweep_forms, PUSH, PULL, SPARSE,
                     DIRECTION_NAMES)
 from .bovm import bovm_sweep, bovm_msbfs, bovm_sssp, DawnState
@@ -19,7 +20,12 @@ from .weighted import (minplus_sssp, bucketed_sssp, expand_integer_weights,
                        WeightedApspResult, WeightedConfig,
                        PreparedWeightedGraph, prepare_weighted,
                        measure_weighted_costs, WEIGHTED_FORM_NAMES)
-from .centrality import closeness, harmonic, eccentricity_sample
+from .centrality import (CentralityConfig, CentralityResult, CountingResult,
+                         COUNTING_FORM_NAMES, MEASURES, betweenness,
+                         brandes_dependencies, centrality, closeness,
+                         counting_apsp, counting_apsp_blocks, eccentricity,
+                         eccentricity_sample, harmonic,
+                         measure_counting_costs)
 from .engine import (EngineConfig, SweepStats, ApspResult, PreparedGraph,
                      prepare_graph, frontier_stats, sweep_costs,
                      choose_direction, measure_sweep_costs, apsp_engine,
@@ -28,9 +34,10 @@ from .engine import (EngineConfig, SweepStats, ApspResult, PreparedGraph,
 __all__ = [
     "UNREACHED", "pack_bits", "unpack_bits", "popcount", "one_hot_frontier",
     "packed_width",
-    "Semiring", "BOOLEAN", "TROPICAL", "MIN_LABEL", "SEMIRINGS",
+    "Semiring", "BOOLEAN", "TROPICAL", "MIN_LABEL", "COUNTING", "SEMIRINGS",
     "SweepState", "make_state", "sweep_loop", "boolean_forms",
-    "tropical_forms", "minlabel_form", "derive_parents", "time_sweep_forms",
+    "tropical_forms", "minlabel_form", "counting_forms", "derive_parents",
+    "time_sweep_forms",
     "bovm_sweep", "bovm_msbfs", "bovm_sssp", "DawnState",
     "sovm_sweep", "sovm_sssp", "sovm_msbfs", "SovmState", "reconstruct_path",
     "bfs_queue_numpy", "bfs_scipy", "bfs_level_sync_jax",
@@ -43,6 +50,10 @@ __all__ = [
     "dijkstra_oracle", "WeightedResult", "weighted_apsp",
     "WeightedApspResult", "WeightedConfig", "PreparedWeightedGraph",
     "prepare_weighted", "measure_weighted_costs", "WEIGHTED_FORM_NAMES",
+    "CentralityConfig", "CentralityResult", "CountingResult",
+    "COUNTING_FORM_NAMES", "MEASURES", "betweenness", "brandes_dependencies",
+    "centrality", "counting_apsp", "counting_apsp_blocks", "eccentricity",
+    "measure_counting_costs",
     "closeness", "harmonic", "eccentricity_sample",
     "PUSH", "PULL", "SPARSE", "DIRECTION_NAMES", "EngineConfig",
     "SweepStats", "ApspResult", "PreparedGraph", "prepare_graph",

@@ -18,10 +18,14 @@ semiring the sweep layer knows:
     (:func:`repro.graph.partition.edge_partition_global`).  Each sweep
     computes a *partial* candidate set from its local block and
     cross-shard combines with the semiring's ⊕ — OR (``lax.pmax``) for
-    boolean, min (``lax.pmin``) for tropical — before the epilogue.
-    Both ⊕'s are associative, commutative and exact (f32 min does not
-    round), so sharded distances and sweep counts are **bit-identical**
-    to the single-device engines.
+    boolean, min (``lax.pmin``) for tropical, masked ADD (``lax.psum``
+    of gated partial path counts) for the counting semiring — before
+    the epilogue.  The idempotent ⊕'s (OR, min) may fold epilogue
+    outputs; the non-idempotent counting ⊕ must sum *gated partials*
+    instead so every shortest path is counted exactly once.  All are
+    associative, commutative and exact (f32 min does not round; f32
+    adds of path counts are exact under 2^24), so sharded distances
+    and sweep counts are **bit-identical** to the single-device engines.
 
 Forms dispatch through :mod:`repro.kernels.registry` exactly as the
 single-device engines do (``use_kernel`` / ``interpret`` resolve the same
@@ -64,7 +68,9 @@ class ShardedConfig:
     """Static sharded-executor parameters (hashable jit static arg).
 
     ``semiring`` picks the algebra ("boolean" unweighted BFS, "tropical"
-    (min,+) APSP — weights required).  ``mode`` pins the sweep form —
+    (min,+) APSP — weights required, "counting" shortest-path counting
+    with (dist, sigma) state for the centrality subsystem).  ``mode``
+    pins the sweep form —
     dense (the GEMM-analogue push; the collective-friendly matrix form)
     or sparse (edge-partitioned scatter) — or lets ``auto`` switch per
     sweep on the same occupancy cost model the single-device engines use
@@ -72,7 +78,7 @@ class ShardedConfig:
     branch).  ``use_kernel=None`` resolves to "Pallas kernels iff on
     TPU", exactly like ``EngineConfig``/``WeightedConfig``.
     """
-    semiring: str = "boolean"          # boolean | tropical
+    semiring: str = "boolean"          # boolean | tropical | counting
     mode: str = "dense"                # dense | sparse | auto
     use_kernel: Optional[bool] = None  # None -> Pallas kernels iff on TPU
     max_sweeps: Optional[int] = None   # None -> n_nodes (hop bound)
@@ -86,12 +92,17 @@ class ShardedConfig:
     c_sparse: float = 8.0
 
     def __post_init__(self):
-        assert self.semiring in ("boolean", "tropical"), self.semiring
+        assert self.semiring in ("boolean", "tropical", "counting"), \
+            self.semiring
         assert self.mode in ("auto",) + SHARDED_FORM_NAMES, self.mode
 
     @property
     def tropical(self) -> bool:
         return self.semiring == "tropical"
+
+    @property
+    def counting(self) -> bool:
+        return self.semiring == "counting"
 
     @property
     def need_dense(self) -> bool:
@@ -106,6 +117,8 @@ class ShardedApspResult(NamedTuple):
     dist: jax.Array              # (S, n) int32 boolean / float32 tropical
     sweeps: jax.Array            # scalar int32 — matches the 1-device count
     direction_counts: jax.Array  # (2,) int32 — dense/sparse sweeps run
+    # (S, n) f32 shortest-path counts — counting semiring only, else None
+    sigma: Optional[jax.Array] = None
 
 
 @dataclasses.dataclass
@@ -221,11 +234,13 @@ def _make_runner(mesh: Mesh, cfg: ShardedConfig, n_pad: int, n_real: int,
                  C: int):
     dp = _dp_axes(mesh)
     tropical = cfg.tropical
+    counting = cfg.counting
     vertex_sharded = C > 1
     nk = n_pad // C
     all_axes = tuple(mesh.axis_names)
 
-    def run_local(dense_l, src_e, dst_e, w_e, w_min, f0_l, dist0_l, steps):
+    def run_local(dense_l, src_e, dst_e, w_e, w_min, f0_l, dist0_l,
+                  sigma0_l, steps):
         if src_e.ndim == 2:              # (1, e_pad) model-axis block row
             src_e, dst_e = src_e[0], dst_e[0]
             w_e = w_e[0] if w_e.ndim == 2 else w_e
@@ -241,10 +256,61 @@ def _make_runner(mesh: Mesh, cfg: ShardedConfig, n_pad: int, n_real: int,
                                      [gathered[i] for i in range(C)])
             return unpack_bits(words, n_pad).astype(jnp.int8)
 
+        def counting_epilogue(cand_p, d, sg, step):
+            """⊕ = masked ADD, the non-idempotent cross-shard combine:
+            each shard's candidate counts are gated to zero where they
+            cannot contribute, then SUMMED (psum) so every shortest path
+            is counted exactly once — folding epilogue *outputs* (the
+            OR/min trick) would double-gate the counts."""
+            if vertex_sharded:
+                cand = jax.lax.psum(cand_p, MODEL_AXIS)
+            else:
+                cand = cand_p
+            new = (cand > 0) & (d == UNREACHED)
+            return (new.astype(jnp.int8),
+                    (jnp.where(new, step, d), jnp.where(new, cand, sg)))
+
         # ---- dense form: the GEMM-analogue push over the local K block
         dense_form = None
         if cfg.need_dense:
-            if tropical:
+            if counting:
+                if use_kernel:
+                    Kc = kernel_registry.get("counting").forms
+                    bsc = min(s_l, 128)
+
+                    def partial_cand(fs_k, d, sg, step):
+                        # reconstruct the gated partial from the kernel's
+                        # epilogue outputs: where new_p, nsg_p IS cand_p,
+                        # and dropped zeros don't change the psum
+                        new_p, _, nsg_p = Kc["push"](
+                            fs_k, dense_l, d, sg, step, bs=bsc, bn=cfg.bn,
+                            bk=cfg.bk, interpret=interpret)
+                        return jnp.where(new_p != 0, nsg_p, 0.0)
+                else:
+                    def partial_cand(fs_k, d, sg, step):
+                        cand = jax.lax.dot_general(
+                            fs_k, dense_l.astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+                        return jnp.where(d == UNREACHED, cand, 0.0)
+
+                if vertex_sharded:
+                    def dense_form(f, ds, p, step):
+                        d, sg = ds
+                        k0 = jax.lax.axis_index(MODEL_AXIS) * nk
+                        f_k = jax.lax.dynamic_slice_in_dim(f, k0, nk, 1)
+                        sg_k = jax.lax.dynamic_slice_in_dim(sg, k0, nk, 1)
+                        fs_k = jnp.where(f_k != 0, sg_k, 0.0)
+                        cand_p = partial_cand(fs_k, d, sg, step)
+                        new, ds2 = counting_epilogue(cand_p, d, sg, step)
+                        return new, ds2, p
+                else:
+                    dense_form = S.counting_forms(
+                        dense_l, jnp.zeros((1,), jnp.int32),
+                        jnp.zeros((1,), jnp.int32), n_pad=n_pad, s=s_l,
+                        bn=cfg.bn, bk=cfg.bk, use_kernel=use_kernel,
+                        interpret=interpret)[0]
+            elif tropical:
                 if use_kernel:
                     K = kernel_registry.get("tropical").forms
                     bs = min(s_l, 128)
@@ -294,7 +360,25 @@ def _make_runner(mesh: Mesh, cfg: ShardedConfig, n_pad: int, n_real: int,
         # ---- sparse form: scatter-⊕ over the shard's CSR lanes --------
         sparse_form = None
         if cfg.need_sparse:
-            if tropical:
+            if counting:
+                if vertex_sharded:
+                    def sparse_form(f, ds, p, step):
+                        # each edge lives in exactly one shard partition,
+                        # so the local scatter-adds psum to the exact
+                        # per-node path count
+                        d, sg = ds
+                        active = f[..., src_e] != 0
+                        contrib = jnp.where(active, sg[..., src_e], 0.0)
+                        cand_p = jnp.zeros(d.shape, jnp.float32).at[
+                            ..., dst_e].add(contrib)
+                        new, ds2 = counting_epilogue(cand_p, d, sg, step)
+                        return new, ds2, p
+                else:
+                    sparse_form = S.counting_forms(
+                        jnp.zeros((1, 1), jnp.int8), src_e, dst_e,
+                        n_pad=n_pad, s=s_l, use_kernel=False,
+                        interpret=interpret)[1]
+            elif tropical:
                 _, sparse_c = S.tropical_forms(
                     None, src_e, dst_e, w_e, n_pad=n_pad, chunk=cfg.chunk,
                     use_kernel=use_kernel, interpret=interpret, eb=cfg.eb)
@@ -326,9 +410,10 @@ def _make_runner(mesh: Mesh, cfg: ShardedConfig, n_pad: int, n_real: int,
             bs = min(s_l, 128)
 
             def choose(st: S.SweepState):
+                d = st.dist[0] if counting else st.dist
                 stats = frontier_stats(
-                    st.frontier, st.dist, bs=bs, bn=128, bk=128,
-                    unreached=jnp.isinf(st.dist) if tropical else None)
+                    st.frontier, d, bs=bs, bn=128, bk=128,
+                    unreached=jnp.isinf(d) if tropical else None)
                 live = stats.live_tile_frac
                 if dp:
                     # the lax.switch predicate must agree on every shard
@@ -344,12 +429,17 @@ def _make_runner(mesh: Mesh, cfg: ShardedConfig, n_pad: int, n_real: int,
             return jax.lax.psum(jnp.any(new != 0).astype(jnp.int32),
                                 all_axes) == 0
 
-        st = S.sweep_loop(forms, S.make_state(f0_l, dist0_l, n_forms=2),
+        state0 = (dist0_l, sigma0_l) if counting else dist0_l
+        st = S.sweep_loop(forms, S.make_state(f0_l, state0, n_forms=2),
                           max_steps=steps, choose=choose,
                           forced_dir=0 if cfg.mode in ("auto", "dense")
                           else 1,
                           converged=converged)
-        return st.dist, st.step, st.dir_counts
+        if counting:
+            dist_out, sigma_out = st.dist
+        else:
+            dist_out, sigma_out = st.dist, sigma0_l
+        return dist_out, sigma_out, st.step, st.dir_counts
 
     row_spec = P(dp, None) if dp else P(None, None)
     dense_spec = P(MODEL_AXIS, None) \
@@ -361,8 +451,8 @@ def _make_runner(mesh: Mesh, cfg: ShardedConfig, n_pad: int, n_real: int,
     sharded = compat.shard_map(
         run_local, mesh=mesh,
         in_specs=(dense_spec, lane_spec, lane_spec, w_spec, P(),
-                  row_spec, row_spec, P()),
-        out_specs=(row_spec, P(), P()),
+                  row_spec, row_spec, row_spec, P()),
+        out_specs=(row_spec, row_spec, P(), P()),
         check_vma=False)
 
     @jax.jit
@@ -381,8 +471,13 @@ def _make_runner(mesh: Mesh, cfg: ShardedConfig, n_pad: int, n_real: int,
             # pad rows/cols are born "visited" — same trick as the engine
             dist0 = jnp.where(
                 row_ok & (jnp.arange(n_pad)[None, :] < n_real), dist0, 0)
+        if counting:
+            sigma0 = jnp.where(f0 != 0, 1.0, 0.0).astype(jnp.float32)
+        else:
+            # inert row-sharded dummy so the shard_map arity stays fixed
+            sigma0 = jnp.zeros((s_pad, 1), jnp.float32)
         return sharded(dense_op, src_l, dst_l, w_l, w_min, f0, dist0,
-                       steps)
+                       sigma0, steps)
 
     return runner
 
@@ -440,9 +535,11 @@ def sharded_apsp(g: Union[CSRGraph, ShardedOperands],
     use_kernel, interpret = _resolve_kernel(cfg)
     runner = _make_runner(ops.mesh, cfg, ops.n_pad, n, ops.m_local,
                           use_kernel, interpret, ops.n_shards)
-    dist, step, dir_counts = runner(
+    dist, sigma, step, dir_counts = runner(
         ops.dense_op, ops.src_l, ops.dst_l, ops.w_l, ops.w_min,
         jnp.asarray(padded), jnp.int32(len(srcs)),
         jnp.int32(cfg.max_sweeps or n))
     return ShardedApspResult(dist=dist[: len(srcs), :n], sweeps=step,
-                             direction_counts=dir_counts)
+                             direction_counts=dir_counts,
+                             sigma=sigma[: len(srcs), :n]
+                             if cfg.counting else None)

@@ -10,7 +10,9 @@ iteration
     dist' = dist (+)  frontier-restricted ( dist (x) A )
 
 with (+, x) = (∨, ∧) for unweighted BFS, (min, +) for non-negative
-weights, and (min, id) for label propagation.  This module owns:
+weights, (min, id) for label propagation, and (add-on-dist-ties, ·) for
+shortest-path counting (the Brandes/betweenness substrate — the one
+non-idempotent ⊕ in the set).  This module owns:
 
   * :class:`Semiring`    — the algebra spec (boolean / tropical / min-label);
   * the three sweep *forms* over identical padded state — dense push GEMM
@@ -86,8 +88,16 @@ TROPICAL = Semiring("tropical", jnp.float32, float("inf"), 0.0,
                     unit="f32 add+min lane / CSR relax lane")
 MIN_LABEL = Semiring("min_label", jnp.int32, None, None,
                      unit="CSR min-scatter lane")
+# Path counting (Burkhardt's algebraic-BFS companion semiring): the state
+# is the PAIR (dist int32, sigma f32) and ⊕ is elementwise ADD of path
+# counts, gated on dist-improvement ties — the first non-idempotent ⊕ in
+# the repo (OR∘OR = OR and min∘min = min, but add∘add ≠ add), which is
+# why the sharded reduction must mask partials before summing (see
+# core/distributed.py) instead of just folding epilogue outputs.
+COUNTING = Semiring("counting", jnp.int32, -1, 0,
+                    unit="f32 MAC / CSR add lane")
 
-SEMIRINGS = {s.name: s for s in (BOOLEAN, TROPICAL, MIN_LABEL)}
+SEMIRINGS = {s.name: s for s in (BOOLEAN, TROPICAL, MIN_LABEL, COUNTING)}
 
 
 # --------------------------------------------------------------------------
@@ -389,6 +399,80 @@ def minlabel_form(src_idx, dst_idx) -> SweepForm:
 
 
 # --------------------------------------------------------------------------
+# counting semiring forms (shortest-path counting — Brandes stage 1)
+# --------------------------------------------------------------------------
+
+def counting_forms(adj, src_idx, dst_idx, *, n_pad: int = 0, s: int = 0,
+                   bn: int = 128, bk: int = 128,
+                   use_kernel: bool = False,
+                   interpret: bool = True) -> Tuple[SweepForm, SweepForm]:
+    """(push, sparse) counting sweep forms.
+
+    The loop state's ``dist`` slot is the PAIR ``(dist int32, sigma
+    f32)``: ``dist`` is exactly the boolean semiring's level array and
+    ``sigma[s, v]`` counts shortest s→v paths.  Because unweighted BFS is
+    level-synchronous, *every* shortest path to a node first reached at
+    this sweep enters through the current frontier, so one f32 matmul of
+    frontier-masked sigma against the adjacency produces the complete
+    count:
+
+        cand[s, j] = Σ_k (frontier ? sigma : 0)[s, k] · A[k, j]
+        new        = (cand > 0) & (dist == UNREACHED)
+        dist'      = new ? step : dist          (the boolean update)
+        sigma'     = new ? cand : sigma         (⊕ = add, gated on ties)
+
+    ⊕ is elementwise ADD — non-idempotent, unlike OR/min — so partial
+    candidates (sharded K-blocks, sparse scatter lanes) must be SUMMED
+    exactly once per edge before the gate; the scatter-add form below and
+    the sharded executor's masked-add reduction both preserve that.
+    Counts are f32: exact up to 2^24 paths per (source, node) pair —
+    beyond that the add rounds (documented in docs/ARCHITECTURE.md).
+
+    ``adj`` is the dense int8 operand (a (1, 1) dummy when only sparse
+    dispatches); ``use_kernel`` swaps the push closure for the fused
+    counting Pallas kernel looked up in :mod:`repro.kernels.registry`.
+    Settledness makes the boolean o_occ table sound here: sigma only
+    changes where dist improves, so a tile with no unreached target
+    cannot change either half of the state.
+    """
+    if use_kernel:
+        K = kernel_registry.get(COUNTING).forms
+        bs = min(s, 128) if s else 128
+
+        def push(f, ds, p, step):
+            d, sg = ds
+            fs = jnp.where(f != 0, sg, 0.0)
+            new, nd, nsg = K["push"](fs, adj, d, sg, step, bs=bs, bn=bn,
+                                     bk=bk, interpret=interpret)
+            return new, (nd, nsg), p
+    else:
+        def push(f, d_pair, p, step):
+            d, sg = d_pair
+            fs = jnp.where(f != 0, sg, 0.0)
+            cand = jax.lax.dot_general(
+                fs, adj.astype(jnp.float32),
+                (((fs.ndim - 1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            new = (cand > 0) & (d == UNREACHED)
+            return (new.astype(jnp.int8),
+                    (jnp.where(new, step, d), jnp.where(new, cand, sg)), p)
+
+    def sparse(f, d_pair, p, step):
+        # edge-parallel scatter-ADD: each CSR lane contributes its source's
+        # sigma once (lanes are deduped), so the sum over in-lanes is the
+        # exact path count — the non-idempotent analogue of SOVM's
+        # scatter-OR
+        d, sg = d_pair
+        contrib = jnp.where(f[..., src_idx] != 0, sg[..., src_idx], 0.0)
+        cand = jnp.zeros(d.shape, jnp.float32).at[..., dst_idx].add(contrib)
+        new = (cand > 0) & (d == UNREACHED)
+        return (new.astype(jnp.int8),
+                (jnp.where(new, step, d), jnp.where(new, cand, sg)), p)
+
+    return push, sparse
+
+
+# --------------------------------------------------------------------------
 # shortest-path tree post-pass
 # --------------------------------------------------------------------------
 
@@ -444,7 +528,12 @@ def time_sweep_forms(forms: Sequence[SweepForm], frontier, dist,
         def go(fr, d, p):
             def body(i, c):
                 new, dd, pp = form(c[0], c[1], c[2], i + 1)
-                return (new, jnp.where(i % 2 == 1, d, dd), pp)
+                # dist may be a pytree (the counting semiring carries a
+                # (dist, sigma) pair) — refresh every leaf
+                refreshed = jax.tree_util.tree_map(
+                    lambda orig, upd: jnp.where(i % 2 == 1, orig, upd),
+                    d, dd)
+                return (new, refreshed, pp)
             return jax.lax.fori_loop(0, n_sweeps, body, (fr, d, p))
         return jax.jit(go)
 

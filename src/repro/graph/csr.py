@@ -118,6 +118,46 @@ class CSRGraph:
         )
 
     @staticmethod
+    def from_weighted_edges(src: np.ndarray, dst: np.ndarray,
+                            weights: np.ndarray, n_nodes: int,
+                            *, remove_self_loops: bool = True,
+                            pad_to: int | None = None
+                            ) -> Tuple["CSRGraph", np.ndarray]:
+        """Build from weighted COO edges -> (graph, lane_weights).
+
+        ``lane_weights`` is (m_pad,) float32 aligned with the graph's
+        padded CSR lanes (+inf on padded slots) — exactly the layout
+        ``prepare_weighted`` / ``prepare_sharded`` consume.  Duplicate
+        edges reduce to their MIN weight, matching how the dense
+        tropical operand resolves parallel edges.
+        """
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        w = np.asarray(weights, dtype=np.float64)
+        assert w.shape == src.shape == dst.shape, \
+            (src.shape, dst.shape, w.shape)
+        if remove_self_loops:
+            keep = src != dst
+            src, dst, w = src[keep], dst[keep], w[keep]
+        # sort by (src, dst) — the same primary/secondary order
+        # from_edges' lexsort produces — and min-reduce duplicates so the
+        # surviving lane order matches the graph's lane order exactly
+        key = src * n_nodes + dst
+        order = np.argsort(key, kind="stable")
+        src, dst, w, key = src[order], dst[order], w[order], key[order]
+        first = np.ones(len(key), bool)
+        first[1:] = key[1:] != key[:-1]
+        grp = np.cumsum(first) - 1
+        w_min = np.full(int(first.sum()), np.inf)
+        np.minimum.at(w_min, grp, w)
+        src, dst = src[first], dst[first]
+        g = CSRGraph.from_edges(src, dst, n_nodes, dedup=False,
+                                remove_self_loops=False, pad_to=pad_to)
+        lanes = np.full(g.m_pad, np.inf, np.float32)
+        lanes[: g.n_edges] = w_min
+        return g, lanes
+
+    @staticmethod
     def from_scipy(mat, **kw) -> "CSRGraph":
         coo = mat.tocoo()
         return CSRGraph.from_edges(coo.row, coo.col, mat.shape[0], **kw)

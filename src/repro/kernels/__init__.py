@@ -8,3 +8,4 @@ name; the core sweep layer dispatches through the registry.
 from . import common, registry
 from . import bovm       # registers "boolean"
 from . import tropical   # registers "tropical"
+from . import counting   # registers "counting"

@@ -1,8 +1,10 @@
 """Shared tiling / occupancy / grid machinery for every semiring kernel.
 
 One substrate, N semirings: the boolean push/pull kernels
-(``kernels/bovm``) and the tropical min-plus kernels
-(``kernels/tropical``) are instantiations of the same skeleton —
+(``kernels/bovm``), the tropical min-plus kernels
+(``kernels/tropical``) and the counting-semiring kernel
+(``kernels/counting`` — two state arrays through the same grid) are
+instantiations of the same skeleton —
 
   * a ``(S/bs, n/bn, n/bk)`` grid with K innermost ("arbitrary") so each
     output tile accumulates operand-block products in a VMEM scratch and
@@ -80,22 +82,24 @@ def check_push_tiles(s: int, n: int, bs: int, bn: int, bk: int,
 # --------------------------------------------------------------------------
 
 def push_grid_spec(gi: int, gj: int, gk: int, *, bs: int, bn: int, bk: int,
-                   num_scalar_prefetch: int, acc_dtype) -> "pltpu.PrefetchScalarGridSpec":
+                   num_scalar_prefetch: int, acc_dtype,
+                   n_state: int = 1) -> "pltpu.PrefetchScalarGridSpec":
     """Grid spec for push-direction sweeps (boolean GEMM, tropical
-    min-plus "GEMM"): frontier-state block (i, k), operand block (k, j),
-    per-(i, j) dist/out tiles, one (bs, bn) scratch accumulator."""
+    min-plus "GEMM", counting f32 GEMM): frontier-state block (i, k),
+    operand block (k, j), ``n_state`` per-(i, j) state tiles in and
+    ``n_state + 1`` tiles out (the improved-mask plus each updated state
+    array), one (bs, bn) scratch accumulator.  The boolean/tropical
+    kernels carry one state array (dist); the counting kernel carries two
+    (dist + sigma, ``n_state=2``)."""
+    state_spec = pl.BlockSpec((bs, bn), lambda i, j, k, *_: (i, j))
     return pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=num_scalar_prefetch,
         grid=(gi, gj, gk),
         in_specs=[
             pl.BlockSpec((bs, bk), lambda i, j, k, *_: (i, k)),
             pl.BlockSpec((bk, bn), lambda i, j, k, *_: (k, j)),
-            pl.BlockSpec((bs, bn), lambda i, j, k, *_: (i, j)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bs, bn), lambda i, j, k, *_: (i, j)),
-            pl.BlockSpec((bs, bn), lambda i, j, k, *_: (i, j)),
-        ],
+        ] + [state_spec] * n_state,
+        out_specs=[state_spec] * (n_state + 1),
         scratch_shapes=[pltpu.VMEM((bs, bn), acc_dtype)],
     )
 

@@ -1,0 +1,26 @@
+from .kernel import fused_counting_sweep
+from .ref import counting_sweep_ref
+
+from .. import common, registry
+
+
+def vmem_bytes(*, form: str = "push", bs: int = 128, bn: int = 128,
+               bk: int = 128) -> int:
+    """Resident VMEM of one grid step (docs/ARCHITECTURE.md table):
+    f32 fsigma tile + int8 adj tile + the (dist i32, sigma f32) state
+    pair + f32 acc + (i8, i32, f32) outputs."""
+    assert form == "push", form
+    return common.push_vmem_bytes(bs, bn, bk, f_itemsize=4, a_itemsize=1,
+                                  d_itemsize=4 + 4,   # dist i32 + sigma f32
+                                  acc_itemsize=4,
+                                  out_itemsizes=(1, 4, 4))
+
+
+registry.register(registry.KernelSet(
+    semiring="counting",
+    forms={"push": fused_counting_sweep},
+    vmem_bytes=vmem_bytes,
+    notes="fused f32 counting GEMM sweep (MXU): one matmul of "
+          "frontier-masked sigma produces discovery AND exact path "
+          "counts; sparse scatter-add stays on the XLA form",
+))

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel for the counting-semiring sweep (Brandes stage 1 —
+shortest-path counting on the BOVM substrate).
+
+``fused_counting_sweep`` — push direction on the shared skeleton from
+``kernels/common.py``: grid (Si, Nj, Kk), K innermost, each (i, j) output
+tile accumulating ``fsigma_block @ adj_block`` f32 MXU products in a VMEM
+scratch, then fusing the counting epilogue on the last K step:
+
+    new    = (acc > 0) & (dist < 0)        (the boolean discovery test)
+    dist'  = new ? step : dist
+    sigma' = new ? acc  : sigma            (⊕ = add, gated on dist ties)
+
+The input frontier operand is ``fsigma = where(frontier, sigma, 0)`` —
+the frontier-masked path counts — so the very matmul that detects
+discovery (acc > 0 is exactly "any frontier in-neighbour") also sums the
+shortest-path counts over all of them: one MXU pass produces both halves
+of the (dist, sigma) state.
+
+Tile skipping: ``f_occ[i, k]`` gates on any nonzero fsigma lane (counts
+are strictly positive on the frontier); the boolean ``o_occ[i, j]`` "any
+unreached target" table is SOUND for this semiring even though ⊕ = add
+is not idempotent — sigma only ever changes where dist improves, and
+dist only improves on unreached targets, so a tile with no unreached
+target can change neither array.  (Contrast the tropical kernel, which
+needs the settled-bound generalization.)
+
+Like the boolean/tropical push kernels the operand may be a rectangular
+(k = n/C) K-row block under the sharded executor; partial candidates are
+then psum-combined across shards *before* the gate (masked-add ⊕ — see
+core/distributed.py), because add-of-epilogue-outputs would double-gate.
+
+VMEM (defaults bs=bn=bk=128): f32 fsigma + i8 adj + i32 dist + f32
+sigma/acc + (i8, i32, f32) outputs ≈ 0.4 MB — see the table in
+docs/ARCHITECTURE.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import common
+
+
+def _counting_sweep_kernel(f_occ_ref, o_occ_ref, step_ref,   # scalar prefetch
+                           fs_ref, a_ref, dist_ref, sig_ref,  # VMEM in
+                           new_ref, dist_out_ref, sig_out_ref,  # VMEM out
+                           acc_ref):                          # VMEM scratch
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    live = (f_occ_ref[i, k] > 0) & (o_occ_ref[i, j] > 0)
+
+    @pl.when(live)
+    def _accumulate():
+        acc_ref[...] += jnp.dot(
+            fs_ref[...], a_ref[...].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        dist = dist_ref[...]
+        cand = acc_ref[...]
+        new = (cand > 0) & (dist < 0)
+        new_ref[...] = new.astype(jnp.int8)
+        dist_out_ref[...] = jnp.where(new, step_ref[0], dist)
+        sig_out_ref[...] = jnp.where(new, cand, sig_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bn", "bk", "interpret"))
+def fused_counting_sweep(fsigma: jax.Array, adj: jax.Array, dist: jax.Array,
+                         sigma: jax.Array, step: jax.Array, *, bs: int = 128,
+                         bn: int = 128, bk: int = 128,
+                         interpret: bool = False):
+    """One fused counting sweep.  Shapes: fsigma (S, k) f32 — the
+    frontier-masked path counts (``where(frontier, sigma, 0)``), adj
+    (k, n) int8 (square k == n single-device; a K-row block k = n/C under
+    the sharded executor — partials are masked-add-combined across
+    shards), dist (S, n) int32, sigma (S, n) f32.  S % bs == 0,
+    n % bn == 0, k % bk == 0.  Returns (new int8, dist int32, sigma f32)
+    — bit-identical to the reference form (f32 sums commute per tile in
+    the same K order; the skips are provably inert)."""
+    s, k = fsigma.shape
+    ka, n = adj.shape
+    assert ka == k and dist.shape == (s, n) and sigma.shape == (s, n), \
+        (fsigma.shape, adj.shape, dist.shape, sigma.shape)
+    common.check_push_tiles(s, n, bs, bn, bk, k=k)
+    gi, gj, gk = s // bs, n // bn, k // bk
+
+    f_occ = common.block_any(fsigma > 0, gi, bs, gk, bk)
+    o_occ = common.block_any(dist < 0, gi, bs, gj, bn)
+    step_arr = jnp.asarray(step, jnp.int32).reshape(1)
+
+    grid_spec = common.push_grid_spec(gi, gj, gk, bs=bs, bn=bn, bk=bk,
+                                      num_scalar_prefetch=3,
+                                      acc_dtype=jnp.float32, n_state=2)
+    new, dist_out, sig_out = pl.pallas_call(
+        _counting_sweep_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((s, n), jnp.int8),
+                   jax.ShapeDtypeStruct((s, n), jnp.int32),
+                   jax.ShapeDtypeStruct((s, n), jnp.float32)],
+        compiler_params=common.sweep_compiler_params(),
+        interpret=interpret,
+    )(f_occ.astype(jnp.int32), o_occ.astype(jnp.int32), step_arr,
+      fsigma, adj, dist, sigma)
+    return new, dist_out, sig_out

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the counting-semiring sweep kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def counting_sweep_ref(fsigma: jnp.ndarray, adj: jnp.ndarray,
+                       dist: jnp.ndarray, sigma: jnp.ndarray, step
+                       ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Reference fused counting sweep.
+
+    fsigma : (S, n) f32 — frontier-masked path counts
+             (``where(frontier, sigma, 0)``)
+    adj    : (n, n) int8 adjacency
+    dist   : (S, n) int32 levels, -1 unreached
+    sigma  : (S, n) f32 path counts
+
+    cand[s, j] = Σ_k fsigma[s, k] · A[k, j];  new = (cand > 0) & unreached;
+    dist' = new ? step : dist;  sigma' = new ? cand : sigma.
+    """
+    cand = fsigma @ adj.astype(jnp.float32)
+    new = (cand > 0) & (dist < 0)
+    return (new.astype(jnp.int8), jnp.where(new, step, dist),
+            jnp.where(new, cand, sigma))

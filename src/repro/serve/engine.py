@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.centrality import (MEASURES, CentralityConfig, betweenness,
+                               centrality)
 from ..core.distributed import (ShardedConfig, ShardedOperands,
                                 prepare_sharded, sharded_apsp)
 from ..core.engine import EngineConfig, PreparedGraph, apsp_engine_blocks, \
@@ -55,14 +57,26 @@ class GraphQuery:
     engine instead: ``dist`` becomes float32 (inf = unreachable) and a
     target query fills ``cost`` (the weighted distance) rather than
     ``hops``.
+
+    ``analytics`` turns the query into a centrality request: a tuple of
+    measure names from :data:`repro.core.centrality.MEASURES`
+    ("closeness" / "harmonic" / "eccentricity" / "betweenness").  The
+    per-source measures of every analytics query in a flush batch into
+    ONE jit-batched multi-source run (core/centrality.py); betweenness —
+    a whole-graph analytic — is computed once per service (through the
+    sharded executor when a mesh is configured), cached, and answered
+    from the cache.  Results land in ``analytics_result`` keyed by
+    measure, all for node ``source``.
     """
     qid: int
     source: int
     target: Optional[int] = None
     weighted: bool = False
+    analytics: Optional[tuple] = None
     dist: Optional[np.ndarray] = None
     hops: Optional[int] = None
     cost: Optional[float] = None
+    analytics_result: Optional[Dict[str, float]] = None
     t_submit: float = 0.0
     t_done: float = 0.0
 
@@ -76,7 +90,11 @@ class GraphService:
     like decode steps amortize across KV slots.  Pass edge ``weights`` to
     additionally serve weighted queries: each flush runs at most one
     boolean and one tropical micro-batch, both through the shared semiring
-    sweep layer.
+    sweep layer.  ``GraphQuery(analytics=...)`` requests join the same
+    loop: per-source centrality measures micro-batch into one
+    counting/boolean run per flush, and the whole-graph betweenness
+    vector is built once (through the sharded executor when a mesh is
+    configured) and served from cache.
 
     Pass ``mesh`` to scale flushes past one device: micro-batches of at
     least ``sharded_threshold`` queries route through the semiring-generic
@@ -95,7 +113,8 @@ class GraphService:
                  mesh=None,
                  sharded_threshold: int = 16,
                  sharded_config: Optional[ShardedConfig] = None,
-                 sharded_weighted_config: Optional[ShardedConfig] = None):
+                 sharded_weighted_config: Optional[ShardedConfig] = None,
+                 centrality_config: Optional[CentralityConfig] = None):
         batch = max(8, ((max_batch + 7) // 8) * 8)
         if batch > 128:  # EngineConfig: above one push tile, multiple of 128
             batch = ((batch + 127) // 128) * 128
@@ -125,6 +144,12 @@ class GraphService:
         self._weights = weights
         self._sharded_ops: Dict[str, ShardedOperands] = {}
         self.sharded_flushes = 0
+        self.centrality_config = centrality_config or CentralityConfig(
+            source_batch=min(self.config.source_batch, 128),
+            use_kernel=self.config.use_kernel)
+        # betweenness is a whole-graph analytic: computed once (sharded
+        # when a mesh is configured), then served from this cache
+        self._betweenness: Optional[np.ndarray] = None
         self.queue: deque[GraphQuery] = deque()
         self.completed: List[GraphQuery] = []
 
@@ -159,6 +184,14 @@ class GraphService:
             raise ValueError(f"source {query.source} not in [0, {n})")
         if query.target is not None and not 0 <= query.target < n:
             raise ValueError(f"target {query.target} not in [0, {n})")
+        if query.analytics is not None:
+            if query.weighted:
+                raise ValueError("analytics queries are unweighted "
+                                 "(counting/boolean semiring)")
+            unknown = set(query.analytics) - set(MEASURES)
+            if unknown:
+                raise ValueError(f"unknown analytics {sorted(unknown)}; "
+                                 f"available: {MEASURES}")
         if query.weighted and self.prepared_weighted is None:
             raise ValueError(
                 "weighted query on a GraphService built without weights=")
@@ -175,7 +208,9 @@ class GraphService:
         batch = [self.queue.popleft()
                  for _ in range(min(len(self.queue), self.max_batch))]
         now = time.monotonic()
-        unweighted = [q for q in batch if not q.weighted]
+        analytics = [q for q in batch if q.analytics is not None]
+        unweighted = [q for q in batch
+                      if not q.weighted and q.analytics is None]
         weighted = [q for q in batch if q.weighted]
         if unweighted:
             sources = np.asarray([q.source for q in unweighted], np.int32)
@@ -211,10 +246,68 @@ class GraphService:
                     q.dist = row
                 else:
                     q.cost = float(row[q.target])
+        if analytics:
+            self._flush_analytics(analytics)
+            now = time.monotonic()
         for q in batch:
             q.t_done = now
             self.completed.append(q)
         return batch
+
+    def _flush_analytics(self, queries: List[GraphQuery]) -> None:
+        """Serve one micro-batch of centrality queries: all per-source
+        measures ride ONE batched multi-source run (the analytics
+        analogue of the distance micro-batch); betweenness comes from
+        the per-service cache, built on first demand — through the
+        sharded executor when the service has a mesh."""
+        per_source = set()
+        want_bc = False
+        for q in queries:
+            for m in q.analytics:
+                if m == "betweenness":
+                    want_bc = True
+                else:
+                    per_source.add(m)
+        results: Dict[int, Dict[str, float]] = {
+            id(q): {} for q in queries}
+        # one batched run over only the queries that need per-source
+        # measures (betweenness-only queries are served from the cache),
+        # reusing the service's prepared operands and calibration cache
+        ps_queries = [q for q in queries
+                      if set(q.analytics) - {"betweenness"}]
+        if ps_queries:
+            sources = np.asarray([q.source for q in ps_queries], np.int32)
+            res = centrality(self.prepared, sources,
+                             measures=tuple(sorted(per_source)),
+                             config=self.centrality_config)
+            if res.closeness is not None:
+                for i, q in enumerate(ps_queries):
+                    results[id(q)]["closeness"] = float(res.closeness[i])
+            if res.harmonic is not None:
+                for i, q in enumerate(ps_queries):
+                    results[id(q)]["harmonic"] = float(res.harmonic[i])
+            if res.eccentricity is not None:
+                for i, q in enumerate(ps_queries):
+                    results[id(q)]["eccentricity"] = \
+                        int(res.eccentricity[i])
+        if want_bc:
+            if self._betweenness is None:
+                n = self.prepared.graph.n_nodes
+                self._betweenness = betweenness(
+                    self.prepared, config=self.centrality_config,
+                    mesh=self.mesh if (self.mesh is not None and
+                                       n >= self.sharded_threshold)
+                    else None)
+                if self.mesh is not None and \
+                        n >= self.sharded_threshold:
+                    self.sharded_flushes += 1
+            for q in queries:
+                if "betweenness" in q.analytics:
+                    results[id(q)]["betweenness"] = \
+                        float(self._betweenness[q.source])
+        for q in queries:
+            q.analytics_result = {m: results[id(q)][m]
+                                  for m in q.analytics}
 
 
 class ServingEngine:

@@ -40,6 +40,99 @@ def bfs_dists(g, sources) -> np.ndarray:
     return np.stack([bfs_dist(g, int(s)) for s in np.asarray(sources)])
 
 
+def bfs_sigma(g, source: int):
+    """Queue BFS with shortest-path counting -> (dist int32, sigma
+    float64, predecessor lists, stack order) — the textbook forward
+    stage of Brandes, straight off the CSR arrays."""
+    indptr = np.asarray(g.indptr)
+    indices = np.asarray(g.indices)
+    n = g.n_nodes
+    dist = np.full(n, -1, dtype=np.int32)
+    sigma = np.zeros(n, dtype=np.float64)
+    pred = [[] for _ in range(n)]
+    dist[source] = 0
+    sigma[source] = 1.0
+    order = []
+    q = deque([source])
+    while q:
+        u = q.popleft()
+        order.append(u)
+        for e in range(indptr[u], indptr[u + 1]):
+            v = indices[e]
+            if v >= n:
+                continue
+            if dist[v] < 0:
+                dist[v] = dist[u] + 1
+                q.append(v)
+            if dist[v] == dist[u] + 1:
+                sigma[v] += sigma[u]
+                pred[v].append(u)
+    return dist, sigma, pred, order
+
+
+def bfs_sigmas(g, sources) -> np.ndarray:
+    """Stacked shortest-path counts -> (S, n) float64 (0 unreachable)."""
+    return np.stack([bfs_sigma(g, int(s))[1] for s in np.asarray(sources)])
+
+
+def brandes_betweenness(g, sources=None) -> np.ndarray:
+    """Textbook Brandes betweenness (directed, unnormalized, endpoints
+    excluded) -> (n,) float64.  ``sources`` restricts the dependency
+    sums (the source-sampled estimator); default: all nodes (exact).
+    Deliberately independent of the library's batched level-parallel
+    accumulation: per-source predecessor lists and an explicit
+    reverse-BFS-order stack."""
+    n = g.n_nodes
+    sources = range(n) if sources is None else np.asarray(sources)
+    bc = np.zeros(n, dtype=np.float64)
+    for s in sources:
+        s = int(s)
+        _, sigma, pred, order = bfs_sigma(g, s)
+        delta = np.zeros(n, dtype=np.float64)
+        for w in reversed(order):
+            for v in pred[w]:
+                delta[v] += sigma[v] / sigma[w] * (1.0 + delta[w])
+            if w != s:
+                bc[w] += delta[w]
+    return bc
+
+
+def closeness_centrality(g, sources=None) -> np.ndarray:
+    """Wasserman-Faust closeness over OUTGOING distances -> float64."""
+    n = g.n_nodes
+    sources = np.arange(n) if sources is None else np.asarray(sources)
+    out = np.zeros(len(sources), np.float64)
+    for i, s in enumerate(sources):
+        dist = bfs_dist(g, int(s))
+        reach = dist > 0
+        r = int(reach.sum())
+        tot = int(dist[reach].sum())
+        out[i] = (r / max(n - 1, 1)) * (r / tot) if tot > 0 else 0.0
+    return out
+
+
+def harmonic_centrality(g, sources=None) -> np.ndarray:
+    """Harmonic centrality H(u) = Σ_{v≠u} 1/d(u,v) -> float64."""
+    sources = np.arange(g.n_nodes) if sources is None else \
+        np.asarray(sources)
+    out = np.zeros(len(sources), np.float64)
+    for i, s in enumerate(sources):
+        dist = bfs_dist(g, int(s))
+        out[i] = (1.0 / dist[dist > 0]).sum()
+    return out
+
+
+def eccentricities(g, sources=None) -> np.ndarray:
+    """Per-source eccentricity over reachable targets -> int32 (0 when
+    nothing is reachable)."""
+    sources = np.arange(g.n_nodes) if sources is None else \
+        np.asarray(sources)
+    out = np.zeros(len(sources), np.int32)
+    for i, s in enumerate(sources):
+        out[i] = int(bfs_dist(g, int(s)).max(initial=0))
+    return out
+
+
 def dijkstra_dist(g, weights, source: int) -> np.ndarray:
     """scipy Dijkstra -> (n,) float64, +inf = unreachable.  ``weights``
     may cover the padded edge lanes; only the first ``n_edges`` are read."""

@@ -85,6 +85,27 @@ def test_acceptance_boolean_flip_warns_not_fails():
     assert any("auto_no_slower_than_best" in w for w in warnings)
 
 
+def test_centrality_sigma_checksum_gates_hard():
+    """bench_centrality's path-count checksum is a deterministic-by-seed
+    field: a drifted checksum (the counting engine counted different
+    paths) must fail hard, and a timing wobble must not."""
+    def agg(checksum=62910.0, median=0.05):
+        out = _aggregate()
+        out["bench_centrality"] = {"families": {"ws_small": {
+            "n_nodes": 256, "n_edges": 1536, "n_sources": 32,
+            "sweeps": 12, "sigma_checksum": checksum,
+            "t_batched_median": median,
+        }}}
+        return out
+    failures, _ = compare(agg(checksum=62911.0), agg())
+    assert any("bench_centrality" in f and "sigma_checksum" in f
+               for f in failures)
+    failures, _ = compare(agg(median=0.05 * 2), agg())
+    assert failures == []
+    failures, _ = compare(agg(), agg())
+    assert failures == []
+
+
 def test_sharded_bench_sweeps_gate_hard():
     """bench_sharded rides the same hard gates: a tropical sweep-count
     change (sharded and single device are pinned to agree) fails."""

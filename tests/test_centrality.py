@@ -1,0 +1,244 @@
+"""The counting semiring + batched centrality subsystem vs independent
+NumPy oracles: exact betweenness (Brandes), closeness/harmonic/
+eccentricity, the counting kernel path, and cross-form equivalence —
+per docs/TESTING.md conventions (seeded parametrize always runs; the
+hypothesis variants ride along when hypothesis is installed)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # the seeded variants below always run
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (CentralityConfig, betweenness, brandes_dependencies,
+                        centrality, closeness, counting_apsp, eccentricity,
+                        eccentricity_sample, harmonic)
+from repro.graph import generators as gen
+from repro.graph.csr import CSRGraph
+
+from oracles import (bfs_dists, bfs_sigmas, brandes_betweenness,
+                     closeness_centrality, eccentricities,
+                     harmonic_centrality)
+
+FAMILIES = {
+    "grid": lambda: gen.grid2d(9, 9),
+    "rmat": lambda: gen.rmat(7, 4, directed=False, seed=2),
+    "er_directed": lambda: gen.erdos_renyi(90, 3.0, seed=9),
+    "ws": lambda: gen.watts_strogatz(96, 6, 0.1, seed=4),
+    "disconnected": lambda: gen.disconnected(4, 24, 3.0, seed=5),
+}
+
+
+# -- the counting engine: dist == BFS, sigma == path counts -----------------
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_counting_dist_and_sigma_match_oracle(family):
+    """The forward counting sweeps produce the queue-BFS levels AND the
+    textbook path counts, on every family including disconnected."""
+    g = FAMILIES[family]()
+    sources = np.arange(min(16, g.n_nodes), dtype=np.int32)
+    res = counting_apsp(g, sources,
+                        config=CentralityConfig(source_batch=16))
+    np.testing.assert_array_equal(np.asarray(res.dist),
+                                  bfs_dists(g, sources), err_msg=family)
+    np.testing.assert_allclose(np.asarray(res.sigma),
+                               bfs_sigmas(g, sources), err_msg=family)
+
+
+@pytest.mark.parametrize("mode", ["push", "sparse"])
+def test_counting_forms_agree(mode):
+    """push ≡ sparse: the non-idempotent ⊕ gives the same (dist, sigma)
+    through the dense f32 GEMM and the edge-parallel scatter-add."""
+    g = gen.rmat(7, 4, directed=False, seed=2)
+    sources = np.arange(16, dtype=np.int32)
+    res = counting_apsp(g, sources,
+                        config=CentralityConfig(mode=mode,
+                                                source_batch=16))
+    np.testing.assert_array_equal(np.asarray(res.dist),
+                                  bfs_dists(g, sources))
+    np.testing.assert_allclose(np.asarray(res.sigma),
+                               bfs_sigmas(g, sources))
+    counts = np.asarray(res.direction_counts)
+    idx = ["push", "sparse"].index(mode)
+    assert counts[idx] == counts.sum() > 0
+
+
+def test_counting_kernel_path_bit_identical():
+    """The fused counting Pallas kernel (interpret=True) and the XLA
+    reference form are the same sweeps: identical dist AND sigma."""
+    g = gen.rmat(7, 4, directed=False, seed=3)
+    sources = np.arange(24, dtype=np.int32)
+    ref = counting_apsp(g, sources,
+                        config=CentralityConfig(mode="push",
+                                                source_batch=24,
+                                                use_kernel=False))
+    kern = counting_apsp(g, sources,
+                         config=CentralityConfig(mode="push",
+                                                 source_batch=24,
+                                                 use_kernel=True))
+    np.testing.assert_array_equal(np.asarray(kern.dist),
+                                  np.asarray(ref.dist))
+    np.testing.assert_array_equal(np.asarray(kern.sigma),
+                                  np.asarray(ref.sigma))
+    assert int(kern.sweeps) == int(ref.sweeps)
+
+
+# -- exact betweenness vs the independent Brandes oracle --------------------
+
+def _check_betweenness(n, avg_deg, seed, *, config=None):
+    rng = np.random.default_rng(seed)
+    m = max(1, int(n * avg_deg))
+    g = CSRGraph.from_edges(rng.integers(0, n, m),
+                            rng.integers(0, n, m), n)
+    ref = brandes_betweenness(g)
+    got = betweenness(g, config=config)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_betweenness_matches_brandes_oracle(seed):
+    rng = np.random.default_rng(seed * 4001 + 17)
+    _check_betweenness(int(rng.integers(4, 81)),
+                       float(rng.uniform(1.0, 5.0)),
+                       int(rng.integers(0, 10**6)))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(4, 80), avg_deg=st.floats(1.0, 5.0),
+           seed=st.integers(0, 10**6))
+    def test_betweenness_matches_brandes_oracle_hypothesis(n, avg_deg,
+                                                           seed):
+        _check_betweenness(n, avg_deg, seed)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_betweenness_families(family):
+    """Acceptance: exact betweenness on every seeded family, including
+    the disconnected one (unreachable pairs contribute nothing)."""
+    g = FAMILIES[family]()
+    np.testing.assert_allclose(betweenness(g), brandes_betweenness(g),
+                               rtol=1e-4, atol=1e-6, err_msg=family)
+
+
+@pytest.mark.parametrize("mode,use_kernel", [("push", False),
+                                             ("sparse", False),
+                                             ("auto", False),
+                                             ("push", True),
+                                             ("auto", True)])
+def test_betweenness_every_execution_path(mode, use_kernel):
+    """Acceptance: the Brandes pipeline is exact through every form and
+    the Pallas kernel (interpret) path."""
+    _check_betweenness(72, 3.0, 123,
+                       config=CentralityConfig(mode=mode, source_batch=24,
+                                               use_kernel=use_kernel))
+
+
+def test_betweenness_source_subset_and_normalization():
+    g = gen.watts_strogatz(64, 4, 0.2, seed=6)
+    sources = np.asarray([0, 3, 7, 11, 40], np.int32)
+    ref = brandes_betweenness(g, sources)
+    got = betweenness(g, sources)
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-6)
+    n = g.n_nodes
+    np.testing.assert_allclose(betweenness(g, sources, normalized=True),
+                               ref / ((n - 1) * (n - 2)), rtol=1e-4,
+                               atol=1e-9)
+
+
+def test_brandes_dependencies_delta_shape_and_source_row():
+    g = gen.grid2d(6, 6)
+    sources = np.arange(4, dtype=np.int32)
+    res = counting_apsp(g, sources,
+                        config=CentralityConfig(source_batch=8))
+    delta = np.asarray(brandes_dependencies(g, res.dist, res.sigma))
+    assert delta.shape == (4, g.n_nodes)
+    # δ_s(s) counts paths through the source as an interior node of its
+    # own tree — Brandes drops it from bc; it must still be finite
+    assert np.isfinite(delta).all()
+
+
+# -- closeness / harmonic / eccentricity vs oracles -------------------------
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_distance_measures_match_oracles(family):
+    g = FAMILIES[family]()
+    sources = np.arange(min(24, g.n_nodes), dtype=np.int32)
+    res = centrality(g, sources,
+                     measures=("closeness", "harmonic", "eccentricity"))
+    np.testing.assert_allclose(res.closeness,
+                               closeness_centrality(g, sources),
+                               rtol=1e-9, err_msg=family)
+    np.testing.assert_allclose(res.harmonic,
+                               harmonic_centrality(g, sources),
+                               rtol=1e-5, err_msg=family)
+    np.testing.assert_array_equal(res.eccentricity,
+                                  eccentricities(g, sources),
+                                  err_msg=family)
+
+
+def test_exact_eccentricity_radius_diameter():
+    g = gen.grid2d(10, 10)   # diameter 18; radius 10 (even side: the
+    est = eccentricity(g)    # four central cells sit at ecc 5+5)
+    np.testing.assert_array_equal(est["ecc"], eccentricities(g))
+    assert est["diameter"] == 18
+    assert est["radius"] == 10
+    # the sampled bounds bracket the exact values
+    s = eccentricity_sample(g, n_samples=20, seed=1)
+    assert s["radius_upper"] >= est["radius"]
+    assert s["diameter_lower"] <= est["diameter"]
+
+
+def test_disconnected_graph_conventions():
+    """Unreachable pairs: closeness Wasserman-Faust-scales, harmonic and
+    betweenness simply drop them, eccentricity is per-component."""
+    g = gen.disconnected(3, 20, 3.0, seed=7)
+    res = centrality(g)
+    np.testing.assert_allclose(res.closeness, closeness_centrality(g),
+                               rtol=1e-9)
+    np.testing.assert_allclose(res.betweenness, brandes_betweenness(g),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_array_equal(res.eccentricity, eccentricities(g))
+    ecc = np.asarray(res.eccentricity)
+    assert res.diameter == int(ecc.max())
+    assert res.radius == int(ecc[ecc > 0].min())
+
+
+def test_centrality_rejects_unknown_measures():
+    g = gen.grid2d(4, 4)
+    with pytest.raises(ValueError, match="unknown measures"):
+        centrality(g, measures=("pagerank",))
+
+
+def test_centrality_rejects_empty_and_out_of_range_sources():
+    g = gen.grid2d(4, 4)
+    with pytest.raises(ValueError, match="empty source list"):
+        centrality(g, sources=[], measures=("eccentricity",))
+    with pytest.raises(ValueError, match="must be in"):
+        centrality(g, sources=[99], measures=("closeness",))
+
+
+def test_single_measure_wrappers_match_full_run():
+    g = gen.watts_strogatz(80, 4, 0.1, seed=9)
+    sources = np.arange(16)
+    res = centrality(g, sources)
+    np.testing.assert_allclose(closeness(g, sources), res.closeness)
+    np.testing.assert_allclose(harmonic(g, sources), res.harmonic)
+    full = betweenness(g)
+    np.testing.assert_allclose(full, brandes_betweenness(g), rtol=1e-4,
+                               atol=1e-6)
+
+
+def test_sigma_checksum_is_deterministic():
+    """The benchmark gate's hard field: two runs on the same seeded
+    graph produce the identical path-count checksum, and it moves when
+    the graph does."""
+    g = gen.watts_strogatz(64, 4, 0.2, seed=3)
+    a = centrality(g, measures=("betweenness",)).sigma_checksum
+    b = centrality(g, measures=("betweenness",)).sigma_checksum
+    assert a == b > 0
+    g2 = gen.watts_strogatz(64, 4, 0.2, seed=4)
+    assert centrality(g2, measures=("betweenness",)).sigma_checksum != a

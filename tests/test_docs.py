@@ -1,0 +1,24 @@
+"""Documentation integrity: the intra-repo link checker (the same one
+CI runs as its own step) must pass, and the paper-reproduction map must
+exist and be reachable from the README."""
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_doc_links_resolve():
+    res = subprocess.run(
+        [sys.executable, str(ROOT / "tools" / "check_doc_links.py")],
+        capture_output=True, text=True)
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_reproduction_doc_exists_and_is_linked():
+    repro = ROOT / "docs" / "REPRODUCTION.md"
+    assert repro.exists()
+    readme = (ROOT / "README.md").read_text()
+    assert "docs/REPRODUCTION.md" in readme
+    arch = (ROOT / "docs" / "ARCHITECTURE.md").read_text()
+    assert "REPRODUCTION.md" in arch

@@ -17,7 +17,10 @@ from repro.graph.csr import CSRGraph, symmetrize
 from repro.graph import generators as gen
 from repro.graph.partition import block_dense, edge_partition
 from repro.graph.sampler import sample_hop, sample_subgraph
-from repro.graph.io import save_edgelist, load_edgelist
+from repro.graph.io import (load_edgelist, load_mtx, save_edgelist,
+                            save_mtx)
+
+from oracles import bfs_dist, dijkstra_dist
 
 
 def _check_csr_roundtrip(n, m, seed):
@@ -127,3 +130,80 @@ def test_edgelist_io_roundtrip():
         assert g2.n_edges == g.n_edges
         np.testing.assert_array_equal(np.asarray(g2.to_dense()),
                                       np.asarray(g.to_dense()))
+
+
+# -- vectorized loaders: round trips checked against the oracles -----------
+
+def _check_weighted_io_roundtrip(n, avg_deg, seed):
+    rng = np.random.default_rng(seed)
+    m = max(1, int(n * avg_deg))
+    g, w = CSRGraph.from_weighted_edges(rng.integers(0, n, m),
+                                        rng.integers(0, n, m),
+                                        rng.uniform(0.1, 5.0, m), n)
+    with tempfile.TemporaryDirectory() as d:
+        pe = os.path.join(d, "g.txt")
+        save_edgelist(g, pe, weights=w)
+        g2, w2 = load_edgelist(pe, weighted=True)
+        assert g2.n_edges == g.n_edges
+        np.testing.assert_allclose(dijkstra_dist(g2, w2, 0),
+                                   dijkstra_dist(g, w, 0), rtol=1e-6)
+        pm = os.path.join(d, "g.mtx")
+        save_mtx(g, pm, weights=w)
+        g3, w3 = load_mtx(pm, return_weights=True)
+        np.testing.assert_array_equal(bfs_dist(g3, 0), bfs_dist(g, 0))
+        np.testing.assert_allclose(dijkstra_dist(g3, w3, 0),
+                                   dijkstra_dist(g, w, 0), rtol=1e-6)
+        # values must be ignorable: the unweighted view of a real mtx
+        g4 = load_mtx(pm)
+        np.testing.assert_array_equal(np.asarray(g4.to_dense()),
+                                      np.asarray(g.to_dense()))
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_weighted_io_roundtrip(seed):
+    rng = np.random.default_rng(seed * 6007 + 5)
+    _check_weighted_io_roundtrip(int(rng.integers(3, 61)), 3.0,
+                                 int(rng.integers(0, 10**6)))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(3, 60), seed=st.integers(0, 10**6))
+    def test_weighted_io_roundtrip_hypothesis(n, seed):
+        _check_weighted_io_roundtrip(n, 3.0, seed)
+
+
+def test_mtx_pattern_roundtrip_and_symmetric_real():
+    g = gen.erdos_renyi(40, 3.0, seed=13)
+    with tempfile.TemporaryDirectory() as d:
+        pm = os.path.join(d, "p.mtx")
+        save_mtx(g, pm)
+        g2 = load_mtx(pm)
+        np.testing.assert_array_equal(np.asarray(g2.to_dense()),
+                                      np.asarray(g.to_dense()))
+        # symmetric real: one stored triangle expands to both directions
+        ps = os.path.join(d, "s.mtx")
+        with open(ps, "w") as f:
+            f.write("%%MatrixMarket matrix coordinate real symmetric\n")
+            f.write("4 4 3\n")
+            f.write("2 1 0.5\n3 1 1.5\n4 2 2.5\n")
+        gs, ws = load_mtx(ps, return_weights=True)
+        assert gs.n_nodes == 4 and gs.n_edges == 6
+        ref = dijkstra_dist(gs, ws, 0)
+        np.testing.assert_allclose(ref[:3], [0.0, 0.5, 1.5])
+        # pattern view of the same file: weights dropped, still symmetric
+        gp = load_mtx(ps)
+        assert gp.n_edges == 6
+
+
+def test_from_weighted_edges_min_reduces_duplicates():
+    src = np.array([0, 0, 1, 0])
+    dst = np.array([1, 1, 2, 1])
+    w = np.array([3.0, 1.0, 2.0, 5.0])
+    g, lanes = CSRGraph.from_weighted_edges(src, dst, w, 3)
+    assert g.n_edges == 2
+    s, d = g.edge_arrays_np()
+    lane_w = {(int(a), int(b)): float(x)
+              for a, b, x in zip(s, d, lanes[: g.n_edges])}
+    assert lane_w == {(0, 1): 1.0, (1, 2): 2.0}
+    assert np.isinf(lanes[g.n_edges:]).all()

@@ -26,6 +26,7 @@ from repro.kernels.bovm import (fused_sweep, packed_pull_sweep, sweep_ref,
                                 pack_adjacency_pull)
 from repro.kernels.tropical import (fused_minplus_sweep, sparse_relax_sweep,
                                     minplus_sweep_ref, sparse_relax_ref)
+from repro.kernels.counting import fused_counting_sweep, counting_sweep_ref
 
 
 def _random_state(rng, s, n, density=0.05, visited=0.2):
@@ -38,17 +39,20 @@ def _random_state(rng, s, n, density=0.05, visited=0.2):
 # the registry: one substrate, N semirings
 # --------------------------------------------------------------------------
 
-def test_registry_has_both_semirings():
-    assert registry.available() == ("boolean", "tropical")
+def test_registry_has_every_semiring():
+    assert registry.available() == ("boolean", "counting", "tropical")
     assert registry.has("boolean") and registry.has("tropical")
+    assert registry.has("counting")
     assert set(registry.get("boolean").forms) == {"push", "pull"}
     assert set(registry.get("tropical").forms) == {"dense", "sparse"}
+    assert set(registry.get("counting").forms) == {"push"}
 
 
 def test_registry_accepts_semiring_objects():
-    from repro.core import BOOLEAN, TROPICAL
+    from repro.core import BOOLEAN, COUNTING, TROPICAL
     assert registry.get(BOOLEAN).forms["push"] is fused_sweep
     assert registry.get(TROPICAL).forms["dense"] is fused_minplus_sweep
+    assert registry.get(COUNTING).forms["push"] is fused_counting_sweep
     with pytest.raises(KeyError, match="min_label"):
         registry.get("min_label")    # no kernels for label propagation
 
@@ -63,6 +67,8 @@ def test_vmem_budgets_under_per_core_limit():
         < common.VMEM_BUDGET_BYTES // 4
     assert registry.get("tropical").vmem_bytes(form="sparse", s=128,
                                                n_pad=2048) \
+        < common.VMEM_BUDGET_BYTES // 4
+    assert registry.get("counting").vmem_bytes(form="push") \
         < common.VMEM_BUDGET_BYTES // 4
 
 
@@ -262,6 +268,108 @@ def test_sparse_relax_shapes(s, n_pad, eb):
     new_r, dist_r = sparse_relax_ref(*args)
     np.testing.assert_array_equal(np.asarray(new_k), np.asarray(new_r))
     np.testing.assert_array_equal(np.asarray(dist_k), np.asarray(dist_r))
+
+
+# --------------------------------------------------------------------------
+# counting semiring kernel (Brandes stage 1 — path counting)
+# --------------------------------------------------------------------------
+
+def _random_counting_state(rng, s, n, *, density=0.05, visited=0.3):
+    adj = (rng.random((n, n)) < 0.03).astype(np.int8)
+    dist = np.where(rng.random((s, n)) < visited, 2, -1).astype(np.int32)
+    sigma = np.where(dist >= 0, rng.integers(1, 9, (s, n)), 0
+                     ).astype(np.float32)
+    f = ((rng.random((s, n)) < density) & (dist >= 0)).astype(np.int8)
+    fsigma = np.where(f != 0, sigma, 0.0).astype(np.float32)
+    return (jnp.asarray(fsigma), jnp.asarray(adj), jnp.asarray(dist),
+            jnp.asarray(sigma))
+
+
+@pytest.mark.parametrize("s,n,bs,bn,bk", [
+    (64, 256, 64, 128, 128),
+    (8, 128, 8, 128, 128),
+    (16, 384, 16, 128, 128),
+])
+def test_counting_sweep_shapes(s, n, bs, bn, bk):
+    rng = np.random.default_rng(s * n + 3)
+    fsigma, adj, dist, sigma = _random_counting_state(rng, s, n)
+    k_out = fused_counting_sweep(fsigma, adj, dist, sigma, 5, bs=bs, bn=bn,
+                                 bk=bk, interpret=True)
+    r_out = counting_sweep_ref(fsigma, adj, dist, sigma, 5)
+    for got, ref in zip(k_out, r_out):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def _counting_sweep_vs_ref(seed, density, visited):
+    rng = np.random.default_rng(seed)
+    fsigma, adj, dist, sigma = _random_counting_state(
+        rng, 64, 256, density=density, visited=visited)
+    k_out = fused_counting_sweep(fsigma, adj, dist, sigma, 7, bs=64,
+                                 bn=128, bk=128, interpret=True)
+    r_out = counting_sweep_ref(fsigma, adj, dist, sigma, 7)
+    for got, ref in zip(k_out, r_out):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_counting_sweep_randomized(seed):
+    rng = np.random.default_rng(seed * 6199 + 29)
+    _counting_sweep_vs_ref(int(rng.integers(0, 10_000)),
+                           float(rng.uniform(0.0, 0.3)),
+                           float(rng.uniform(0.0, 1.0)))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000), density=st.floats(0.0, 0.3),
+           visited=st.floats(0.0, 1.0))
+    def test_counting_sweep_property(seed, density, visited):
+        _counting_sweep_vs_ref(seed, density, visited)
+
+
+def test_counting_rectangular_partials_sum_to_square():
+    """K-row block partials combine with the masked-add ⊕ (sum of gated
+    candidates) to the square sweep — the sharded executor's reduction.
+    Path counts are integers in f32, so the sum is exact."""
+    rng = np.random.default_rng(19)
+    s, n, k = 8, 256, 128
+    fsigma, adj, dist, sigma = _random_counting_state(rng, s, n)
+    new_sq, dist_sq, sig_sq = fused_counting_sweep(
+        fsigma, adj, dist, sigma, 5, bs=8, bn=128, bk=128, interpret=True)
+    cand = np.zeros((s, n), np.float32)
+    for k0 in range(0, n, k):
+        new_p, _, nsg_p = fused_counting_sweep(
+            fsigma[:, k0: k0 + k], adj[k0: k0 + k], dist, sigma, 5,
+            bs=8, bn=128, bk=128, interpret=True)
+        cand += np.where(np.asarray(new_p) != 0, np.asarray(nsg_p), 0.0)
+    new = (cand > 0) & (np.asarray(dist) < 0)
+    np.testing.assert_array_equal(new.astype(np.int8), np.asarray(new_sq))
+    np.testing.assert_array_equal(
+        np.where(new, 5, np.asarray(dist)), np.asarray(dist_sq))
+    np.testing.assert_array_equal(
+        np.where(new, cand, np.asarray(sigma)), np.asarray(sig_sq))
+
+
+def test_counting_tile_skip_preserves_semantics():
+    """Dead frontier k-tiles and all-visited output tiles must not
+    change either half of the (dist, sigma) state — the boolean o_occ
+    is sound for the counting semiring (sigma only moves with dist)."""
+    rng = np.random.default_rng(23)
+    s, n = 64, 256
+    adj = (rng.random((n, n)) < 0.05).astype(np.int8)
+    dist = np.full((s, n), -1, np.int32)
+    dist[:, 128:] = 3                            # half the out-tiles visited
+    sigma = np.where(dist >= 0, 2.0, 0.0).astype(np.float32)
+    f = np.zeros((s, n), np.int8)
+    f[:, 128: 192] = (rng.random((s, 64)) < 0.2)  # half the k-tiles empty
+    fsigma = np.where(f != 0, sigma, 0.0).astype(np.float32)
+    args = (jnp.asarray(fsigma), jnp.asarray(adj), jnp.asarray(dist),
+            jnp.asarray(sigma))
+    k_out = fused_counting_sweep(*args, 4, bs=64, bn=128, bk=128,
+                                 interpret=True)
+    r_out = counting_sweep_ref(*args, 4)
+    for got, ref in zip(k_out, r_out):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
 
 
 # --------------------------------------------------------------------------

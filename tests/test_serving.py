@@ -96,3 +96,65 @@ def test_graph_service_routes_large_flushes_to_sharded_path():
         svc2.submit(GraphQuery(qid=i, source=i))
     svc2.flush()
     assert svc2.sharded_flushes == 0
+
+
+def test_graph_service_serves_analytics_queries():
+    """GraphQuery(analytics=...) joins the continuous-batching loop:
+    per-source measures micro-batch into one centrality run per flush;
+    betweenness is computed once, cached, and matches the independent
+    Brandes oracle."""
+    from oracles import (bfs_dist, brandes_betweenness,
+                         closeness_centrality, eccentricities,
+                         harmonic_centrality)
+    from repro.graph import generators as gen
+    from repro.serve import GraphQuery, GraphService
+
+    g = gen.watts_strogatz(96, 6, 0.1, seed=5)
+    svc = GraphService(g, max_batch=16)
+    for i in range(5):
+        svc.submit(GraphQuery(qid=i, source=i,
+                              analytics=("closeness", "harmonic",
+                                         "eccentricity")))
+    svc.submit(GraphQuery(qid=5, source=7, analytics=("betweenness",)))
+    svc.submit(GraphQuery(qid=6, source=3))       # distance query rides along
+    served = svc.flush()
+    assert len(served) == 7 and svc.pending() == 0
+    bc_ref = brandes_betweenness(g)
+    for q in served:
+        if q.analytics is None:
+            np.testing.assert_array_equal(q.dist, bfs_dist(g, q.source))
+            continue
+        src = np.asarray([q.source])
+        if "betweenness" in q.analytics:
+            np.testing.assert_allclose(q.analytics_result["betweenness"],
+                                       bc_ref[q.source], rtol=1e-4,
+                                       atol=1e-6)
+        else:
+            np.testing.assert_allclose(
+                q.analytics_result["closeness"],
+                closeness_centrality(g, src)[0], rtol=1e-9)
+            np.testing.assert_allclose(
+                q.analytics_result["harmonic"],
+                harmonic_centrality(g, src)[0], rtol=1e-5)
+            assert q.analytics_result["eccentricity"] == \
+                int(eccentricities(g, src)[0])
+    # the whole-graph betweenness vector is cached across flushes
+    assert svc._betweenness is not None
+    svc.submit(GraphQuery(qid=9, source=11, analytics=("betweenness",)))
+    (q,) = svc.flush()
+    np.testing.assert_allclose(q.analytics_result["betweenness"],
+                               bc_ref[11], rtol=1e-4, atol=1e-6)
+
+
+def test_graph_service_rejects_bad_analytics():
+    import pytest
+    from repro.graph import generators as gen
+    from repro.serve import GraphQuery, GraphService
+
+    g = gen.grid2d(6, 6)
+    svc = GraphService(g, max_batch=8)
+    with pytest.raises(ValueError, match="unknown analytics"):
+        svc.submit(GraphQuery(qid=0, source=0, analytics=("pagerank",)))
+    with pytest.raises(ValueError, match="unweighted"):
+        svc.submit(GraphQuery(qid=1, source=0, weighted=True,
+                              analytics=("closeness",)))

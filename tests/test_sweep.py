@@ -35,7 +35,7 @@ def test_exactly_one_while_loop_under_core():
 def test_every_layer_imports_the_sweep_layer():
     core_dir = Path(core.__file__).parent
     for name in ("bovm", "sovm", "bfs", "weighted", "wcc", "distributed",
-                 "engine"):
+                 "engine", "centrality"):
         text = (core_dir / f"{name}.py").read_text()
         assert re.search(r"from \. import sweep as S|from \.sweep import",
                          text), name
@@ -51,6 +51,7 @@ def test_core_reaches_kernels_only_through_the_registry():
             if line.strip().startswith(("import", "from")):
                 assert "kernels.bovm" not in line, (path.name, line)
                 assert "kernels.tropical" not in line, (path.name, line)
+                assert "kernels.counting" not in line, (path.name, line)
 
 
 def test_weighted_kernel_and_reference_share_the_one_driver(random_weighted):

@@ -1,0 +1,84 @@
+#!/usr/bin/env python
+"""Fail on dead intra-repo references in the documentation.
+
+Scans README.md and docs/*.md for
+
+  * markdown links whose target is a relative path — resolved against
+    the linking file's directory (anchors stripped); and
+  * backticked repo paths (tokens containing ``/`` that end in a known
+    source extension, with an optional ``::symbol`` suffix) — resolved
+    against the repo root or any of the package shorthand roots the
+    docs conventionally use (``src/``, ``src/repro/``,
+    ``src/repro/kernels/`` — so ``core/sweep.py`` means
+    ``src/repro/core/sweep.py``),
+
+and exits non-zero listing every target that does not exist.  This is
+what keeps docs/REPRODUCTION.md honest: every module/test path a claim
+row cites must resolve.  External (http/mailto) and pure-anchor links
+are ignored.
+
+    python tools/check_doc_links.py            # from the repo root
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import List
+
+DOC_GLOBS = ("README.md", "docs/*.md")
+# shorthand roots for backticked code paths, tried in order
+PATH_ROOTS = ("", "src/", "src/repro/", "src/repro/kernels/")
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_CODE_PATH = re.compile(
+    r"`([A-Za-z0-9_./-]+/[A-Za-z0-9_.-]+\.(?:py|md|json|yml|yaml|toml))"
+    r"(?:::[A-Za-z0-9_.]+)?`")
+
+
+def check(root: Path) -> List[str]:
+    """Return 'file: dead target' strings for every unresolvable
+    reference under ``root``."""
+    failures: List[str] = []
+    docs: List[Path] = []
+    for pattern in DOC_GLOBS:
+        docs.extend(sorted(root.glob(pattern)))
+    for doc in docs:
+        text = doc.read_text()
+        rel = doc.relative_to(root)
+        seen = set()
+        for m in _MD_LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path or path in seen:
+                continue
+            seen.add(path)
+            if not (doc.parent / path).exists():
+                failures.append(f"{rel}: dead link ({target})")
+        for m in _CODE_PATH.finditer(text):
+            path = m.group(1)
+            if path in seen:
+                continue
+            seen.add(path)
+            if not any((root / pre / path).exists()
+                       for pre in PATH_ROOTS):
+                failures.append(f"{rel}: dead code path (`{path}`)")
+    return failures
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    failures = check(root)
+    for f in failures:
+        print(f"[doc-links] FAIL {f}")
+    if failures:
+        print(f"[doc-links] {len(failures)} dead reference(s)")
+        return 1
+    n_docs = sum(len(list(root.glob(p))) for p in DOC_GLOBS)
+    print(f"[doc-links] OK — {n_docs} docs, no dead intra-repo links")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
