@@ -17,6 +17,15 @@ excluded by a warmup run).  On CPU the engine uses the XLA reference
 sweeps; the relative ordering of the three forms is what is under test,
 not absolute throughput.
 
+Two kernel-path comparisons ride along per family (interpret-mode
+Pallas): ``t_kernel_fused*`` vs ``t_kernel_push*`` time the fused
+multi-sweep blocks (``fused_steps=-1``, whole fixpoint per launch)
+against the per-sweep kernel loop, with dist bit-identity and the
+``sweeps_fused`` hard-gate field asserted first; ``t_push_packed*`` vs
+``t_push_f32*`` time one first-hop sweep through the bit-packed uint32
+push kernel against the f32 GEMM push it replaces (Eq. 13 operand
+shrink), again bit-identity first.
+
     PYTHONPATH=src python -m benchmarks.bench_apsp [--quick] [--out f.json]
 """
 from __future__ import annotations
@@ -26,9 +35,12 @@ import json
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
+import jax
+import jax.numpy as jnp
 
-from repro.core import EngineConfig, apsp_engine, prepare_graph
+from repro.core import EngineConfig, apsp_engine, pack_bits, prepare_graph
 from repro.graph import generators as gen
+from repro.kernels.bovm import fused_sweep, packed_push_sweep
 
 from ._timing import (BEAT_MARGIN, TOLERANCE, auto_vs_fixed,
                       time_interleaved_stats)
@@ -84,10 +96,79 @@ def run(quick: bool = False, n_sources: int = 64, repeats: int = 10,
         auto_ok_everywhere &= row["auto_no_slower_than_best"]
         if row["auto_beats_worse"]:
             beats_worse.append(name)
+
+        # --- fused multi-sweep blocks vs the per-sweep kernel loop.
+        # Both run the interpret-mode Pallas push kernel; bit-identity of
+        # dist and the sweep count is asserted before anything is timed,
+        # and ``sweeps_fused`` rides the hard regression gate.  Interpret
+        # mode re-traces the whole K-sweep block as XLA ops, so the fused
+        # column measures launch structure, not MXU residency.
+        cfg_kernel = EngineConfig(mode="push", source_batch=64,
+                                  use_kernel=True)
+        cfg_fused = EngineConfig(mode="push", source_batch=64,
+                                 use_kernel=True, fused_steps=-1)
+        res_k = apsp_engine(pg, sources, config=cfg_kernel)
+        res_f = apsp_engine(pg, sources, config=cfg_fused)
+        np.testing.assert_array_equal(np.asarray(res_f.dist),
+                                      np.asarray(res_k.dist))
+        assert int(res_f.sweeps) == int(res_k.sweeps)
+        row["sweeps_fused"] = int(res_f.sweeps)
+        row["fused_equals_per_sweep"] = True
+
+        def make_kernel_go(cfg):
+            def go():
+                apsp_engine(pg, sources, config=cfg).dist.block_until_ready()
+            return go
+
+        for mode, st in time_interleaved_stats(
+                {"kernel_push": make_kernel_go(cfg_kernel),
+                 "kernel_fused": make_kernel_go(cfg_fused)},
+                max(2, repeats // 3)).items():
+            row[f"t_{mode}"] = st["best"]
+            row[f"t_{mode}_median"] = st["median"]
+
+        # --- packed uint32 push vs the f32 GEMM it replaces: one sweep
+        # from the first-hop frontier, bit-identity asserted first.
+        s_b = int(len(sources))
+        f0 = np.zeros((s_b, pg.n_pad), np.int8)
+        f0[np.arange(s_b), np.asarray(sources)] = 1
+        d0 = np.full((s_b, pg.n_pad), -1, np.int32)
+        d0[np.arange(s_b), np.asarray(sources)] = 0
+        f0, d0 = jnp.asarray(f0), jnp.asarray(d0)
+        fp, ap = pack_bits(f0 > 0), pg.adj_pull
+        bs = 64 if s_b % 64 == 0 else s_b
+        new_p, dist_p = packed_push_sweep(fp, ap, d0, 0, bs=bs, bn=128,
+                                          wk=4, interpret=True)
+        new_g, dist_g = fused_sweep(f0, pg.adj, d0, 0, bs=bs, bn=128,
+                                    bk=128, interpret=True)
+        np.testing.assert_array_equal(np.asarray(dist_p), np.asarray(dist_g))
+        row["packed_push_matches_f32"] = True
+
+        pp = jax.jit(lambda: packed_push_sweep(fp, ap, d0, 0, bs=bs,
+                                               bn=128, wk=4,
+                                               interpret=True)[1])
+        pf = jax.jit(lambda: fused_sweep(f0, pg.adj, d0, 0, bs=bs, bn=128,
+                                         bk=128, interpret=True)[1])
+        for mode, st in time_interleaved_stats(
+                {"push_packed": lambda: pp().block_until_ready(),
+                 "push_f32": lambda: pf().block_until_ready()},
+                repeats).items():
+            row[f"t_{mode}"] = st["best"]
+            row[f"t_{mode}_median"] = st["median"]
+
         families[name] = row
         if csv is not None:
             csv.append(f"apsp_{name},{row['t_auto'] * 1e6:.1f},"
                        f"auto_vs_best={row['auto_vs_best']:.2f}")
+            csv.append(
+                f"apsp_{name}_fused,{row['t_kernel_fused'] * 1e6:.1f},"
+                f"fused_vs_per_sweep="
+                f"{row['t_kernel_fused'] / row['t_kernel_push']:.2f}")
+            csv.append(
+                f"apsp_{name}_push_packed,"
+                f"{row['t_push_packed'] * 1e6:.1f},"
+                f"packed_vs_f32="
+                f"{row['t_push_packed'] / row['t_push_f32']:.2f}")
     return {
         "benchmark": "bench_apsp",
         "tolerance": TOLERANCE,

@@ -39,7 +39,7 @@ DEFAULT_TIME_TOL = 6.0        # median may grow this much before failing
 MIN_GATE_SECONDS = 5e-3       # ignore timings too small to be stable
 
 _HARD_FAMILY_FIELDS = ("n_nodes", "n_edges", "n_sources", "sweeps",
-                       "sweeps_tropical", "sigma_checksum")
+                       "sweeps_fused", "sweeps_tropical", "sigma_checksum")
 _BENCHES = ("bench_apsp", "bench_weighted", "bench_sharded",
             "bench_centrality")
 
@@ -104,8 +104,12 @@ def compare(current: Dict, baseline: Dict
                     warnings.append(
                         f"{bench}/{fam}: {key} drifted {ratio:.2f}x "
                         f"(under the {time_tol}x gate)")
-            # advisory: timing-derived acceptance booleans
-            for flag in ("auto_no_slower_than_best", "auto_beats_worse"):
+            # advisory: timing-derived acceptance booleans (the two
+            # bit-identity flags are asserted in-bench before the JSON is
+            # written; a flip here means a hand-edited aggregate)
+            for flag in ("auto_no_slower_than_best", "auto_beats_worse",
+                         "fused_equals_per_sweep",
+                         "packed_push_matches_f32"):
                 if brow.get(flag) and not crow.get(flag, True):
                     warnings.append(f"{bench}/{fam}: {flag} flipped "
                                     f"True -> False (timing-derived; "

@@ -73,6 +73,9 @@ class CentralityConfig:
     bk: int = 128
     c_push: float = 1.0              # per f32 MAC in a live push tile
     c_sparse: float = 8.0            # per CSR gather + scatter-add lane
+    # fused multi-sweep blocks (kernel push path only): 0 = off, K > 0 =
+    # K sweeps per launch, -1 = whole fixpoint; pins the push form
+    fused_steps: int = 0
 
     def __post_init__(self):
         assert self.mode in ("auto",) + COUNTING_FORM_NAMES, self.mode
@@ -81,6 +84,8 @@ class CentralityConfig:
         assert self.source_batch <= 128 or self.source_batch % 128 == 0, \
             f"source_batch > 128 must be a multiple of 128, " \
             f"got {self.source_batch}"
+        assert self.fused_steps >= -1, \
+            f"fused_steps must be -1, 0 or positive, got {self.fused_steps}"
 
 
 class CountingResult(NamedTuple):
@@ -116,11 +121,13 @@ class CentralityResult(NamedTuple):
 
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "n_real", "n_pad", "max_steps",
-                                    "use_kernel", "interpret", "forced_dir"))
+                                    "use_kernel", "interpret", "forced_dir",
+                                    "fused_steps"))
 def _run_counting_batch(adj, src_idx, dst_idx, deg, sources, n_valid, *,
                         cfg: CentralityConfig, n_real: int, n_pad: int,
                         max_steps: int, use_kernel: bool, interpret: bool,
-                        forced_dir: Optional[int]) -> S.SweepState:
+                        forced_dir: Optional[int],
+                        fused_steps: int = 0) -> S.SweepState:
     s = sources.shape[0]
     m_pad = src_idx.shape[0]
     bs = min(s, 128)
@@ -149,10 +156,16 @@ def _run_counting_batch(adj, src_idx, dst_idx, deg, sources, n_valid, *,
     else:
         choose = None
 
+    fused = None
+    if fused_steps:  # resolved upstream: kernel path, push pinned
+        fused = S.fused_form("counting", adj, "push", bs=bs,
+                             max_sweeps=fused_steps, interpret=interpret)
+
     st0 = S.make_state(f0, (dist0, sigma0), n_forms=2)
     return S.sweep_loop(forms, st0, max_steps=max_steps, deg=deg,
                         choose=choose,
-                        forced_dir=0 if forced_dir is None else forced_dir)
+                        forced_dir=0 if forced_dir is None else forced_dir,
+                        fused=fused, fused_steps=fused_steps)
 
 
 def measure_counting_costs(pg: PreparedGraph, s: int,
@@ -214,6 +227,14 @@ def counting_apsp_blocks(g: Union[CSRGraph, PreparedGraph],
     B = config.source_batch
     forced = _resolve_counting_direction(pg, B, config, use_kernel,
                                          interpret)
+    fused_steps = 0
+    if config.fused_steps and forced in (None, PUSH):
+        fused_steps = S.resolve_fused_steps(
+            "counting", "push", fused_steps=config.fused_steps,
+            max_steps=max_steps, use_kernel=use_kernel, n_pad=pg.n_pad,
+            bs=min(B, 128)) or 0
+        if fused_steps:
+            forced = PUSH       # fused blocks pin the push form
     # the dense operand only materializes when push can dispatch
     adj = pg.adj if forced in (None, PUSH) else jnp.zeros((1, 1), jnp.int8)
     for lo in range(0, len(srcs), B):
@@ -226,7 +247,7 @@ def counting_apsp_blocks(g: Union[CSRGraph, PreparedGraph],
                                  cfg=config, n_real=n, n_pad=pg.n_pad,
                                  max_steps=max_steps,
                                  use_kernel=use_kernel, interpret=interpret,
-                                 forced_dir=forced)
+                                 forced_dir=forced, fused_steps=fused_steps)
         dist, sigma = st.dist
         yield block, dist[:valid, :n], sigma[:valid, :n], st
 

@@ -90,11 +90,19 @@ class ShardedConfig:
     # auto-mode cost constants (same units as the single-device engines)
     c_dense: float = 1.0
     c_sparse: float = 8.0
+    # fused multi-sweep blocks (boolean, mode="dense", kernel path,
+    # C == 1 only): 0 = off, K > 0 = K sweeps per launch, -1 = whole
+    # fixpoint.  Vertex sharding (C > 1) needs a cross-shard ⊕ between
+    # sweeps, so it always falls back to the per-sweep loop; with C == 1
+    # only the Fact-1 predicate crosses shards and the fused block's
+    # (prod, stopped) scalars psum/pmax-combine instead (fused_combine).
+    fused_steps: int = 0
 
     def __post_init__(self):
         assert self.semiring in ("boolean", "tropical", "counting"), \
             self.semiring
         assert self.mode in ("auto",) + SHARDED_FORM_NAMES, self.mode
+        assert self.fused_steps >= -1, self.fused_steps
 
     @property
     def tropical(self) -> bool:
@@ -245,6 +253,8 @@ def _make_runner(mesh: Mesh, cfg: ShardedConfig, n_pad: int, n_real: int,
             src_e, dst_e = src_e[0], dst_e[0]
             w_e = w_e[0] if w_e.ndim == 2 else w_e
         s_l = f0_l.shape[0]
+        fused = fused_combine = None
+        fused_steps_l = 0
 
         def or_combine(new_p):
             """Cross-shard ⊕ = OR, bit-packed: all-gather uint32 words
@@ -341,8 +351,13 @@ def _make_runner(mesh: Mesh, cfg: ShardedConfig, n_pad: int, n_real: int,
                         nd = partial_nd(fd, d)
                         return (nd < d).astype(jnp.int8), nd, p
             else:
+                # the kernel push is bit-packed: pack the transpose of
+                # the local K-row block (C == 1: the full pull operand)
+                # once per trace — word-exact vs graph.to_pull_packed
+                adj_pull_l = pack_bits(jnp.transpose(dense_l) != 0) \
+                    if use_kernel else jnp.zeros((1, 1), jnp.uint32)
                 push = S.boolean_forms(
-                    dense_l, jnp.zeros((1, 1), jnp.uint32),
+                    dense_l, adj_pull_l,
                     jnp.zeros((1,), jnp.int32), jnp.zeros((1,), jnp.int32),
                     n_pad=n_pad, s=s_l, bn=cfg.bn, bk=cfg.bk,
                     use_kernel=use_kernel, interpret=interpret)[S.PUSH]
@@ -356,6 +371,28 @@ def _make_runner(mesh: Mesh, cfg: ShardedConfig, n_pad: int, n_real: int,
                         return new, jnp.where(new != 0, step, d), p
                 else:
                     dense_form = push
+                    if cfg.fused_steps and use_kernel \
+                            and cfg.mode == "dense":
+                        fused_steps_l = S.resolve_fused_steps(
+                            "boolean", "push",
+                            fused_steps=cfg.fused_steps,
+                            max_steps=cfg.max_sweeps or n_real,
+                            use_kernel=True, n_pad=n_pad,
+                            bs=min(s_l, 128)) or 0
+                    if fused_steps_l:
+                        fused = S.fused_form(
+                            "boolean", adj_pull_l, "push",
+                            bs=min(s_l, 128), max_sweeps=fused_steps_l,
+                            interpret=interpret)
+
+                        def fused_combine(prod, stopped):
+                            # like `converged`: the fused block's scalars
+                            # must agree on every shard so each shard's
+                            # while_loop takes the same trip count
+                            prod = jax.lax.pmax(prod, all_axes)
+                            alive = jax.lax.psum(
+                                (~stopped).astype(jnp.int32), all_axes)
+                            return prod, alive == 0
 
         # ---- sparse form: scatter-⊕ over the shard's CSR lanes --------
         sparse_form = None
@@ -434,7 +471,9 @@ def _make_runner(mesh: Mesh, cfg: ShardedConfig, n_pad: int, n_real: int,
                           max_steps=steps, choose=choose,
                           forced_dir=0 if cfg.mode in ("auto", "dense")
                           else 1,
-                          converged=converged)
+                          converged=converged,
+                          fused=fused, fused_steps=fused_steps_l,
+                          fused_combine=fused_combine)
         if counting:
             dist_out, sigma_out = st.dist
         else:

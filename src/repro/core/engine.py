@@ -73,6 +73,10 @@ class EngineConfig:
     use_kernel: Optional[bool] = None  # None -> Pallas kernels iff on TPU
     dynamic: Optional[bool] = None   # per-sweep switch; None -> use_kernel
     max_steps: Optional[int] = None  # None -> n_nodes (diameter bound)
+    # fused multi-sweep blocks: 0 = off, K > 0 = K sweeps per kernel
+    # launch, -1 = whole fixpoint in one launch.  Kernel path only; pins
+    # the push direction (sweep.resolve_fused_steps documents the gate).
+    fused_steps: int = 0
     # push-kernel tiles (bs adapts to the source batch)
     bn: int = 128
     bk: int = 128
@@ -90,6 +94,9 @@ class EngineConfig:
         assert self.source_batch <= 128 or self.source_batch % 128 == 0, \
             f"source_batch > 128 must be a multiple of 128, " \
             f"got {self.source_batch}"
+        assert self.fused_steps >= -1, \
+            f"fused_steps must be -1 (whole fixpoint), 0 (off) or a " \
+            f"positive sweep count, got {self.fused_steps}"
 
 
 class SweepStats(NamedTuple):
@@ -203,11 +210,12 @@ def choose_direction(stats: SweepStats, *, n_pad: int, s: int, m_pad: int,
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "n_real", "n_pad", "max_steps",
                                     "use_kernel", "interpret",
-                                    "forced_dir"))
+                                    "forced_dir", "fused_steps"))
 def _run_batch(adj, adj_pull, src_idx, dst_idx, deg, sources, n_valid, *,
                cfg: EngineConfig, n_real: int, n_pad: int, max_steps: int,
                use_kernel: bool, interpret: bool,
-               forced_dir: Optional[int]) -> SweepState:
+               forced_dir: Optional[int],
+               fused_steps: int = 0) -> SweepState:
     # n_valid is traced (not static): the serving loop flushes micro-batches
     # of whatever size is pending, and each distinct count must not retrace
     s = sources.shape[0]
@@ -239,10 +247,16 @@ def _run_batch(adj, adj_pull, src_idx, dst_idx, deg, sources, n_valid, *,
     else:  # direction resolved at trace time: no stats, no switch
         choose = None
 
+    fused = None
+    if fused_steps:  # resolved upstream: kernel path, push pinned
+        fused = S.fused_form("boolean", adj_pull, "push", bs=bs,
+                             max_sweeps=fused_steps, interpret=interpret)
+
     st0 = S.make_state(f0, dist0, n_forms=3)
     return S.sweep_loop(forms, st0, max_steps=max_steps, deg=deg,
                         choose=choose,
-                        forced_dir=0 if forced_dir is None else forced_dir)
+                        forced_dir=0 if forced_dir is None else forced_dir,
+                        fused=fused, fused_steps=fused_steps)
 
 
 # --------------------------------------------------------------------------
@@ -325,11 +339,27 @@ def apsp_engine_blocks(
     max_steps = config.max_steps or n
     B = config.source_batch
     forced_dir = _resolve_direction(pg, B, config, use_kernel, interpret)
+    # fused multi-sweep blocks only exist on the kernel push path; the
+    # resolver returns None (-> per-sweep loop) whenever the capability is
+    # missing or the whole-operand residency would blow the VMEM budget
+    fused_steps = 0
+    if config.fused_steps and forced_dir in (None, PUSH):
+        fused_steps = S.resolve_fused_steps(
+            "boolean", "push", fused_steps=config.fused_steps,
+            max_steps=max_steps, use_kernel=use_kernel, n_pad=pg.n_pad,
+            bs=min(B, 128)) or 0
+        if fused_steps:
+            forced_dir = PUSH   # fused blocks pin one direction
     # only materialize the O(n_pad^2) operands the resolved direction can
-    # dispatch; the other slot gets a (1, 1) dummy its closure never traces
-    adj = pg.adj if forced_dir in (None, PUSH) else \
+    # dispatch; the other slot gets a (1, 1) dummy its closure never
+    # traces.  The kernel path runs *both* dense directions (and the
+    # fused block) off the bit-packed pull operand; the dense int8
+    # adjacency only feeds the XLA reference push.
+    adj = pg.adj if (forced_dir in (None, PUSH) and not use_kernel) else \
         jnp.zeros((1, 1), jnp.int8)
-    adj_pull = pg.adj_pull if forced_dir in (None, PULL) else \
+    adj_pull = pg.adj_pull if (
+        forced_dir in (None, PULL)
+        or (forced_dir in (None, PUSH) and use_kernel)) else \
         jnp.zeros((1, 1), jnp.uint32)
     for lo in range(0, len(srcs), B):
         block = srcs[lo: lo + B]
@@ -341,7 +371,7 @@ def apsp_engine_blocks(
                         cfg=config, n_real=n, n_pad=pg.n_pad,
                         max_steps=max_steps,
                         use_kernel=use_kernel, interpret=interpret,
-                        forced_dir=forced_dir)
+                        forced_dir=forced_dir, fused_steps=fused_steps)
         yield block, st.dist[:valid, :n], st
 
 

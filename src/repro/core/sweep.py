@@ -46,6 +46,7 @@ from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels import common as kernel_common
 from ..kernels import registry as kernel_registry
 from .frontier import UNREACHED, pack_bits
 
@@ -138,6 +139,8 @@ def sweep_loop(forms: Sequence[SweepForm], state: SweepState, *,
                choose: Optional[Callable[[SweepState], jax.Array]] = None,
                forced_dir: int = 0,
                converged: Optional[Callable[[jax.Array], jax.Array]] = None,
+               fused: Optional[Callable] = None, fused_steps: int = 0,
+               fused_combine: Optional[Callable] = None,
                ) -> SweepState:
     """THE sweep driver — the only ``lax.while_loop`` under repro/core.
 
@@ -151,37 +154,117 @@ def sweep_loop(forms: Sequence[SweepForm], state: SweepState, *,
     converged  : Fact-1 test over the new frontier; default
                  ``~any(new)``.  The distributed path overrides it with a
                  psum so all shards agree on termination.
+    fused      : optional fused multi-sweep block ``(frontier, dist, step,
+                 n_run) -> (new, dist, prod, stopped)`` built by
+                 :func:`fused_form` — each loop iteration then executes up
+                 to ``fused_steps`` sweeps inside ONE persistent kernel
+                 (Fact 1 in-kernel), and the body reconstructs the exact
+                 per-sweep accounting from the kernel's (productive-count,
+                 converged) pair: a tile's productivity is prefix-
+                 contiguous, so the block executed ``prod + 1`` sweeps if
+                 it converged and ``n_run`` otherwise.  ``step``,
+                 ``sweeps``, ``done``, ``dir_counts`` and the final
+                 frontier/dist are bit-identical to the per-sweep path;
+                 only ``edges_touched`` is not tracked (stays at its prior
+                 value — the fused kernel never materializes per-sweep
+                 frontiers to weigh against ``deg``).  ``choose`` must be
+                 None (fusion pins one direction).
+    fused_combine : optional cross-shard reduction of the block's
+                 ``(prod, stopped)`` pair (pmax / psum-all) so every
+                 shard of the distributed executor agrees on the loop
+                 accounting — the fused analogue of ``converged``.
     """
     forms = tuple(forms)
 
     def cond(st: SweepState):
         return (~st.done) & (st.step < max_steps)
 
-    def body(st: SweepState):
-        step = st.step + 1
-        if choose is None:
-            idx = jnp.int32(forced_dir)
-            new, dist, parent = forms[forced_dir](st.frontier, st.dist,
-                                                  st.parent, step)
-        else:
-            idx = choose(st)
-            new, dist, parent = jax.lax.switch(idx, forms, st.frontier,
-                                               st.dist, st.parent, step)
-        if converged is None:
-            stop = ~jnp.any(new != 0)
-        else:
-            stop = converged(new)
-        touched = st.edges_touched
-        if deg is not None:
-            touched = touched + jnp.sum(
-                (st.frontier != 0).astype(jnp.float32) * deg)
-        return SweepState(
-            frontier=new, dist=dist, parent=parent, step=step, done=stop,
-            sweeps=jnp.where(stop, st.sweeps, step),
-            edges_touched=touched,
-            dir_counts=st.dir_counts.at[idx].add(1))
+    if fused is not None:
+        assert choose is None, "fused blocks pin one direction"
+
+        def body(st: SweepState):
+            n_run = jnp.minimum(jnp.asarray(fused_steps, jnp.int32),
+                                jnp.asarray(max_steps, jnp.int32) - st.step)
+            new, dist, prod, stopped = fused(st.frontier, st.dist,
+                                             st.step, n_run)
+            if fused_combine is not None:
+                prod, stopped = fused_combine(prod, stopped)
+            executed = jnp.where(stopped, prod + 1, n_run)
+            return SweepState(
+                frontier=new, dist=dist, parent=st.parent,
+                step=st.step + executed, done=stopped,
+                sweeps=jnp.where(prod > 0, st.step + prod, st.sweeps),
+                edges_touched=st.edges_touched,
+                dir_counts=st.dir_counts.at[jnp.int32(forced_dir)]
+                                        .add(executed))
+    else:
+        def body(st: SweepState):
+            step = st.step + 1
+            if choose is None:
+                idx = jnp.int32(forced_dir)
+                new, dist, parent = forms[forced_dir](st.frontier, st.dist,
+                                                      st.parent, step)
+            else:
+                idx = choose(st)
+                new, dist, parent = jax.lax.switch(idx, forms, st.frontier,
+                                                   st.dist, st.parent, step)
+            if converged is None:
+                stop = ~jnp.any(new != 0)
+            else:
+                stop = converged(new)
+            touched = st.edges_touched
+            if deg is not None:
+                touched = touched + jnp.sum(
+                    (st.frontier != 0).astype(jnp.float32) * deg)
+            return SweepState(
+                frontier=new, dist=dist, parent=parent, step=step, done=stop,
+                sweeps=jnp.where(stop, st.sweeps, step),
+                edges_touched=touched,
+                dir_counts=st.dir_counts.at[idx].add(1))
 
     return jax.lax.while_loop(cond, body, state)
+
+
+# --------------------------------------------------------------------------
+# fused multi-sweep dispatch (the persistent-kernel capability seam)
+# --------------------------------------------------------------------------
+
+def resolve_fused_steps(semiring, form: str, *, fused_steps: int,
+                        max_steps: int, use_kernel: bool, n_pad: int,
+                        bs: int) -> Optional[int]:
+    """Static fused-block length for an engine run, or ``None`` for the
+    per-sweep path.  ``fused_steps`` is the engine config's request: 0 =
+    off, -1 = whole fixpoint per invocation, K > 0 = K-sweep blocks.
+    Fusion engages only on the kernel path, only when the semiring
+    registers a fused form for ``form``, and only when the fused kernel's
+    whole-operand VMEM residency (``vmem_bytes(form="fused")``) fits the
+    per-core budget — oversized graphs silently fall back to per-sweep
+    dispatch rather than blowing VMEM."""
+    if not fused_steps or not use_kernel or not kernel_registry.has(semiring):
+        return None
+    ks = kernel_registry.get(semiring)
+    if form not in ks.fused_forms:
+        return None
+    if ks.vmem_bytes(form="fused", bs=bs, n=n_pad) > \
+            kernel_common.VMEM_BUDGET_BYTES:
+        return None
+    return max_steps if fused_steps < 0 else min(fused_steps, max_steps)
+
+
+def fused_form(semiring, operand, form: str, *, bs: int, max_sweeps: int,
+               interpret: bool = True) -> Callable:
+    """Close a registered fused multi-sweep kernel over its operand —
+    the fused analogue of the per-sweep form closures.  The result has
+    the ``sweep_loop(fused=...)`` contract: ``(frontier, dist, step,
+    n_run) -> (new, dist, prod, stopped)``, where ``dist`` is the loop
+    state's dist slot (the (dist, sigma) pair for counting)."""
+    kern = kernel_registry.get(semiring).fused_forms[form]
+
+    def fused(f, state, step, n_run):
+        return kern(f, operand, state, step, n_run, bs=bs,
+                    max_sweeps=max_sweeps, interpret=interpret)
+
+    return fused
 
 
 # --------------------------------------------------------------------------
@@ -221,7 +304,10 @@ def boolean_forms(adj, adj_pull, src_idx, dst_idx, *, n_pad: int, s: int,
     :func:`derive_parents` applies as a post-pass).
 
     ``use_kernel`` swaps the push/pull closures for the boolean Pallas
-    kernels looked up in :mod:`repro.kernels.registry`.
+    kernels looked up in :mod:`repro.kernels.registry`.  BOTH kernel
+    directions read the bit-packed ``adj_pull`` operand (the kernel push
+    is the packed word-AND/OR sweep — no f32 GEMM on the boolean kernel
+    path); ``adj`` feeds only the XLA reference push.
     """
     bs = min(s, 128)
     chunk = _pull_chunk_size(n_pad, pull_chunk)
@@ -229,9 +315,16 @@ def boolean_forms(adj, adj_pull, src_idx, dst_idx, *, n_pad: int, s: int,
 
     if use_kernel:
         K = kernel_registry.get(BOOLEAN).forms
+        # The kernel push is bit-packed (paper Eq. 13): it drives the SAME
+        # word-AND/OR math as pull over ``adj_pull`` — whose word width may
+        # be rectangular (a sharded K-row block packs n/C contraction rows)
+        # — so its word tile comes off the operand, not n_pad.  The f32
+        # GEMM push survives as the registry's "push_f32" form.
+        wk_push = _pull_kernel_wk(adj_pull.shape[1])
 
         def push(f, d, p, step):
-            new, dist = K["push"](f, adj, d, step, bs=bs, bn=bn, bk=bk,
+            new, dist = K["push"](pack_bits(f != 0), adj_pull, d, step,
+                                  bs=bs, bn=bn, wk=wk_push,
                                   interpret=interpret)
             return new, dist, p
 

@@ -94,6 +94,9 @@ class WeightedConfig:
     eb: int = 128                    # sparse relax kernel edges per step
     c_dense: float = 1.0
     c_sparse: float = 8.0
+    # fused multi-sweep blocks (kernel dense path only): 0 = off, K > 0 =
+    # K sweeps per launch, -1 = whole fixpoint; pins the dense form
+    fused_steps: int = 0
 
     def __post_init__(self):
         assert self.mode in ("auto",) + WEIGHTED_FORM_NAMES, self.mode
@@ -104,6 +107,8 @@ class WeightedConfig:
         assert self.source_batch <= 128 or self.source_batch % 128 == 0, \
             f"source_batch > 128 must be a multiple of 128, " \
             f"got {self.source_batch}"
+        assert self.fused_steps >= -1, \
+            f"fused_steps must be -1, 0 or positive, got {self.fused_steps}"
 
 
 @dataclasses.dataclass
@@ -173,12 +178,14 @@ def minplus_sssp(g: CSRGraph, weights: jax.Array, source, *,
 
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "n_real", "n_pad", "max_sweeps",
-                                    "use_kernel", "interpret", "forced_dir"))
+                                    "use_kernel", "interpret", "forced_dir",
+                                    "fused_steps"))
 def _run_weighted_batch(wdense, src_idx, dst_idx, w_edges, deg, sources,
                         n_valid, *, cfg: WeightedConfig, n_real: int,
                         n_pad: int, max_sweeps: int, use_kernel: bool,
                         interpret: bool,
-                        forced_dir: Optional[int]) -> S.SweepState:
+                        forced_dir: Optional[int],
+                        fused_steps: int = 0) -> S.SweepState:
     s = sources.shape[0]
     m_pad = src_idx.shape[0]
     bs = min(s, 128)
@@ -207,10 +214,16 @@ def _run_weighted_batch(wdense, src_idx, dst_idx, w_edges, deg, sources,
     else:
         choose = None
 
+    fused = None
+    if fused_steps:  # resolved upstream: kernel path, dense pinned
+        fused = S.fused_form("tropical", wdense, "dense", bs=bs,
+                             max_sweeps=fused_steps, interpret=interpret)
+
     st0 = S.make_state(f0, dist0, n_forms=2)
     return S.sweep_loop(forms, st0, max_steps=max_sweeps, deg=deg,
                         choose=choose,
-                        forced_dir=0 if forced_dir is None else forced_dir)
+                        forced_dir=0 if forced_dir is None else forced_dir,
+                        fused=fused, fused_steps=fused_steps)
 
 
 def measure_weighted_costs(pw: PreparedWeightedGraph, s: int,
@@ -281,6 +294,14 @@ def weighted_apsp(g: Union[CSRGraph, PreparedWeightedGraph],
     use_kernel, interpret = _resolve_kernel(config)
     forced = _resolve_weighted_direction(pw, B, config, use_kernel,
                                          interpret)
+    fused_steps = 0
+    if config.fused_steps and forced in (None, DENSE):
+        fused_steps = S.resolve_fused_steps(
+            "tropical", "dense", fused_steps=config.fused_steps,
+            max_steps=max_sweeps, use_kernel=use_kernel, n_pad=pw.n_pad,
+            bs=min(B, 128)) or 0
+        if fused_steps:
+            forced = DENSE      # fused blocks pin the dense form
     # only materialize the O(n_pad^2) dense operand when it can dispatch
     wdense = pw.wdense if forced in (None, DENSE) else None
 
@@ -298,7 +319,7 @@ def weighted_apsp(g: Union[CSRGraph, PreparedWeightedGraph],
                                  jnp.int32(valid), cfg=config, n_real=n,
                                  n_pad=pw.n_pad, max_sweeps=max_sweeps,
                                  use_kernel=use_kernel, interpret=interpret,
-                                 forced_dir=forced)
+                                 forced_dir=forced, fused_steps=fused_steps)
         rows.append(st.dist[:valid, :n])
         sweeps = jnp.maximum(sweeps, st.step)
         counts = counts + st.dir_counts

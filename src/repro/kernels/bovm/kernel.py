@@ -1,6 +1,28 @@
 """Pallas TPU kernels for the DAWN sweep (the paper's compute hot spot).
 
-Two kernels, matching the paper's two directions:
+Four kernels: both paper directions, each bit-packed, plus the f32 GEMM
+push and the fused multi-sweep persistent kernel:
+
+``packed_push_kernel`` — push direction, bit-packed (the engine default).
+  The boolean push and pull sweeps are the SAME computation once the
+  frontier is packed over the contraction axis:
+  hits[s, j] = OR_w(frontier[s, w] & in_nbrs[j, w]) — so the push form
+  drives the identical word-AND/OR math over ``adj_pull`` with a 128-row
+  source tile and the push kernel's occupancy gating (f_occ frontier
+  blocks, o_occ unreached tiles — Thm 3.2 at tile rank).  This is the
+  paper's Eq. 13 BOVM memory model made compute: 32 frontier lanes per
+  uint32 op, no f32 GEMM anywhere on the boolean kernel path.
+
+``fused_boolean_kernel`` — the fused multi-sweep persistent kernel.
+  Grid (S/bs,) over source tiles only; each invocation runs up to
+  ``max_sweeps`` sweeps with the packed frontier, distances and the whole
+  packed operand resident in VMEM, evaluating the Fact-1 convergence
+  check in-kernel.  Source tiles evolve independently (the operand is
+  read-only), and a tile's productivity is prefix-contiguous (an empty
+  frontier stays empty), so per-tile (productive-count, converged) pairs
+  max/all-reduce to exactly the per-sweep loop's global accounting — the
+  wrapper returns them and ``core/sweep.py::sweep_loop`` advances its
+  step/sweeps counters as if each sweep had been dispatched separately.
 
 ``fused_sweep_kernel`` — push direction (paper Alg. 1 as batched GEMM).
   Grid (Si, Nj, Kk), K innermost.  Each (i, j) output tile accumulates
@@ -33,6 +55,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ...core.frontier import pack_bits as frontier_pack_bits
 from .. import common
 
 
@@ -117,16 +140,7 @@ def _packed_pull_kernel(step_ref,                 # scalar prefetch
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    f = f_ref[...]       # (bs, wk) uint32
-    at = at_ref[...]     # (bn, wk) uint32
-
-    def word(w, acc):
-        fw = jax.lax.dynamic_slice_in_dim(f, w, 1, 1)    # (bs, 1)
-        aw = jax.lax.dynamic_slice_in_dim(at, w, 1, 1)   # (bn, 1)
-        pair = fw & aw.reshape(1, -1)                    # (bs, bn) uint32
-        return acc | (pair != 0).astype(jnp.int32)
-
-    acc_ref[...] = jax.lax.fori_loop(0, f.shape[1], word, acc_ref[...])
+    acc_ref[...] = _word_hits(f_ref[...], at_ref[...], acc_ref[...])
 
     @pl.when(k == nk - 1)
     def _epilogue():
@@ -134,6 +148,20 @@ def _packed_pull_kernel(step_ref,                 # scalar prefetch
         new = (acc_ref[...] > 0) & (dist < 0)
         new_ref[...] = new.astype(jnp.int8)
         dist_out_ref[...] = jnp.where(new, step_ref[0], dist)
+
+
+def _word_hits(f: jax.Array, at: jax.Array, acc: jax.Array) -> jax.Array:
+    """OR over packed words: acc[s, j] |= any_w(f[s, w] & at[j, w]).
+    ``f`` (bs, wk) uint32, ``at`` (bn, wk) uint32, ``acc`` (bs, bn) int32
+    — the single VPU inner loop shared by the packed pull AND packed push
+    kernels (one word of 32 contraction lanes per step)."""
+    def word(w, acc):
+        fw = jax.lax.dynamic_slice_in_dim(f, w, 1, 1)    # (bs, 1)
+        aw = jax.lax.dynamic_slice_in_dim(at, w, 1, 1)   # (bn, 1)
+        pair = fw & aw.reshape(1, -1)                    # (bs, bn) uint32
+        return acc | (pair != 0).astype(jnp.int32)
+
+    return jax.lax.fori_loop(0, f.shape[1], word, acc)
 
 
 @functools.partial(jax.jit, static_argnames=("bs", "bn", "wk", "interpret"))
@@ -162,3 +190,164 @@ def packed_pull_sweep(frontier_packed: jax.Array, adj_in_packed: jax.Array,
         interpret=interpret,
     )(step_arr, frontier_packed, adj_in_packed, dist)
     return new, dist_out
+
+
+# --------------------------------------------------------------------------
+# push direction, bit-packed: the same word math as pull, with the push
+# kernel's occupancy gating — the engine's boolean kernel default
+# --------------------------------------------------------------------------
+
+def _packed_push_kernel(f_occ_ref, o_occ_ref, step_ref,   # scalar prefetch
+                        f_ref, at_ref, dist_ref,          # VMEM in
+                        new_ref, dist_out_ref,            # VMEM out
+                        acc_ref):                         # VMEM scratch i32
+    i, j, k = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    live = (f_occ_ref[i, k] > 0) & (o_occ_ref[i, j] > 0)
+
+    @pl.when(live)
+    def _accumulate():
+        acc_ref[...] = _word_hits(f_ref[...], at_ref[...], acc_ref[...])
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        dist = dist_ref[...]
+        new = (acc_ref[...] > 0) & (dist < 0)
+        new_ref[...] = new.astype(jnp.int8)
+        dist_out_ref[...] = jnp.where(new, step_ref[0], dist)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "bn", "wk", "interpret"))
+def packed_push_sweep(frontier_packed: jax.Array, adj_in_packed: jax.Array,
+                      dist: jax.Array, step: jax.Array, *, bs: int = 128,
+                      bn: int = 128, wk: int = 128, interpret: bool = False):
+    """Bit-packed push sweep.  frontier_packed (S, W) uint32 — the packed
+    frontier over the contraction axis — adj_in_packed (n, W) uint32 (the
+    same operand the pull kernel reads; for a sharded K-row block the W
+    words cover the block's k rows), dist (S, n) int32.  S % bs == 0,
+    n % bn == 0, W % wk == 0.  Emits NO f32 GEMM: the (∨, ∧) product is
+    pure uint32 word AND/OR on the VPU (paper Eq. 13: 32 lanes/word),
+    gated by the push kernel's f_occ/o_occ occupancy tables."""
+    s, w = frontier_packed.shape
+    n = adj_in_packed.shape[0]
+    assert adj_in_packed.shape == (n, w) and dist.shape == (s, n)
+    assert s % bs == 0 and n % bn == 0 and w % wk == 0, (s, n, w, bs, bn, wk)
+    gi, gj, gk = s // bs, n // bn, w // wk
+
+    f_occ = common.block_any(frontier_packed != 0, gi, bs, gk, wk)
+    o_occ = common.block_any(dist < 0, gi, bs, gj, bn)
+    step_arr = jnp.asarray(step, jnp.int32).reshape(1)
+
+    grid_spec = common.pull_grid_spec(gi, gj, gk, bs=bs, bn=bn, wk=wk,
+                                      num_scalar_prefetch=3,
+                                      acc_dtype=jnp.int32)
+    new, dist_out = pl.pallas_call(
+        _packed_push_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((s, n), jnp.int8),
+                   jax.ShapeDtypeStruct((s, n), jnp.int32)],
+        compiler_params=common.sweep_compiler_params(),
+        interpret=interpret,
+    )(f_occ.astype(jnp.int32), o_occ.astype(jnp.int32), step_arr,
+      frontier_packed, adj_in_packed, dist)
+    return new, dist_out
+
+
+# --------------------------------------------------------------------------
+# fused multi-sweep persistent kernel (boolean): K sweeps — or the whole
+# fixpoint — per invocation, Fact 1 evaluated in-kernel
+# --------------------------------------------------------------------------
+
+def _pack_words(mask: jax.Array) -> jax.Array:
+    """(bs, n) bool -> (bs, n/32) uint32 — in-kernel re-pack of the new
+    frontier between fused sweeps.  Bit-for-bit the same little-endian
+    layout as ``core.frontier.pack_bits`` (n is 128-aligned, no padding)."""
+    bs, n = mask.shape
+    bits = mask.reshape(bs, n // 32, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def _fused_boolean_kernel(meta_ref,                        # scalar prefetch
+                          f_ref, at_ref, dist_ref,         # VMEM in
+                          new_ref, dist_out_ref,           # VMEM out
+                          prod_ref, stop_ref,              # VMEM out (1, 1)
+                          *, max_sweeps: int):
+    step0 = meta_ref[0]
+    n_run = meta_ref[1]
+    at = at_ref[...]                     # (n, W) uint32, resident throughout
+    d0 = dist_ref[...]                   # (bs, n) int32
+
+    def sweep(t, carry):
+        done, prod, f, d, new8 = carry
+        live = (done == 0) & (t < n_run)
+        hits = _word_hits(f, at, jnp.zeros(d.shape, jnp.int32))
+        new = (hits > 0) & (d < 0)
+        any_new = jnp.any(new)
+        d = jnp.where(new & live, step0 + 1 + t, d)
+        new8 = jnp.where(live, new.astype(jnp.int8), new8)
+        f = jnp.where(live, _pack_words(new), f)
+        prod = prod + (live & any_new).astype(jnp.int32)
+        done = done | (live & ~any_new).astype(jnp.int32)
+        return done, prod, f, d, new8
+
+    done, prod, _, d, new8 = jax.lax.fori_loop(
+        0, max_sweeps, sweep,
+        (jnp.int32(0), jnp.int32(0), f_ref[...], d0,
+         jnp.zeros(d0.shape, jnp.int8)))
+    new_ref[...] = new8
+    dist_out_ref[...] = d
+    prod_ref[0, 0] = prod
+    stop_ref[0, 0] = done
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bs", "max_sweeps", "interpret"))
+def fused_boolean_multisweep(frontier: jax.Array, adj_in_packed: jax.Array,
+                             dist: jax.Array, step: jax.Array,
+                             n_run: jax.Array, *, bs: int = 128,
+                             max_sweeps: int = 1, interpret: bool = False):
+    """Run up to ``n_run`` boolean sweeps (``n_run <= max_sweeps``, the
+    static unroll bound) in ONE kernel invocation.  frontier (S, n) int8
+    (packed on entry; re-packed in-VMEM between sweeps), adj_in_packed
+    (n, W) uint32 fully resident, dist (S, n) int32, ``step`` the sweeps
+    already executed (sweep t writes distance step + 1 + t).
+
+    Each source tile runs its own Fact-1 check in-kernel: a tile whose
+    sweep settles nothing zeroes its frontier and holds state for the
+    rest of the block.  Returns (new int8, dist int32, prod int32 scalar,
+    stopped bool scalar) where ``prod = max over tiles`` of productive
+    sweeps and ``stopped = all tiles converged`` — because per-tile
+    productivity is prefix-contiguous, the per-sweep driver's global
+    accounting is ``executed = stopped ? prod + 1 : n_run`` exactly (see
+    ``sweep_loop``'s fused body).  Bit-identical to ``n_run`` dispatches
+    of the per-sweep path."""
+    s, n = frontier.shape
+    w = adj_in_packed.shape[1]
+    assert adj_in_packed.shape == (n, w), (adj_in_packed.shape, n)
+    assert dist.shape == (s, n) and w * 32 == n, (frontier.shape, w)
+    assert s % bs == 0 and n % 128 == 0, (s, n, bs)
+    gi = s // bs
+
+    fp = frontier_pack_bits(frontier != 0)                # (S, W)
+    meta = jnp.stack([jnp.asarray(step, jnp.int32),
+                      jnp.asarray(n_run, jnp.int32)])
+
+    grid_spec = common.fused_grid_spec(gi, bs=bs, n=n, f_block=(bs, w),
+                                       op_block=(n, w))
+    new, dist_out, prod, stop = pl.pallas_call(
+        functools.partial(_fused_boolean_kernel, max_sweeps=max_sweeps),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((s, n), jnp.int8),
+                   jax.ShapeDtypeStruct((s, n), jnp.int32),
+                   jax.ShapeDtypeStruct((gi, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((gi, 1), jnp.int32)],
+        compiler_params=common.fused_compiler_params(),
+        interpret=interpret,
+    )(meta, fp, adj_in_packed, dist)
+    return new, dist_out, jnp.max(prod), jnp.min(stop) > 0

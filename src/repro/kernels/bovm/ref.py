@@ -36,3 +36,12 @@ def packed_pull_ref(frontier_packed: jnp.ndarray, adj_in_packed: jnp.ndarray,
     visited = dist >= 0
     new = hits & ~visited
     return new.astype(jnp.int8), jnp.where(new, jnp.int32(step), dist)
+
+
+def packed_push_ref(frontier_packed: jnp.ndarray, adj_in_packed: jnp.ndarray,
+                    dist: jnp.ndarray, step) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Reference for the bit-packed push sweep.  Once the frontier is
+    packed over the contraction axis, push computes the identical
+    word-AND/OR product as pull — the reference is shared; only the
+    kernels differ (tile shape + occupancy gating)."""
+    return packed_pull_ref(frontier_packed, adj_in_packed, dist, step)

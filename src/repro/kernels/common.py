@@ -48,6 +48,13 @@ def sweep_compiler_params():
         dimension_semantics=("parallel", "parallel", "arbitrary"))
 
 
+def fused_compiler_params():
+    """Fused multi-sweep grids iterate source tiles only; each tile runs
+    its whole sweep block to convergence, so the single axis is
+    "arbitrary" (tiles are independent but internally stateful)."""
+    return CompilerParams(dimension_semantics=("arbitrary",))
+
+
 # --------------------------------------------------------------------------
 # occupancy tables (the Thm 3.2 tile-skip signals, semiring-generic)
 # --------------------------------------------------------------------------
@@ -124,6 +131,31 @@ def pull_grid_spec(gi: int, gj: int, gk: int, *, bs: int, bn: int, wk: int,
     )
 
 
+def fused_grid_spec(gi: int, *, bs: int, n: int, f_block, op_block,
+                    num_scalar_prefetch: int = 1,
+                    n_state: int = 1) -> "pltpu.PrefetchScalarGridSpec":
+    """Grid spec for the fused multi-sweep (persistent) kernels: grid
+    ``(gi,)`` over source tiles only — each grid step keeps its frontier
+    block ``f_block`` at ``(i, 0)``, the *whole* operand ``op_block`` at
+    ``(0, 0)``, and ``n_state`` per-row state tiles ``(bs, n)`` resident
+    in VMEM while it runs up to ``max_sweeps`` sweeps internally (the
+    Fact-1 check fires in-kernel).  Outputs: the last sweep's improved
+    mask, the updated state arrays, and two ``(1, 1)`` per-tile scalars —
+    the productive-sweep count and the converged flag — that the wrapper
+    max/all-reduces into the loop driver's accounting."""
+    state_spec = pl.BlockSpec((bs, n), lambda i, *_: (i, 0))
+    flag_spec = pl.BlockSpec((1, 1), lambda i, *_: (i, 0))
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=num_scalar_prefetch,
+        grid=(gi,),
+        in_specs=[
+            pl.BlockSpec(f_block, lambda i, *_: (i, 0)),
+            pl.BlockSpec(op_block, lambda i, *_: (0, 0)),
+        ] + [state_spec] * n_state,
+        out_specs=[state_spec] * (n_state + 1) + [flag_spec, flag_spec],
+    )
+
+
 # --------------------------------------------------------------------------
 # VMEM budget math (the numbers in docs/ARCHITECTURE.md)
 # --------------------------------------------------------------------------
@@ -143,3 +175,16 @@ def pull_vmem_bytes(bs: int, bn: int, wk: int, *, word_itemsize: int,
     """Resident VMEM for one pull-style grid step."""
     return ((bs + bn) * wk * word_itemsize
             + bs * bn * (d_itemsize + acc_itemsize + sum(out_itemsizes)))
+
+
+def fused_vmem_bytes(*, bs: int, n: int, operand_bytes: int,
+                     frontier_bytes: int, state_itemsizes: Sequence[int],
+                     out_itemsizes: Sequence[int]) -> int:
+    """Resident VMEM for one fused multi-sweep grid step: the WHOLE
+    operand plus the tile's frontier block, state arrays (in + carried)
+    and outputs all live for the entire sweep block — the residency the
+    fused path trades for its dispatch amortization (unlike the per-sweep
+    grids, footprint scales with n² through ``operand_bytes``).  The two
+    (1, 1) accounting scalars round up to 16 bytes."""
+    return (operand_bytes + frontier_bytes
+            + bs * n * (sum(state_itemsizes) + sum(out_itemsizes)) + 16)

@@ -1,14 +1,22 @@
-from .kernel import fused_counting_sweep
+from .kernel import fused_counting_sweep, fused_counting_multisweep
 from .ref import counting_sweep_ref
 
 from .. import common, registry
 
 
 def vmem_bytes(*, form: str = "push", bs: int = 128, bn: int = 128,
-               bk: int = 128) -> int:
+               bk: int = 128, n: int = 1152) -> int:
     """Resident VMEM of one grid step (docs/ARCHITECTURE.md table):
     f32 fsigma tile + int8 adj tile + the (dist i32, sigma f32) state
-    pair + f32 acc + (i8, i32, f32) outputs."""
+    pair + f32 acc + (i8, i32, f32) outputs.  ``form="fused"`` prices the
+    multi-sweep persistent kernel (whole int8 adjacency resident plus the
+    carried pair)."""
+    if form == "fused":
+        return common.fused_vmem_bytes(
+            bs=bs, n=n, operand_bytes=n * n * 1,
+            frontier_bytes=bs * n * 1,
+            state_itemsizes=(4, 4),        # dist i32 + sigma f32
+            out_itemsizes=(1, 4, 4))       # new i8 + dist i32 + sigma f32
     assert form == "push", form
     return common.push_vmem_bytes(bs, bn, bk, f_itemsize=4, a_itemsize=1,
                                   d_itemsize=4 + 4,   # dist i32 + sigma f32
@@ -22,5 +30,7 @@ registry.register(registry.KernelSet(
     vmem_bytes=vmem_bytes,
     notes="fused f32 counting GEMM sweep (MXU): one matmul of "
           "frontier-masked sigma produces discovery AND exact path "
-          "counts; sparse scatter-add stays on the XLA form",
+          "counts; sparse scatter-add stays on the XLA form; the fused "
+          "multi-sweep kernel keeps the (dist, sigma) pair resident",
+    fused_forms={"push": fused_counting_multisweep},
 ))

@@ -111,3 +111,85 @@ def fused_counting_sweep(fsigma: jax.Array, adj: jax.Array, dist: jax.Array,
     )(f_occ.astype(jnp.int32), o_occ.astype(jnp.int32), step_arr,
       fsigma, adj, dist, sigma)
     return new, dist_out, sig_out
+
+
+# --------------------------------------------------------------------------
+# fused multi-sweep persistent kernel (counting): the (dist, sigma) pair
+# stays resident across sweeps — same skeleton, two state arrays
+# --------------------------------------------------------------------------
+
+def _fused_counting_kernel(meta_ref,                       # scalar prefetch
+                           f_ref, a_ref, dist_ref, sig_ref,  # VMEM in
+                           new_ref, dist_out_ref, sig_out_ref,  # VMEM out
+                           prod_ref, stop_ref,             # VMEM out (1, 1)
+                           *, max_sweeps: int):
+    step0 = meta_ref[0]
+    n_run = meta_ref[1]
+    a = a_ref[...].astype(jnp.float32)   # (n, n), resident throughout
+    d0 = dist_ref[...]                   # (bs, n) int32
+    sg0 = sig_ref[...]                   # (bs, n) f32
+
+    def sweep(t, carry):
+        done, prod, f8, d, sg, new8 = carry
+        live = (done == 0) & (t < n_run)
+        fs = jnp.where(f8 != 0, sg, 0.0)
+        cand = jnp.dot(fs, a, preferred_element_type=jnp.float32)
+        new = (cand > 0) & (d < 0)
+        any_new = jnp.any(new)
+        upd = new & live
+        d = jnp.where(upd, step0 + 1 + t, d)
+        sg = jnp.where(upd, cand, sg)
+        new8 = jnp.where(live, new.astype(jnp.int8), new8)
+        f8 = jnp.where(live, new.astype(jnp.int8), f8)
+        prod = prod + (live & any_new).astype(jnp.int32)
+        done = done | (live & ~any_new).astype(jnp.int32)
+        return done, prod, f8, d, sg, new8
+
+    done, prod, _, d, sg, new8 = jax.lax.fori_loop(
+        0, max_sweeps, sweep,
+        (jnp.int32(0), jnp.int32(0), f_ref[...], d0, sg0,
+         jnp.zeros(d0.shape, jnp.int8)))
+    new_ref[...] = new8
+    dist_out_ref[...] = d
+    sig_out_ref[...] = sg
+    prod_ref[0, 0] = prod
+    stop_ref[0, 0] = done
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bs", "max_sweeps", "interpret"))
+def fused_counting_multisweep(frontier: jax.Array, adj: jax.Array,
+                              state, step: jax.Array, n_run: jax.Array, *,
+                              bs: int = 128, max_sweeps: int = 1,
+                              interpret: bool = False):
+    """Run up to ``n_run`` counting sweeps in one invocation — the
+    counting instantiation of the fused multi-sweep skeleton (see the
+    boolean ``fused_boolean_multisweep`` for the accounting contract).
+    frontier (S, n) int8, adj (n, n) int8 resident, ``state`` the
+    (dist int32, sigma f32) pair.  Path counts are integer-valued f32 —
+    exact below 2^24 — so the single whole-row MXU matmul per sweep is
+    bit-identical to the per-sweep kernel's K-tiled accumulation.
+    Returns (new int8, (dist, sigma), prod int32, stopped bool)."""
+    dist, sigma = state
+    s, n = frontier.shape
+    assert adj.shape == (n, n) and dist.shape == (s, n) \
+        and sigma.shape == (s, n), (frontier.shape, adj.shape, dist.shape)
+    assert s % bs == 0 and n % 128 == 0, (s, n, bs)
+    gi = s // bs
+    meta = jnp.stack([jnp.asarray(step, jnp.int32),
+                      jnp.asarray(n_run, jnp.int32)])
+
+    grid_spec = common.fused_grid_spec(gi, bs=bs, n=n, f_block=(bs, n),
+                                       op_block=(n, n), n_state=2)
+    new, dist_out, sig_out, prod, stop = pl.pallas_call(
+        functools.partial(_fused_counting_kernel, max_sweeps=max_sweeps),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((s, n), jnp.int8),
+                   jax.ShapeDtypeStruct((s, n), jnp.int32),
+                   jax.ShapeDtypeStruct((s, n), jnp.float32),
+                   jax.ShapeDtypeStruct((gi, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((gi, 1), jnp.int32)],
+        compiler_params=common.fused_compiler_params(),
+        interpret=interpret,
+    )(meta, frontier, adj, dist, sigma)
+    return new, (dist_out, sig_out), jnp.max(prod), jnp.min(stop) > 0

@@ -27,18 +27,28 @@ class KernelSet:
 
     ``forms`` maps a form name (the same vocabulary the core layer uses:
     "push"/"pull" for boolean, "dense"/"sparse" for tropical) to the
-    jitted kernel wrapper.  ``vmem_bytes`` estimates the resident VMEM of
-    one grid step at the given tile sizes (used by tests to enforce the
-    budget and by docs/ARCHITECTURE.md's table).  ``interpret_only``
-    names forms validated only under ``interpret=True`` — the core layer
-    must not dispatch them compiled (it falls back to the XLA form);
-    registering the capability here keeps that policy out of core.
+    jitted kernel wrapper.  ``fused_forms`` maps the same form names to
+    *multi-sweep* persistent-kernel wrappers — one invocation runs up to
+    ``max_sweeps`` sweeps with the Fact-1 convergence check evaluated
+    in-kernel, state tiles staying resident across sweeps (uniform
+    signature ``(frontier, operand, state, step, n_run, *, bs,
+    max_sweeps, interpret)``); ``core/sweep.py::resolve_fused_steps``
+    consults it to decide whether an engine may fuse.  ``vmem_bytes``
+    estimates the resident VMEM of one grid step at the given tile sizes
+    (used by tests to enforce the budget and by docs/ARCHITECTURE.md's
+    table; ``form="fused"`` prices the whole-operand residency of the
+    fused path).  ``interpret_only`` names forms validated only under
+    ``interpret=True`` — the core layer must not dispatch them compiled
+    (it falls back to the XLA form); registering the capability here
+    keeps that policy out of core.
     """
     semiring: str
     forms: Mapping[str, Callable]
     vmem_bytes: Callable[..., int]
     notes: str = ""
     interpret_only: frozenset = frozenset()
+    fused_forms: Mapping[str, Callable] = \
+        dataclasses.field(default_factory=dict)
 
     def dispatchable(self, form: str, *, interpret: bool) -> bool:
         """May ``form`` run at this execution mode?  Interpret-only forms

@@ -1,4 +1,5 @@
-from .kernel import fused_minplus_sweep, sparse_relax_sweep
+from .kernel import (fused_minplus_sweep, fused_minplus_multisweep,
+                     sparse_relax_sweep)
 from .ref import minplus_sweep_ref, sparse_relax_ref
 
 from .. import common, registry
@@ -6,12 +7,18 @@ from .. import common, registry
 
 def vmem_bytes(*, form: str = "dense", bs: int = 128, bn: int = 128,
                bk: int = 128, s: int = 64, n_pad: int = 1152,
-               eb: int = 128) -> int:
+               eb: int = 128, n: int = 1152) -> int:
     """Resident VMEM of one grid step (docs/ARCHITECTURE.md table)."""
     if form == "dense":  # f32 fdist + f32 W + f32 dist/acc, i8+f32 out
         return common.push_vmem_bytes(bs, bn, bk, f_itemsize=4, a_itemsize=4,
                                       d_itemsize=4, acc_itemsize=4,
                                       out_itemsizes=(1, 4))
+    if form == "fused":  # whole (n, n) f32 weight matrix + resident state
+        return common.fused_vmem_bytes(
+            bs=bs, n=n, operand_bytes=n * n * 4,
+            frontier_bytes=bs * n * 1,
+            state_itemsizes=(4,),          # dist f32
+            out_itemsizes=(1, 4))          # new i8 + dist f32 out
     assert form == "sparse", form
     # i8 frontier + f32 dist/acc/out + i8 out, whole (S, n_pad) state,
     # plus 3 (1, eb) edge-lane blocks (src/dst int32, w f32)
@@ -24,11 +31,14 @@ registry.register(registry.KernelSet(
     vmem_bytes=vmem_bytes,
     notes="fused min-plus push sweep (settled-bound tile skip) + "
           "edge-parallel sparse relax (interpret-validated; prefer the "
-          "dense kernel or the XLA sparse form on real TPUs)",
+          "dense kernel or the XLA sparse form on real TPUs) + the fused "
+          "multi-sweep persistent min-plus kernel (whole weight matrix "
+          "resident — the VMEM gate in resolve_fused_steps bounds n)",
     # sparse only: data-dependent gathers/scatters by edge index are not
     # validated under Mosaic compilation and the whole-(S, n_pad) state is
     # VMEM-unbounded in n_pad.  The dense form stays compiled-dispatchable:
     # its per-lane fori_loop/dynamic-slice schedule is the one the boolean
     # pull kernel has always shipped compiled with.
     interpret_only=frozenset({"sparse"}),
+    fused_forms={"dense": fused_minplus_multisweep},
 ))

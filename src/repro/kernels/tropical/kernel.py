@@ -137,6 +137,90 @@ def fused_minplus_sweep(fdist: jax.Array, wdense: jax.Array,
 
 
 # --------------------------------------------------------------------------
+# fused multi-sweep persistent kernel (tropical): same skeleton as the
+# boolean fused kernel — whole weight matrix resident, Fact 1 in-kernel
+# --------------------------------------------------------------------------
+
+def _fused_minplus_kernel(meta_ref,                        # scalar prefetch
+                          f_ref, w_ref, dist_ref,          # VMEM in
+                          new_ref, dist_out_ref,           # VMEM out
+                          prod_ref, stop_ref,              # VMEM out (1, 1)
+                          *, max_sweeps: int):
+    n_run = meta_ref[1]                  # meta[0] (step) unused: dist is ⊕
+    w = w_ref[...]                       # (n, n) f32, resident throughout
+    d0 = dist_ref[...]                   # (bs, n) f32
+
+    def sweep(t, carry):
+        done, prod, f8, d, new8 = carry
+        live = (done == 0) & (t < n_run)
+        fd = jnp.where(f8 != 0, d, jnp.inf)
+
+        def lane(kk, acc):
+            col = jax.lax.dynamic_slice_in_dim(fd, kk, 1, 1)   # (bs, 1)
+            row = jax.lax.dynamic_slice_in_dim(w, kk, 1, 0)    # (1, n)
+            return jnp.minimum(acc, col + row)
+
+        cand = jax.lax.fori_loop(0, w.shape[0], lane,
+                                 jnp.full(d.shape, jnp.inf))
+        new = cand < d
+        any_new = jnp.any(new)
+        d = jnp.where(new & live, cand, d)
+        new8 = jnp.where(live, new.astype(jnp.int8), new8)
+        f8 = jnp.where(live, new.astype(jnp.int8), f8)
+        prod = prod + (live & any_new).astype(jnp.int32)
+        done = done | (live & ~any_new).astype(jnp.int32)
+        return done, prod, f8, d, new8
+
+    done, prod, _, d, new8 = jax.lax.fori_loop(
+        0, max_sweeps, sweep,
+        (jnp.int32(0), jnp.int32(0), f_ref[...], d0,
+         jnp.zeros(d0.shape, jnp.int8)))
+    new_ref[...] = new8
+    dist_out_ref[...] = d
+    prod_ref[0, 0] = prod
+    stop_ref[0, 0] = done
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bs", "max_sweeps", "interpret"))
+def fused_minplus_multisweep(frontier: jax.Array, wdense: jax.Array,
+                             dist: jax.Array, step: jax.Array,
+                             n_run: jax.Array, *, bs: int = 128,
+                             max_sweeps: int = 1, interpret: bool = False):
+    """Run up to ``n_run`` (min,+) sweeps in one invocation — the
+    tropical instantiation of the fused multi-sweep skeleton (see the
+    boolean ``fused_boolean_multisweep`` for the accounting contract).
+    frontier (S, n) int8 improved-mask, wdense (n, n) f32 resident,
+    dist (S, n) f32; ``step`` is accepted for signature uniformity but
+    unused (tropical distances are the candidates themselves).  The
+    per-lane min order matches the per-sweep kernel and reference forms,
+    and f32 min is exact, so the fused block is bit-identical to
+    ``n_run`` per-sweep dispatches.  Returns (new int8, dist f32,
+    prod int32, stopped bool)."""
+    del step
+    s, n = frontier.shape
+    assert wdense.shape == (n, n) and dist.shape == (s, n), \
+        (frontier.shape, wdense.shape, dist.shape)
+    assert s % bs == 0 and n % 128 == 0, (s, n, bs)
+    gi = s // bs
+    meta = jnp.stack([jnp.int32(0), jnp.asarray(n_run, jnp.int32)])
+
+    grid_spec = common.fused_grid_spec(gi, bs=bs, n=n, f_block=(bs, n),
+                                       op_block=(n, n))
+    new, dist_out, prod, stop = pl.pallas_call(
+        functools.partial(_fused_minplus_kernel, max_sweeps=max_sweeps),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((s, n), jnp.int8),
+                   jax.ShapeDtypeStruct((s, n), jnp.float32),
+                   jax.ShapeDtypeStruct((gi, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((gi, 1), jnp.int32)],
+        compiler_params=common.fused_compiler_params(),
+        interpret=interpret,
+    )(meta, frontier, wdense, dist)
+    return new, dist_out, jnp.max(prod), jnp.min(stop) > 0
+
+
+# --------------------------------------------------------------------------
 # sparse direction: edge-parallel relax over CSR lanes
 # --------------------------------------------------------------------------
 

@@ -148,3 +148,52 @@ def dijkstra_dists(g, weights, sources) -> np.ndarray:
     """Stacked Dijkstra distances -> (S, n) float64."""
     return np.stack([dijkstra_dist(g, weights, int(s))
                      for s in np.asarray(sources)])
+
+
+# --------------------------------------------------------------------------
+# adversarial graph families for the cross-form differential harness
+# --------------------------------------------------------------------------
+
+def adversarial_families(seed: int = 0):
+    """Edge lists that historically break sweep implementations.
+
+    Yields ``(name, src, dst, n_nodes)`` tuples — raw numpy edge arrays,
+    deliberately NOT CSRGraph objects so callers control dedup/padding.
+    One seeded random member keeps the family list honest against shapes
+    nobody thought to enumerate.  Families cover: hub fan-out/fan-in
+    (stars), deep frontiers (path), 2-cycles of discovery (cycle), dense
+    one-sweep closure (clique), unreachable components, self-loops,
+    duplicate/parallel edges, isolated vertices, and vertex counts not
+    divisible by any tile size (ragged n; tiny n).
+    """
+    rng = np.random.default_rng(seed)
+    fams = []
+
+    def fam(name, src, dst, n):
+        fams.append((name, np.asarray(src, np.int32),
+                     np.asarray(dst, np.int32), n))
+
+    n = 37                                   # ragged on purpose
+    hub = np.zeros(n - 1, np.int64)
+    spokes = np.arange(1, n)
+    fam("star_out", hub, spokes, n)          # hub -> all: 1-sweep BFS
+    fam("star_in", spokes, hub, n)           # all -> hub: most rows stall
+    fam("path", np.arange(n - 1), np.arange(1, n), n)   # diameter n-1
+    fam("cycle", np.arange(n), np.r_[np.arange(1, n), 0], n)
+    k = 13
+    cq = np.arange(k)
+    fam("clique", np.repeat(cq, k), np.tile(cq, k), k)  # incl. self-loops
+    # two components + isolated vertices 20..36 (never discovered)
+    fam("two_components",
+        np.r_[np.arange(0, 9), np.arange(10, 19)],
+        np.r_[np.arange(1, 10), np.arange(11, 20)], n)
+    fam("self_loops", np.r_[np.arange(12), np.arange(12)],
+        np.r_[np.arange(12), np.r_[np.arange(1, 12), 0]], 12)
+    fam("duplicate_edges", np.r_[[0] * 5, [1] * 5, np.arange(2, 9)],
+        np.r_[[1] * 5, [2] * 5, np.arange(3, 10)], 10)
+    fam("tiny", [0, 1], [1, 0], 2)
+    n2 = 137                                 # ragged vs 8/32/128 tiles
+    m2 = 600
+    fam("random_ragged", rng.integers(0, n2, m2), rng.integers(0, n2, m2),
+        n2)
+    return fams

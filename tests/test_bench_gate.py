@@ -37,6 +37,29 @@ def test_sweep_count_change_is_a_hard_failure():
     assert any("sweeps" in f for f in failures)
 
 
+def test_fused_sweep_count_gates_hard():
+    """The fused multi-sweep kernel path reports its own sweep count
+    (bit-identity with the per-sweep loop is asserted in-bench); a drift
+    means the fused accounting broke, and must fail hard.  The timing
+    columns and the fused_equals_per_sweep boolean stay advisory."""
+    def agg(sf=9, flag=True, median=0.05):
+        out = _aggregate()
+        fam = out["bench_apsp"]["families"]["grid_road"]
+        fam["sweeps_fused"] = sf
+        fam["fused_equals_per_sweep"] = flag
+        fam["t_kernel_fused_median"] = median
+        return out
+    failures, _ = compare(agg(sf=10), agg(sf=9))
+    assert any("sweeps_fused" in f for f in failures)
+    failures, warnings = compare(agg(flag=False), agg(flag=True))
+    assert failures == []
+    assert any("fused_equals_per_sweep" in w for w in warnings)
+    failures, _ = compare(agg(median=0.05 * 2), agg())
+    assert failures == []
+    failures, _ = compare(agg(), agg())
+    assert failures == []
+
+
 def test_median_regression_beyond_tolerance_fails():
     base = _aggregate(median=0.05)
     cur = _aggregate(median=0.05 * 5)        # 5x > 4x tolerance

@@ -21,12 +21,18 @@ from repro.graph import generators as gen
 from repro.core import WeightedConfig, pack_bits, weighted_apsp
 from oracles import bfs_dists, dijkstra_dists
 from repro.kernels import common, registry
-from repro.kernels.bovm import (fused_sweep, packed_pull_sweep, sweep_ref,
-                                packed_pull_ref, msbfs_kernel, msbfs_packed,
+from repro.kernels.bovm import (fused_sweep, packed_pull_sweep,
+                                packed_push_sweep, fused_boolean_multisweep,
+                                sweep_ref, packed_pull_ref, packed_push_ref,
+                                msbfs_kernel, msbfs_packed,
                                 pack_adjacency_pull)
-from repro.kernels.tropical import (fused_minplus_sweep, sparse_relax_sweep,
+from repro.kernels.tropical import (fused_minplus_sweep,
+                                    fused_minplus_multisweep,
+                                    sparse_relax_sweep,
                                     minplus_sweep_ref, sparse_relax_ref)
-from repro.kernels.counting import fused_counting_sweep, counting_sweep_ref
+from repro.kernels.counting import (fused_counting_sweep,
+                                    fused_counting_multisweep,
+                                    counting_sweep_ref)
 
 
 def _random_state(rng, s, n, density=0.05, visited=0.2):
@@ -43,14 +49,33 @@ def test_registry_has_every_semiring():
     assert registry.available() == ("boolean", "counting", "tropical")
     assert registry.has("boolean") and registry.has("tropical")
     assert registry.has("counting")
-    assert set(registry.get("boolean").forms) == {"push", "pull"}
+    assert set(registry.get("boolean").forms) == {"push", "push_f32",
+                                                  "pull"}
     assert set(registry.get("tropical").forms) == {"dense", "sparse"}
     assert set(registry.get("counting").forms) == {"push"}
 
 
+def test_registry_has_fused_multisweep_capability():
+    """Every semiring ships the fused multi-sweep persistent form under
+    the same key its per-sweep kernel uses — the capability
+    sweep.resolve_fused_steps consults."""
+    assert set(registry.get("boolean").fused_forms) == {"push"}
+    assert set(registry.get("tropical").fused_forms) == {"dense"}
+    assert set(registry.get("counting").fused_forms) == {"push"}
+    assert registry.get("boolean").fused_forms["push"] \
+        is fused_boolean_multisweep
+    assert registry.get("tropical").fused_forms["dense"] \
+        is fused_minplus_multisweep
+    assert registry.get("counting").fused_forms["push"] \
+        is fused_counting_multisweep
+
+
 def test_registry_accepts_semiring_objects():
     from repro.core import BOOLEAN, COUNTING, TROPICAL
-    assert registry.get(BOOLEAN).forms["push"] is fused_sweep
+    # the boolean kernel push is the bit-packed word sweep (no f32 GEMM);
+    # the old MXU GEMM survives under the explicit "push_f32" key
+    assert registry.get(BOOLEAN).forms["push"] is packed_push_sweep
+    assert registry.get(BOOLEAN).forms["push_f32"] is fused_sweep
     assert registry.get(TROPICAL).forms["dense"] is fused_minplus_sweep
     assert registry.get(COUNTING).forms["push"] is fused_counting_sweep
     with pytest.raises(KeyError, match="min_label"):
@@ -70,6 +95,42 @@ def test_vmem_budgets_under_per_core_limit():
         < common.VMEM_BUDGET_BYTES // 4
     assert registry.get("counting").vmem_bytes(form="push") \
         < common.VMEM_BUDGET_BYTES // 4
+    assert registry.get("boolean").vmem_bytes(form="push_f32") \
+        < common.VMEM_BUDGET_BYTES // 4
+
+
+def test_fused_vmem_scales_with_whole_operand():
+    """The fused forms hold the WHOLE operand resident: their cost is a
+    function of n, grows quadratically, and the default paddings still
+    fit the 16 MB budget — exactly what resolve_fused_steps gates on."""
+    for semi, mult in (("boolean", 1 / 8), ("tropical", 4),
+                       ("counting", 1)):
+        ks = registry.get(semi)
+        small = ks.vmem_bytes(form="fused", bs=128, n=1152)
+        big = ks.vmem_bytes(form="fused", bs=128, n=4 * 1152)
+        assert small < common.VMEM_BUDGET_BYTES, (semi, small)
+        # superlinear in n: the resident whole-operand term scales n^2
+        # (the per-row state term alone would only scale linearly, x4)
+        assert big > small * 4, (semi, small, big)
+        assert small > 1152 * 1152 * mult, (semi, small)
+    # the gate actually trips for an operand that cannot fit
+    import repro.core.sweep as S
+    assert S.resolve_fused_steps("tropical", "dense", fused_steps=-1,
+                                 max_steps=64, use_kernel=True,
+                                 n_pad=8192, bs=128) is None
+    assert S.resolve_fused_steps("tropical", "dense", fused_steps=-1,
+                                 max_steps=64, use_kernel=True,
+                                 n_pad=1152, bs=128) == 64
+    assert S.resolve_fused_steps("tropical", "dense", fused_steps=4,
+                                 max_steps=64, use_kernel=True,
+                                 n_pad=1152, bs=128) == 4
+    # reference path and unregistered semirings never fuse
+    assert S.resolve_fused_steps("tropical", "dense", fused_steps=-1,
+                                 max_steps=64, use_kernel=False,
+                                 n_pad=1152, bs=128) is None
+    assert S.resolve_fused_steps("min_label", "push", fused_steps=-1,
+                                 max_steps=64, use_kernel=True,
+                                 n_pad=1152, bs=128) is None
 
 
 # --------------------------------------------------------------------------
@@ -111,6 +172,267 @@ def test_packed_pull_shapes(s, n, bs, bn, wk):
     new_r, dist_r = packed_pull_ref(fp, ap, dist, 3)
     np.testing.assert_array_equal(np.asarray(new_k), np.asarray(new_r))
     np.testing.assert_array_equal(np.asarray(dist_k), np.asarray(dist_r))
+
+
+@pytest.mark.parametrize("s,n,bs,bn,wk", [
+    (128, 256, 128, 128, 8),
+    (64, 512, 64, 128, 16),
+    (8, 128, 8, 128, 4),
+    (256, 384, 128, 128, 4),     # ragged: n not a multiple of bn*2
+])
+def test_packed_push_shapes(s, n, bs, bn, wk):
+    """The bit-packed push drives the same word-AND/OR math as pull: the
+    packed frontier rows hit the packed in-neighbour words, so the shared
+    packed_pull_ref is its oracle too."""
+    rng = np.random.default_rng(3 * s + n)
+    g = gen.erdos_renyi(n, 5.0, seed=n + 2, directed=True)
+    adj = jnp.asarray(np.asarray(g.to_dense_padded(n)), jnp.int8)
+    ap = pack_adjacency_pull(adj)
+    f, dist = _random_state(rng, s, n)
+    fp = pack_bits(f > 0)
+    new_k, dist_k = packed_push_sweep(fp, ap, dist, 3, bs=bs, bn=bn, wk=wk,
+                                      interpret=True)
+    new_r, dist_r = packed_push_ref(fp, ap, dist, 3)
+    np.testing.assert_array_equal(np.asarray(new_k), np.asarray(new_r))
+    np.testing.assert_array_equal(np.asarray(dist_k), np.asarray(dist_r))
+
+
+def test_packed_push_matches_f32_push():
+    """Packed word push == the f32 GEMM push it replaces, bit for bit."""
+    rng = np.random.default_rng(11)
+    n, s = 256, 64
+    adj = jnp.asarray((rng.random((n, n)) < 0.03).astype(np.int8))
+    f, dist = _random_state(rng, s, n)
+    new_p, dist_p = packed_push_sweep(pack_bits(f > 0),
+                                      pack_adjacency_pull(adj), dist, 5,
+                                      bs=64, bn=128, wk=8, interpret=True)
+    new_g, dist_g = fused_sweep(f, adj, dist, 5, bs=64, bn=128, bk=128,
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(new_p), np.asarray(new_g))
+    np.testing.assert_array_equal(np.asarray(dist_p), np.asarray(dist_g))
+
+
+def test_packed_push_tile_skip_preserves_semantics():
+    """Adversarial occupancy: one frontier word block and one unreached
+    block live — every skipped (i, j, k) tile must be provably inert."""
+    n, s = 512, 128
+    rng = np.random.default_rng(5)
+    adj = jnp.asarray((rng.random((n, n)) < 0.02).astype(np.int8))
+    f = np.zeros((s, n), np.int8)
+    f[:, :32] = 1                       # frontier in the first word block
+    dist = np.zeros((s, n), np.int32)   # almost everything settled…
+    dist[:, 256:] = -1                  # …except the last j tiles
+    fp = pack_bits(jnp.asarray(f) > 0)
+    ap = pack_adjacency_pull(adj)
+    new_k, dist_k = packed_push_sweep(fp, ap, jnp.asarray(dist), 4,
+                                      bs=128, bn=128, wk=4, interpret=True)
+    new_r, dist_r = packed_push_ref(fp, ap, jnp.asarray(dist), 4)
+    np.testing.assert_array_equal(np.asarray(new_k), np.asarray(new_r))
+    np.testing.assert_array_equal(np.asarray(dist_k), np.asarray(dist_r))
+
+
+# --------------------------------------------------------------------------
+# fused multi-sweep persistent kernels (all semirings, one skeleton)
+# --------------------------------------------------------------------------
+
+def _per_sweep_boolean(f, ap, dist, step, n_run):
+    """Oracle: n_run per-sweep packed pushes with the fused accounting
+    contract (prod = productive sweeps, stopped = converged mid-block)."""
+    prod, stopped = 0, False
+    new = jnp.zeros_like(dist, dtype=jnp.int8)
+    for t in range(n_run):
+        if stopped:
+            break
+        new, dist = packed_push_ref(pack_bits(new != 0) if t else f,
+                                    ap, dist, step + 1 + t)
+        if bool(jnp.any(new != 0)):
+            prod += 1
+        else:
+            stopped = True
+    return new, dist, prod, stopped
+
+
+@pytest.mark.parametrize("n_run", [1, 2, 3, 7])
+def test_fused_boolean_multisweep_matches_per_sweep(n_run):
+    rng = np.random.default_rng(n_run)
+    n, s = 256, 128
+    adj = jnp.asarray((rng.random((n, n)) < 0.02).astype(np.int8))
+    ap = pack_adjacency_pull(adj)
+    f = jnp.asarray((rng.random((s, n)) < 0.02).astype(np.int8))
+    dist = jnp.where(f != 0, 3, -1).astype(jnp.int32)
+    new_k, dist_k, prod_k, stop_k = fused_boolean_multisweep(
+        f, ap, dist, 3, n_run, bs=128, max_sweeps=n_run, interpret=True)
+    new_r, dist_r, prod_r, stop_r = _per_sweep_boolean(
+        pack_bits(f != 0), ap, dist, 3, n_run)
+    np.testing.assert_array_equal(np.asarray(dist_k), np.asarray(dist_r))
+    np.testing.assert_array_equal(np.asarray(new_k), np.asarray(new_r))
+    assert int(prod_k) == prod_r and bool(stop_k) == stop_r
+
+
+def test_fused_boolean_multisweep_converges_mid_block():
+    """Fact 1 inside the block: a 3-hop path exhausts after 3 productive
+    sweeps of an 8-sweep block — the kernel must report stopped with
+    prod == 3 and leave dist at the fixpoint."""
+    n, s = 128, 8
+    src = np.array([0, 1, 2])
+    dst = np.array([1, 2, 3])
+    adj = np.zeros((n, n), np.int8)
+    adj[src, dst] = 1
+    ap = pack_adjacency_pull(jnp.asarray(adj))
+    f = np.zeros((s, n), np.int8)
+    f[:, 0] = 1
+    dist = np.full((s, n), -1, np.int32)
+    dist[:, 0] = 0
+    new, dist_out, prod, stop = fused_boolean_multisweep(
+        jnp.asarray(f), ap, jnp.asarray(dist), 0, 8, bs=8, max_sweeps=8,
+        interpret=True)
+    assert int(prod) == 3 and bool(stop)
+    assert np.asarray(new).sum() == 0          # final frontier is empty
+    expect = np.full(n, -1, np.int32)
+    expect[:4] = [0, 1, 2, 3]
+    np.testing.assert_array_equal(np.asarray(dist_out)[0], expect)
+
+
+def test_fused_boolean_multisweep_not_converged_keeps_frontier():
+    """A block that ends mid-BFS reports stopped=False, prod == n_run and
+    a live packed frontier equal to the last sweep's discoveries."""
+    n, s = 128, 8
+    adj = np.zeros((n, n), np.int8)
+    adj[np.arange(20), np.arange(1, 21)] = 1      # a 20-hop path
+    ap = pack_adjacency_pull(jnp.asarray(adj))
+    f = np.zeros((s, n), np.int8)
+    f[:, 0] = 1
+    dist = np.full((s, n), -1, np.int32)
+    dist[:, 0] = 0
+    new, dist_out, prod, stop = fused_boolean_multisweep(
+        jnp.asarray(f), ap, jnp.asarray(dist), 0, 5, bs=8, max_sweeps=5,
+        interpret=True)
+    assert int(prod) == 5 and not bool(stop)
+    assert np.asarray(new)[0, 5] == 1 and np.asarray(new)[0].sum() == 1
+    assert np.asarray(dist_out)[0, 5] == 5
+
+
+def test_fused_minplus_multisweep_matches_per_sweep():
+    """Tropical fused block == iterated per-sweep min-plus reference."""
+    rng = np.random.default_rng(17)
+    n, s = 256, 64
+    mask = rng.random((n, n)) < 0.03
+    w = np.where(mask, rng.integers(1, 8, (n, n)).astype(np.float32),
+                 np.inf)
+    np.fill_diagonal(w, np.inf)
+    dist = np.full((s, n), np.inf, np.float32)
+    dist[np.arange(s), np.arange(s)] = 0.0
+    f = (dist == 0).astype(np.int8)
+    wj = jnp.asarray(w)
+    d = jnp.asarray(dist)
+    new_k, dist_k, prod_k, stop_k = fused_minplus_multisweep(
+        jnp.asarray(f), wj, d, 0, 6, bs=64, max_sweeps=6, interpret=True)
+    # reference: per-sweep dense min-plus with the same convergence rule
+    fr, dr, prod_r, stop_r = jnp.asarray(f), d, 0, False
+    for _ in range(6):
+        if stop_r:
+            break
+        fd = jnp.where(fr != 0, dr, jnp.inf)
+        nd = minplus_sweep_ref(fd, wj, dr)[1]
+        fr = (nd < dr).astype(jnp.int8)
+        dr = nd
+        if bool(jnp.any(fr != 0)):
+            prod_r += 1
+        else:
+            stop_r = True
+    np.testing.assert_array_equal(np.asarray(dist_k), np.asarray(dr))
+    np.testing.assert_array_equal(np.asarray(new_k), np.asarray(fr))
+    assert int(prod_k) == prod_r and bool(stop_k) == stop_r
+
+
+def test_fused_counting_multisweep_matches_per_sweep():
+    """Counting fused block == iterated per-sweep counting kernel: the
+    (dist, sigma) pair stays resident and path counts stay exact."""
+    rng = np.random.default_rng(23)
+    n, s = 256, 64
+    adj = jnp.asarray((rng.random((n, n)) < 0.03).astype(np.int8))
+    dist = np.full((s, n), -1, np.int32)
+    dist[np.arange(s), np.arange(s)] = 0
+    sigma = (dist == 0).astype(np.float32)
+    f = (dist == 0).astype(np.int8)
+    d, sg, fr = jnp.asarray(dist), jnp.asarray(sigma), jnp.asarray(f)
+    new_k, (dist_k, sig_k), prod_k, stop_k = fused_counting_multisweep(
+        fr, adj, (d, sg), 0, 6, bs=64, max_sweeps=6, interpret=True)
+    prod_r, stop_r = 0, False
+    new_r = jnp.zeros_like(fr)
+    for t in range(6):
+        if stop_r:
+            break
+        fs = jnp.where(fr != 0, sg, 0.0)
+        new_r, d, sg = fused_counting_sweep(fs, adj, d, sg, t + 1, bs=64,
+                                            interpret=True)
+        fr = new_r
+        if bool(jnp.any(new_r != 0)):
+            prod_r += 1
+        else:
+            stop_r = True
+    np.testing.assert_array_equal(np.asarray(dist_k), np.asarray(d))
+    np.testing.assert_array_equal(np.asarray(sig_k), np.asarray(sg))
+    np.testing.assert_array_equal(np.asarray(new_k), np.asarray(new_r))
+    assert int(prod_k) == prod_r and bool(stop_k) == stop_r
+
+
+# --------------------------------------------------------------------------
+# structural guard: the boolean kernel push must not lower an f32 GEMM
+# --------------------------------------------------------------------------
+
+def _boolean_push_jaxpr(n=256, s=64):
+    import repro.core.sweep as S
+    adj_pull = jnp.zeros((n, n // 32), jnp.uint32)
+    push = S.boolean_forms(jnp.zeros((1, 1), jnp.int8), adj_pull,
+                           jnp.zeros((1,), jnp.int32),
+                           jnp.zeros((1,), jnp.int32), n_pad=n, s=s,
+                           use_kernel=True, interpret=True)[S.PUSH]
+    f = jnp.zeros((s, n), jnp.int8)
+    d = jnp.zeros((s, n), jnp.int32)
+    p = jnp.zeros((s, n), jnp.int32)
+    return str(jax.make_jaxpr(push)(f, d, p, jnp.int32(1)))
+
+
+def test_boolean_kernel_push_has_no_f32_dot():
+    """Bit-packing is structural, not incidental: the boolean kernel
+    push (and the fused boolean block) must trace to a jaxpr with NO
+    dot_general anywhere — dense boolean push no longer pays f32 GEMM
+    cost (paper Eq. 13: 32 adjacency lanes per uint32 word)."""
+    assert "dot_general" not in _boolean_push_jaxpr()
+    n, s = 256, 64
+    fused_jaxpr = str(jax.make_jaxpr(
+        lambda f, ap, d: fused_boolean_multisweep(
+            f, ap, d, 0, 4, bs=64, max_sweeps=4, interpret=True))(
+        jnp.zeros((s, n), jnp.int8), jnp.zeros((n, n // 32), jnp.uint32),
+        jnp.zeros((s, n), jnp.int32)))
+    assert "dot_general" not in fused_jaxpr
+
+
+def test_no_f32_dot_guard_sees_nested_jaxprs():
+    """Positive controls for the guard above: (a) the XLA reference push
+    DOES contain dot_general, and (b) a dot inside a pallas_call kernel
+    (the counting fused block, interpret mode) IS visible to the same
+    str(make_jaxpr(...)) probe — so the boolean assertion cannot pass
+    vacuously by the dot hiding below the traced surface."""
+    import repro.core.sweep as S
+    n, s = 256, 64
+    adj = jnp.zeros((n, n), jnp.int8)
+    ref_push = S.boolean_forms(adj, jnp.zeros((1, 1), jnp.uint32),
+                               jnp.zeros((1,), jnp.int32),
+                               jnp.zeros((1,), jnp.int32), n_pad=n, s=s,
+                               use_kernel=False, interpret=True)[S.PUSH]
+    f = jnp.zeros((s, n), jnp.int8)
+    d = jnp.zeros((s, n), jnp.int32)
+    p = jnp.zeros((s, n), jnp.int32)
+    assert "dot_general" in str(jax.make_jaxpr(ref_push)(f, d, p,
+                                                         jnp.int32(1)))
+    counting_jaxpr = str(jax.make_jaxpr(
+        lambda f8, a, dd, sgg: fused_counting_multisweep(
+            f8, a, (dd, sgg), 0, 2, bs=64, max_sweeps=2, interpret=True))(
+        jnp.zeros((s, n), jnp.int8), adj, d,
+        jnp.zeros((s, n), jnp.float32)))
+    assert "dot_general" in counting_jaxpr
 
 
 def _fused_sweep_vs_ref(seed, density, visited):

@@ -156,3 +156,160 @@ if HAVE_HYPOTHESIS:
     @given(seed=st.integers(0, 10**6))
     def test_triangle_inequality_hypothesis(seed):
         _check_triangle_inequality(seed)
+
+
+# -- cross-form differential harness over adversarial graph families --------
+#
+# ONE table drives every cross-check the engines promise: for each
+# adversarial family, every registered semiring's every execution variant
+# (reference vs Pallas-kernel forms, per-sweep vs fused multi-sweep
+# blocks, dynamic vs pinned direction) must return BIT-identical
+# dist/parent/sigma — and the external NumPy/SciPy oracles anchor the
+# whole equivalence class to ground truth.
+
+from oracles import (adversarial_families, bfs_dists, bfs_sigmas,
+                     dijkstra_dists)
+
+_FAMILIES = {name: (src, dst, n)
+             for name, src, dst, n in adversarial_families(seed=0)}
+
+# (variant name, config) tables — every row must agree bit-for-bit
+def _boolean_variants():
+    from repro.core.engine import EngineConfig
+    B = dict(source_batch=8, max_steps=None)
+    return [
+        ("ref-auto", EngineConfig(mode="auto", use_kernel=False, **B)),
+        ("ref-push", EngineConfig(mode="push", use_kernel=False, **B)),
+        ("ref-pull", EngineConfig(mode="pull", use_kernel=False, **B)),
+        ("ref-sparse", EngineConfig(mode="sparse", use_kernel=False, **B)),
+        ("kernel-dynamic", EngineConfig(mode="auto", use_kernel=True, **B)),
+        ("kernel-push", EngineConfig(mode="push", use_kernel=True, **B)),
+        ("kernel-fused2", EngineConfig(mode="push", use_kernel=True,
+                                       fused_steps=2, **B)),
+        ("kernel-fused-all", EngineConfig(mode="push", use_kernel=True,
+                                          fused_steps=-1, **B)),
+    ]
+
+
+def _tropical_variants():
+    from repro.core.weighted import WeightedConfig
+    B = dict(source_batch=8)
+    return [
+        ("ref-dense", WeightedConfig(mode="dense", use_kernel=False, **B)),
+        ("ref-sparse", WeightedConfig(mode="sparse", use_kernel=False,
+                                      **B)),
+        ("kernel-dense", WeightedConfig(mode="dense", use_kernel=True,
+                                        **B)),
+        ("kernel-fused2", WeightedConfig(mode="dense", use_kernel=True,
+                                         fused_steps=2, **B)),
+        ("kernel-fused-all", WeightedConfig(mode="dense", use_kernel=True,
+                                            fused_steps=-1, **B)),
+    ]
+
+
+def _counting_variants():
+    from repro.core.centrality import CentralityConfig
+    B = dict(source_batch=8)
+    return [
+        ("ref-push", CentralityConfig(mode="push", use_kernel=False, **B)),
+        ("ref-sparse", CentralityConfig(mode="sparse", use_kernel=False,
+                                        **B)),
+        ("kernel-push", CentralityConfig(mode="push", use_kernel=True,
+                                         **B)),
+        ("kernel-fused2", CentralityConfig(mode="push", use_kernel=True,
+                                           fused_steps=2, **B)),
+        ("kernel-fused-all", CentralityConfig(mode="push", use_kernel=True,
+                                              fused_steps=-1, **B)),
+    ]
+
+
+def _family_sources(n):
+    return np.unique(np.clip([0, 1, n // 2, n - 1], 0, n - 1)).astype(
+        np.int32)
+
+
+@pytest.mark.parametrize("family", sorted(_FAMILIES))
+def test_differential_boolean_all_forms(family):
+    from repro.core import sweep as S
+    from repro.core.engine import apsp_engine
+    src, dst, n = _FAMILIES[family]
+    g = CSRGraph.from_edges(src, dst, n)
+    sources = _family_sources(n)
+    oracle = bfs_dists(g, sources)
+    results = {}
+    for name, cfg in _boolean_variants():
+        res = apsp_engine(g, sources, config=cfg)
+        results[name] = (np.asarray(res.dist), int(res.sweeps))
+    base_name, (base, base_sweeps) = next(iter(results.items()))
+    np.testing.assert_array_equal(base, oracle, err_msg=f"{family} oracle")
+    base_parents = np.asarray(S.derive_parents(g, jnp.asarray(base)))
+    for name, (dist, sweeps) in results.items():
+        np.testing.assert_array_equal(
+            dist, base, err_msg=f"{family}: {name} != {base_name}")
+        assert sweeps == base_sweeps, (family, name, sweeps, base_sweeps)
+        parents = np.asarray(S.derive_parents(g, jnp.asarray(dist)))
+        np.testing.assert_array_equal(
+            parents, base_parents, err_msg=f"{family}: parents {name}")
+    # parent rows are internally consistent with the oracle distances
+    rows, cols = np.nonzero(base_parents >= 0)
+    assert (oracle[rows, base_parents[rows, cols]] + 1
+            == oracle[rows, cols]).all(), family
+
+
+@pytest.mark.parametrize("family", sorted(_FAMILIES))
+def test_differential_tropical_all_forms(family):
+    from repro.core import sweep as S
+    from repro.core.weighted import weighted_apsp
+    src, dst, n = _FAMILIES[family]
+    g = CSRGraph.from_edges(src, dst, n)
+    gs, gd = g.edge_arrays_np()
+    # small integer weights: every path sum is f32-exact, so Dijkstra's
+    # float64 distances must match the sweeps bit-for-bit
+    w = ((gs * 7 + gd * 3) % 9 + 1).astype(np.float32)
+    w_lanes = np.full(g.m_pad, np.inf, np.float32)   # padded CSR lanes
+    w_lanes[: g.n_edges] = w
+    sources = _family_sources(n)
+    oracle = dijkstra_dists(g, w, sources)
+    results = {}
+    for name, cfg in _tropical_variants():
+        res = weighted_apsp(g, w, sources, config=cfg)
+        results[name] = (np.asarray(res.dist), int(res.sweeps))
+    base_name, (base, base_sweeps) = next(iter(results.items()))
+    np.testing.assert_array_equal(base.astype(np.float64), oracle,
+                                  err_msg=f"{family} oracle")
+    base_parents = np.asarray(S.derive_parents(
+        g, jnp.asarray(base), weights=jnp.asarray(w_lanes)))
+    for name, (dist, sweeps) in results.items():
+        np.testing.assert_array_equal(
+            dist, base, err_msg=f"{family}: {name} != {base_name}")
+        assert sweeps == base_sweeps, (family, name, sweeps, base_sweeps)
+        parents = np.asarray(S.derive_parents(
+            g, jnp.asarray(dist), weights=jnp.asarray(w_lanes)))
+        np.testing.assert_array_equal(
+            parents, base_parents, err_msg=f"{family}: parents {name}")
+
+
+@pytest.mark.parametrize("family", sorted(_FAMILIES))
+def test_differential_counting_all_forms(family):
+    from repro.core.centrality import counting_apsp
+    src, dst, n = _FAMILIES[family]
+    g = CSRGraph.from_edges(src, dst, n)
+    sources = _family_sources(n)
+    d_oracle = bfs_dists(g, sources)
+    s_oracle = bfs_sigmas(g, sources)
+    results = {}
+    for name, cfg in _counting_variants():
+        res = counting_apsp(g, sources, config=cfg)
+        results[name] = (np.asarray(res.dist), np.asarray(res.sigma),
+                         int(res.sweeps))
+    base_name, (base_d, base_s, base_sweeps) = next(iter(results.items()))
+    np.testing.assert_array_equal(base_d, d_oracle,
+                                  err_msg=f"{family} dist oracle")
+    np.testing.assert_array_equal(base_s.astype(np.float64), s_oracle,
+                                  err_msg=f"{family} sigma oracle")
+    for name, (dist, sigma, sweeps) in results.items():
+        np.testing.assert_array_equal(
+            dist, base_d, err_msg=f"{family}: dist {name} != {base_name}")
+        np.testing.assert_array_equal(
+            sigma, base_s, err_msg=f"{family}: sigma {name}")
+        assert sweeps == base_sweeps, (family, name, sweeps, base_sweeps)
