@@ -1,9 +1,22 @@
 """Beyond-paper: multi-source blocked GEMM vs per-source sweeps (DESIGN §9.1)
-and the kernel-path work-skipping ratio (tile-skip effectiveness)."""
+and the kernel-path work-skipping ratio (tile-skip effectiveness).
+
+Emits a JSON family row like the other engine benchmarks: interleaved
+best/median timings from ``_timing.time_interleaved_stats`` for the
+64-source batched BOVM against 64 sequential SOVM runs, plus the
+deterministic ``tile_skip_fraction`` (the fraction of (source-tile,
+output-tile, frontier-tile) GEMM tiles a frontier/occupancy-aware kernel
+may skip, summed over the sweeps of the seeded RMAT fixpoint) — a
+hard regression-gate field: it depends only on the graph and the sweep
+schedule, not the machine.
+
+    PYTHONPATH=src python -m benchmarks.bench_batching [--out f.json]
+"""
 from __future__ import annotations
 
-import time
-from typing import List
+import argparse
+import json
+from typing import Dict, List, Optional
 
 import numpy as np
 import jax.numpy as jnp
@@ -11,33 +24,11 @@ import jax.numpy as jnp
 from repro.core import bovm_msbfs, sovm_sssp
 from repro.graph import generators as gen
 
-
-def _time(fn, repeats=3):
-    fn()
-    t0 = time.perf_counter()
-    for _ in range(repeats):
-        fn()
-    return (time.perf_counter() - t0) / repeats
+from ._timing import time_interleaved_stats
 
 
-def run(csv: List[str] | None = None):
-    g = gen.rmat(10, 8, directed=False, seed=5)
-    adj = g.to_dense()
-    srcs = jnp.arange(64, dtype=jnp.int32)
-
-    t_batched = _time(lambda: bovm_msbfs(adj, srcs).dist.block_until_ready())
-
-    def seq():
-        for s in range(64):
-            sovm_sssp(g, s).dist.block_until_ready()
-
-    t_seq = _time(seq)
-    sp = t_seq / t_batched
-    if csv is not None:
-        csv.append(f"batching_bovm64,{t_batched*1e6:.0f},"
-                   f"speedup_vs_64xSOVM={sp:.2f}")
-
-    # tile-skip effectiveness: fraction of (i,j,k) tiles skippable per sweep
+def _tile_skip_fraction(g, adj, srcs) -> float:
+    """Deterministic per-sweep tile occupancy accounting."""
     from repro.core import one_hot_frontier, UNREACHED
     f = one_hot_frontier(srcs, adj.shape[0], dtype=jnp.int8)
     dist = jnp.where(f > 0, 0, jnp.full(f.shape, UNREACHED))
@@ -59,13 +50,59 @@ def run(csv: List[str] | None = None):
         f = new.astype(jnp.int8)
         if not bool(jnp.any(new)):
             break
-    frac = skipped / max(total, 1)
+    return skipped / max(total, 1)
+
+
+def run(quick: bool = False, repeats: int = 3,
+        csv: Optional[List[str]] = None) -> Dict:
+    g = gen.rmat(10, 8, directed=False, seed=5)
+    adj = g.to_dense()
+    srcs = jnp.arange(64, dtype=jnp.int32)
+
+    def seq():
+        for s in range(64):
+            sovm_sssp(g, s).dist.block_until_ready()
+
+    stats = time_interleaved_stats(
+        {"batched": lambda: bovm_msbfs(adj, srcs).dist.block_until_ready(),
+         "seq": seq},
+        max(2, repeats))
+    row: Dict = {"n_nodes": g.n_nodes, "n_edges": g.n_edges,
+                 "n_sources": 64}
+    for mode, st in stats.items():
+        row[f"t_{mode}"] = st["best"]
+        row[f"t_{mode}_median"] = st["median"]
+    row["batch_speedup"] = row["t_seq"] / row["t_batched"]
+    row["tile_skip_fraction"] = round(
+        _tile_skip_fraction(g, adj, srcs), 6)
+
     if csv is not None:
-        csv.append(f"tile_skip_fraction,,skipped={frac:.3f}")
-    return {"batch_speedup": sp, "tile_skip": frac}
+        csv.append(f"batching_bovm64,{row['t_batched'] * 1e6:.0f},"
+                   f"speedup_vs_64xSOVM={row['batch_speedup']:.2f}")
+        csv.append(f"tile_skip_fraction,,"
+                   f"skipped={row['tile_skip_fraction']:.3f}")
+    return {
+        "benchmark": "bench_batching",
+        "families": {"rmat_64src": row},
+        # legacy keys some notebooks read
+        "batch_speedup": row["batch_speedup"],
+        "tile_skip": row["tile_skip_fraction"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+    result = run(quick=args.quick, repeats=args.repeats)
+    text = json.dumps(result, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    print(text)
 
 
 if __name__ == "__main__":
-    out: List[str] = []
-    print(run(csv=out))
-    print("\n".join(out))
+    main()

@@ -1,0 +1,283 @@
+"""Serving-tier load test: open-loop Poisson arrivals against the tiered
+GraphService (row cache -> landmark oracle -> bucketed exact sweeps).
+
+For each graph family the benchmark drives a seeded open-loop workload —
+arrivals are scheduled ahead of time at a fixed offered rate, never
+gated on completions — of point-to-point, k-nearest and full-row
+queries drawn from a hot source pool, and reports:
+
+  * ``p50_latency_us`` / ``p99_latency_us`` / ``qps`` — measured on a
+    *virtual clock*: arrivals advance it to their scheduled time, and
+    every submit/flush advances it by that call's measured wall time.
+    Timing fields are advisory (no ``_median`` suffix — the regression
+    gate does not time-gate them).
+  * ``hit_rate`` — fraction of queries answered without a sweep (row
+    cache + certified oracle).  **Hard-gated**: the load loop runs with
+    infinite deadlines and size-threshold-only flushing, so batch
+    composition — and therefore the hit counters — is a pure function
+    of the seeded arrival order, independent of machine speed.
+  * ``certified_count`` / ``certified_fraction`` — **hard-gated**,
+    computed by replaying the query stream against a bare
+    :class:`DistanceOracle` (a pure function of graph + landmarks +
+    pairs; no clock anywhere).
+  * ``labels_checksum`` — **hard-gated** fingerprint of the landmark
+    selection + label tables.
+
+Answers stay bit-exact by construction and this is *asserted before any
+metric is reported*: every completed query of the load run is compared
+against exact engine rows for its source (hops, k-nearest lists and
+full rows all must match).  A second, smaller stream is then served by
+an oracle-backed service and an exact-sweep-only service to fill the
+advisory ``oracle_p50_beats_exact`` boolean, and a deadline mini-run
+asserts expired queries are surfaced (``expired=True``) rather than
+dropped.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving [--quick] [--out f.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import EngineConfig, apsp_engine, prepare_graph
+from repro.graph import generators as gen
+from repro.serve import DistanceOracle, GraphQuery, GraphService
+
+FAMILIES: Dict[str, Callable] = {
+    "grid_road": lambda: gen.grid2d(32, 32),
+    "ws_citation": lambda: gen.watts_strogatz(1024, 8, 0.05, seed=3),
+    "rmat_social": lambda: gen.rmat(10, 8, directed=False, seed=1),
+    "rmat_web_directed": lambda: gen.rmat(10, 8, directed=True, seed=2),
+}
+
+QUICK_FAMILIES = ("grid_road", "ws_citation")
+
+N_LANDMARKS = 16
+POOL = 96           # hot-source pool (Zipf-weighted)
+MAX_BATCH = 32
+K_NEAREST = 8
+OFFERED_QPS = 5000.0
+
+
+class _VirtualClock:
+    """Injectable clock for GraphService: arrivals set it forward to
+    their scheduled instant; measured compute advances it."""
+
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self) -> float:
+        return self.now
+
+
+def _make_stream(n_queries: int, n_nodes: int, seed: int):
+    """Seeded workload: (kind, source, target) triples with Zipf-hot
+    sources from a fixed pool.  60% point-to-point / 20% k-nearest /
+    20% full-row."""
+    rng = np.random.default_rng(seed)
+    pool = rng.choice(n_nodes, size=min(POOL, n_nodes), replace=False)
+    w = 1.0 / np.arange(1, len(pool) + 1)          # Zipf weights
+    w /= w.sum()
+    sources = rng.choice(pool, size=n_queries, p=w)
+    targets = rng.integers(0, n_nodes, size=n_queries)
+    kinds = rng.choice(3, size=n_queries, p=[0.6, 0.2, 0.2])
+    gaps = rng.exponential(1.0 / OFFERED_QPS, size=n_queries)
+    arrivals = np.cumsum(gaps)
+    return pool, list(zip(kinds.tolist(), sources.tolist(),
+                          targets.tolist())), arrivals
+
+
+def _exact_rows(pg, sources: np.ndarray) -> Dict[int, np.ndarray]:
+    """Exact engine distance rows for every distinct source."""
+    sources = np.unique(np.asarray(sources, np.int32))
+    cfg = EngineConfig(source_batch=32)
+    out: Dict[int, np.ndarray] = {}
+    for i in range(0, len(sources), 32):
+        chunk = sources[i:i + 32]
+        dist = np.asarray(apsp_engine(pg, chunk, config=cfg).dist)
+        for s, row in zip(chunk, dist):
+            out[int(s)] = row
+    return out
+
+
+def _drive(svc: GraphService, stream, arrivals, clock: _VirtualClock
+           ) -> List[GraphQuery]:
+    """Open-loop load: submit at scheduled virtual instants, tick the
+    deadline-aware flusher after each arrival (size-threshold-only here
+    — no deadlines, no max_wait), drain the tail with flush()."""
+    for i, ((kind, s, t), at) in enumerate(zip(stream, arrivals)):
+        clock.now = max(clock.now, float(at))
+        if kind == 0:
+            q = GraphQuery(qid=i, source=s, target=t)
+        elif kind == 1:
+            q = GraphQuery(qid=i, source=s, k_nearest=K_NEAREST)
+        else:
+            q = GraphQuery(qid=i, source=s)
+        t0 = time.perf_counter()
+        svc.submit(q)
+        clock.now += time.perf_counter() - t0
+        while True:
+            t0 = time.perf_counter()
+            served = svc.tick()
+            clock.now += time.perf_counter() - t0
+            if not served:
+                break
+    while svc.pending():
+        t0 = time.perf_counter()
+        svc.flush()
+        clock.now += time.perf_counter() - t0
+    return svc.drain_completed()
+
+
+def _assert_bit_identical(done: List[GraphQuery],
+                          rows: Dict[int, np.ndarray]) -> None:
+    from repro.serve import select_top_k
+    for q in done:
+        assert not q.expired, f"query {q.qid} expired in no-deadline run"
+        row = rows[q.source]
+        if q.target is not None:
+            assert q.hops == int(row[q.target]), \
+                (q.qid, q.served_by, q.hops, int(row[q.target]))
+        elif q.k_nearest is not None:
+            assert q.nearest == select_top_k(row, q.source, q.k_nearest), \
+                (q.qid, q.served_by)
+        else:
+            assert np.array_equal(q.dist, row), (q.qid, q.served_by)
+
+
+def _replay_certified(oracle: DistanceOracle, stream) -> int:
+    """Deterministic certified count: the same stream against a bare
+    oracle — no cache, no clock, no batching."""
+    certified = 0
+    for kind, s, t in stream:
+        if kind == 0:
+            certified += bool(oracle.query(s, t).exact)
+        elif kind == 1:
+            certified += oracle.top_k(s, K_NEAREST) is not None
+        else:
+            certified += oracle.landmark_row(s) is not None
+    return certified
+
+
+def _latency_stats(done: List[GraphQuery]) -> Dict[str, float]:
+    lat = np.asarray([q.t_done - q.t_submit for q in done])
+    span = max(max(q.t_done for q in done), 1e-12)
+    return {
+        "p50_latency_us": float(np.percentile(lat, 50) * 1e6),
+        "p99_latency_us": float(np.percentile(lat, 99) * 1e6),
+        "qps": float(len(done) / span),
+    }
+
+
+def _deadline_minirun(g) -> int:
+    """Expired queries must be surfaced, not dropped: controlled-clock
+    run whose deadlines all trip before the flush."""
+    clock = _VirtualClock()
+    svc = GraphService(g, max_batch=8, clock=clock)
+    for i in range(4):
+        svc.submit(GraphQuery(qid=i, source=i, target=g.n_nodes - 1,
+                              deadline=0.01))
+    clock.now = 1.0
+    svc.flush()
+    done = svc.drain_completed()
+    assert len(done) == 4
+    assert all(q.expired and q.served_by == "expired" for q in done)
+    return svc.expired_count
+
+
+def run(quick: bool = False, n_queries: Optional[int] = None,
+        csv: Optional[List[str]] = None) -> Dict:
+    names = QUICK_FAMILIES if quick else tuple(FAMILIES)
+    nq = n_queries if n_queries is not None else \
+        (20_000 if quick else 100_000)
+    families = {}
+    for fi, name in enumerate(names):
+        g = FAMILIES[name]()
+        pg = prepare_graph(g)
+        pool, stream, arrivals = _make_stream(nq, g.n_nodes, seed=11 + fi)
+
+        clock = _VirtualClock()
+        svc = GraphService(pg.graph, max_batch=MAX_BATCH,
+                           n_landmarks=N_LANDMARKS, row_cache_size=POOL,
+                           completed_retention=None, clock=clock)
+        done = _drive(svc, stream, arrivals, clock)
+        assert len(done) == nq
+
+        # exactness first, metrics second
+        rows = _exact_rows(svc.prepared, pool)
+        _assert_bit_identical(done, rows)
+
+        certified = _replay_certified(
+            DistanceOracle(svc.prepared, n_landmarks=N_LANDMARKS), stream)
+        hits = svc.cache_hits + svc.oracle_hits
+        row: Dict = {
+            "n_nodes": g.n_nodes, "n_edges": g.n_edges,
+            "n_queries": nq,
+            "n_landmarks": svc.oracle.n_landmarks,
+            "labels_checksum": svc.oracle.labels_checksum(),
+            "certified_count": int(certified),
+            "certified_fraction": round(certified / nq, 6),
+            "hit_rate": round(hits / nq, 6),
+            "cache_hits": svc.cache_hits,
+            "oracle_hits": svc.oracle_hits,
+            "sweep_served": svc.sweep_served,
+            "offered_qps": OFFERED_QPS,
+            "bit_identical": True,          # asserted above
+        }
+        row.update(_latency_stats(done))
+
+        # advisory: warm tiered service vs exact-sweep-only on a smaller
+        # stream (the exact-only config sweeps every query)
+        n_cmp = min(400, nq)
+        p50 = {}
+        for label, kwargs in (
+                ("oracle", dict(n_landmarks=N_LANDMARKS,
+                                row_cache_size=POOL)),
+                ("exact", dict(n_landmarks=0, row_cache_size=0))):
+            c = _VirtualClock()
+            s2 = GraphService(pg.graph, max_batch=MAX_BATCH, clock=c,
+                              completed_retention=None, **kwargs)
+            d2 = _drive(s2, stream[:n_cmp], arrivals[:n_cmp], c)
+            p50[label] = _latency_stats(d2)["p50_latency_us"]
+        row["p50_oracle_cmp_us"] = p50["oracle"]
+        row["p50_exact_cmp_us"] = p50["exact"]
+        row["oracle_p50_beats_exact"] = p50["oracle"] < p50["exact"]
+
+        row["expired_surfaced"] = _deadline_minirun(g) == 4
+
+        families[name] = row
+        if csv is not None:
+            csv.append(f"serving_{name},{row['p50_latency_us']:.1f},"
+                       f"hit_rate={row['hit_rate']:.3f};"
+                       f"certified={row['certified_fraction']:.3f};"
+                       f"qps={row['qps']:.0f}")
+    return {
+        "benchmark": "bench_serving",
+        "n_landmarks": N_LANDMARKS,
+        "max_batch": MAX_BATCH,
+        "families": families,
+        "oracle_beats_exact_on": [n for n, r in families.items()
+                                  if r["oracle_p50_beats_exact"]],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--queries", type=int, default=None)
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+    result = run(quick=args.quick, n_queries=args.queries)
+    text = json.dumps(result, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

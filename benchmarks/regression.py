@@ -9,8 +9,12 @@ Two classes of checks, calibrated to what is and is not deterministic:
     (``n_nodes``/``n_edges``), **sweep counts** (the Fact-1 iteration
     counts) and the counting semiring's **sigma checksum** (the sum of
     shortest-path counts — exact integers in f32; any change means the
-    algorithm did different work, not that the machine was slow).  A
-    mismatch always fails.
+    algorithm did different work, not that the machine was slow), and the
+    serving tier's determinism fields (landmark ``labels_checksum``,
+    oracle ``certified_count``/``certified_fraction``, load-loop
+    ``hit_rate`` and tier hit counters — the gated load run flushes on
+    size thresholds over a virtual clock, so these are pure functions of
+    the seeds).  A mismatch always fails.
   * **timing gates** — per-family interleaved best-of-N *medians*
     (``t_<mode>_median`` from ``_timing.time_interleaved_stats``).  Wall
     clock is ±30% noisy on shared runners and the baseline may have been
@@ -39,9 +43,18 @@ DEFAULT_TIME_TOL = 6.0        # median may grow this much before failing
 MIN_GATE_SECONDS = 5e-3       # ignore timings too small to be stable
 
 _HARD_FAMILY_FIELDS = ("n_nodes", "n_edges", "n_sources", "sweeps",
-                       "sweeps_fused", "sweeps_tropical", "sigma_checksum")
+                       "sweeps_fused", "sweeps_tropical", "sigma_checksum",
+                       # serving tier: all pure functions of graph +
+                       # landmarks + seeded arrival order (the gated load
+                       # loop runs on a virtual clock with size-threshold-
+                       # only flushing, so no wall-clock dependence)
+                       "n_queries", "n_landmarks", "labels_checksum",
+                       "certified_count", "certified_fraction", "hit_rate",
+                       "cache_hits", "oracle_hits", "sweep_served",
+                       # kernel tile occupancy: graph + schedule only
+                       "tile_skip_fraction")
 _BENCHES = ("bench_apsp", "bench_weighted", "bench_sharded",
-            "bench_centrality")
+            "bench_centrality", "bench_batching", "bench_serving")
 
 
 def load(path: str) -> Dict:
@@ -109,7 +122,8 @@ def compare(current: Dict, baseline: Dict
             # written; a flip here means a hand-edited aggregate)
             for flag in ("auto_no_slower_than_best", "auto_beats_worse",
                          "fused_equals_per_sweep",
-                         "packed_push_matches_f32"):
+                         "packed_push_matches_f32",
+                         "oracle_p50_beats_exact"):
                 if brow.get(flag) and not crow.get(flag, True):
                     warnings.append(f"{bench}/{fam}: {flag} flipped "
                                     f"True -> False (timing-derived; "

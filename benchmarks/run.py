@@ -13,6 +13,12 @@ work:
   * bench_memory      — §3.4 / Eq. 13 memory model
   * bench_complexity  — Eqs. 5/6/10 work-bound verification
   * bench_batching    — beyond-paper: blocked multi-source GEMM + tile-skip
+                        (JSON; tile_skip_fraction rides the hard gate)
+  * bench_serving     — serving tier: open-loop Poisson load against the
+                        tiered GraphService (row cache -> landmark oracle
+                        -> bucketed sweeps); p50/p99/QPS advisory,
+                        hit-rate / certified-fraction / labels checksum
+                        hard-gated, bit-identity asserted in-bench (JSON)
   * bench_weighted    — paper §5 extension through the tropical engine:
                         fixed-dense vs fixed-sparse vs auto (JSON) + scipy
                         Dijkstra baseline
@@ -37,8 +43,8 @@ import time
 import jax
 
 from . import (bench_apsp, bench_batching, bench_centrality,
-               bench_complexity, bench_memory, bench_scaling, bench_sharded,
-               bench_sssp, bench_weighted, regression)
+               bench_complexity, bench_memory, bench_scaling, bench_serving,
+               bench_sharded, bench_sssp, bench_weighted, regression)
 
 
 def _csv_rows_to_records(rows):
@@ -70,7 +76,11 @@ def main() -> None:
     bench_scaling.run(csv=rows)
     bench_memory.run(csv=rows)
     bench_complexity.run(csv=rows, n_sources=4 if args.quick else 8)
-    bench_batching.run(csv=rows)
+    batching = bench_batching.run(quick=args.quick,
+                                  repeats=2 if args.quick else 3, csv=rows)
+    serving = bench_serving.run(quick=args.quick,
+                                n_queries=20_000 if args.quick else 100_000,
+                                csv=rows)
     weighted = bench_weighted.run(quick=args.quick,
                                   repeats=2 if args.quick else 5, csv=rows)
     apsp = bench_apsp.run(quick=args.quick,
@@ -97,6 +107,8 @@ def main() -> None:
         "bench_weighted": weighted,
         "bench_sharded": sharded,
         "bench_centrality": central,
+        "bench_batching": batching,
+        "bench_serving": serving,
     }
     if args.out:
         with open(args.out, "w") as f:

@@ -127,6 +127,25 @@ class PreparedGraph:
     n_pad: int
     # per-graph sweep-cost measurements, keyed (s, bn, bk, pull_chunk, path)
     cost_cache: dict = dataclasses.field(default_factory=dict, repr=False)
+    # landmark label tables for the distance-oracle serving tier
+    # (serve/oracle.py builds them with apsp_engine — the batched engine
+    # IS the preprocessing pass — and caches them here so every oracle
+    # over the same prepared graph shares one build):
+    #   landmarks          (L,) int32 sorted vertex ids
+    #   landmark_dist      (L, n) int32 forward rows d(landmark -> v)
+    #   landmark_dist_rev  (L, n) int32 reverse rows d(v -> landmark)
+    #                      (same array object as landmark_dist when the
+    #                      graph is symmetric)
+    #   landmark_key       build fingerprint (k, strategy) — a different
+    #                      request rebuilds and overwrites
+    landmarks: Optional[np.ndarray] = dataclasses.field(default=None,
+                                                        repr=False)
+    landmark_dist: Optional[np.ndarray] = dataclasses.field(default=None,
+                                                            repr=False)
+    landmark_dist_rev: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False)
+    landmark_key: Optional[tuple] = dataclasses.field(default=None,
+                                                      repr=False)
     _adj: Optional[jax.Array] = dataclasses.field(default=None, repr=False)
     _adj_pull: Optional[jax.Array] = dataclasses.field(default=None,
                                                        repr=False)

@@ -1,5 +1,9 @@
 from .csr import CSRGraph, DegreeStats, symmetrize
-from . import generators, partition, sampler, io
+from .landmarks import (STRATEGIES, degree_landmarks, farthest_point_fill,
+                        select_landmarks)
+from . import generators, landmarks, partition, sampler, io
 
 __all__ = ["CSRGraph", "DegreeStats", "symmetrize", "generators",
-           "partition", "sampler", "io"]
+           "landmarks", "partition", "sampler", "io",
+           "STRATEGIES", "degree_landmarks", "farthest_point_fill",
+           "select_landmarks"]

@@ -1,3 +1,7 @@
 from .engine import (GraphQuery, GraphService, Request, ServingEngine)
+from .oracle import (DistanceOracle, OracleAnswer, build_landmark_labels,
+                     select_top_k)
 
-__all__ = ["GraphQuery", "GraphService", "Request", "ServingEngine"]
+__all__ = ["GraphQuery", "GraphService", "Request", "ServingEngine",
+           "DistanceOracle", "OracleAnswer", "build_landmark_labels",
+           "select_top_k"]

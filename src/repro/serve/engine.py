@@ -8,17 +8,30 @@ is the same jitted ``transformer.decode_step`` the dry-run lowers at the
 32k/500k shapes.
 
 The engine also serves ``shortest_path`` graph queries: a
-:class:`GraphService` micro-batches pending :class:`GraphQuery` requests
-into one direction-optimized multi-source sweep (core/engine.py) per
-engine tick, so graph analytics ride the same continuous-batching loop as
-decode steps instead of needing a separate deployment.
+:class:`GraphService` answers :class:`GraphQuery` requests through a
+three-level serving tier —
+
+  1. **row cache** — an LRU of distance rows earlier sweeps already
+     computed: repeated queries from a hot source cost one O(n) lookup;
+  2. **landmark oracle** (serve/oracle.py) — O(|landmarks|)
+     triangle-inequality bounds with an exactness certificate; only
+     *certified* answers are served (bit-identical to a sweep by
+     construction);
+  3. **exact sweep fallback** — uncertified misses are bucketed by
+     predicted sweep count and micro-batched into one direction-optimized
+     multi-source run (core/engine.py) per flush, with per-query
+     deadlines driving a deadline-aware flush policy (``tick``).
+
+so graph analytics ride the same continuous-batching loop as decode
+steps instead of needing a separate deployment.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
-from collections import deque
-from typing import Dict, List, Optional
+from collections import OrderedDict, deque
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +47,7 @@ from ..core.weighted import (PreparedWeightedGraph, WeightedConfig,
                              prepare_weighted, weighted_apsp)
 from ..graph.csr import CSRGraph
 from ..models import transformer as T
+from .oracle import DistanceOracle, select_top_k
 
 
 @dataclasses.dataclass
@@ -67,34 +81,77 @@ class GraphQuery:
     sharded executor when a mesh is configured), cached, and answered
     from the cache.  Results land in ``analytics_result`` keyed by
     measure, all for node ``source``.
+
+    ``k_nearest=k`` asks for the k nearest reachable targets instead:
+    ``nearest`` is filled with (node, hops) pairs sorted by (distance,
+    node id) — ties deterministic, identical whether the answer came
+    from the oracle or the exact sweep fallback.
+
+    ``deadline`` is a per-query latency budget in seconds from submit.
+    The deadline-aware flush policy (:meth:`GraphService.tick`) tries to
+    serve the query before it trips; a query whose deadline has already
+    passed when its batch is formed is *surfaced* as ``expired=True``
+    (``served_by="expired"``, no result) rather than silently dropped or
+    allowed to pad-waste a live batch.
+
+    After completion, ``served_by`` records the serving tier ("cache" /
+    "oracle" / "sweep" / "sharded" / "expired") and ``certified`` is
+    True when the answer was proven exact *without* running a sweep
+    (row-cache or certified-oracle answers — both bit-identical to the
+    sweep the fallback would have run).
     """
     qid: int
     source: int
     target: Optional[int] = None
     weighted: bool = False
     analytics: Optional[tuple] = None
+    k_nearest: Optional[int] = None
+    deadline: Optional[float] = None
     dist: Optional[np.ndarray] = None
     hops: Optional[int] = None
     cost: Optional[float] = None
     analytics_result: Optional[Dict[str, float]] = None
+    nearest: Optional[List[Tuple[int, int]]] = None
+    certified: bool = False
+    served_by: Optional[str] = None
+    expired: bool = False
     t_submit: float = 0.0
     t_done: float = 0.0
+    t_deadline: float = math.inf
+    _seq: int = dataclasses.field(default=0, repr=False)
 
 
 class GraphService:
-    """Micro-batched shortest-path queries over one prepared graph.
+    """Tiered serving of shortest-path queries over one prepared graph.
 
-    Pending query sources are packed into a single source tile and run
-    through the direction-optimizing engine — one jitted multi-source
-    sweep per flush, amortized across every query in the batch exactly
-    like decode steps amortize across KV slots.  Pass edge ``weights`` to
-    additionally serve weighted queries: each flush runs at most one
-    boolean and one tropical micro-batch, both through the shared semiring
-    sweep layer.  ``GraphQuery(analytics=...)`` requests join the same
-    loop: per-source centrality measures micro-batch into one
-    counting/boolean run per flush, and the whole-graph betweenness
-    vector is built once (through the sharded executor when a mesh is
-    configured) and served from cache.
+    **Admission (at submit):** queries that can be answered exactly
+    without a sweep are completed immediately — from the LRU **row
+    cache** of previously computed distance rows (``row_cache_size``
+    rows per semiring; repeated point-to-point traffic costs one lookup)
+    or, with ``n_landmarks > 0``, from the **landmark oracle**
+    (serve/oracle.py) when its triangle-inequality bounds certify the
+    answer.  Both tiers are bit-identical to the sweep they avoid;
+    uncertified answers are never served.
+
+    **Bucketed batching (the fallback):** uncertified misses queue in
+    FIFO buckets keyed by (query kind, predicted-sweep-count bin) — the
+    landmark eccentricity bound predicts how many sweeps a source needs,
+    so one deep-BFS query doesn't pad-waste a micro-batch of shallow
+    ones (the length-bucketed batching idiom).  :meth:`flush` drains up
+    to ``max_batch`` queries in global FIFO order (compat path — the
+    `ServingEngine` tick uses it); :meth:`tick` applies the
+    deadline-aware policy instead: a bucket flushes when it is full,
+    when its earliest deadline minus the EWMA-estimated flush time
+    leaves no headroom, or when its head has waited ``max_wait``.
+    Queries whose deadline already passed when their batch forms are
+    surfaced as ``expired`` (never silently dropped, never computed).
+
+    Each flush runs at most one boolean, one tropical, and one
+    counting/centrality micro-batch through the shared semiring sweep
+    layer, exactly like decode steps amortize across KV slots; computed
+    rows feed the row cache.  ``GraphQuery(analytics=...)`` requests
+    micro-batch into one centrality run per flush, and the whole-graph
+    betweenness vector is built once and served from cache.
 
     Pass ``mesh`` to scale flushes past one device: micro-batches of at
     least ``sharded_threshold`` queries route through the semiring-generic
@@ -103,6 +160,13 @@ class GraphService:
     ``model``), whose results are bit-identical to the single-device
     engines; smaller flushes stay on the single-device path where the
     collective overhead isn't worth it.
+
+    Completed queries land in ``completed``, bounded to the most recent
+    ``completed_retention`` entries; long-running loops should consume
+    results via :meth:`drain_completed` (returns and clears) so nothing
+    is lost to the retention cap.  ``clock`` injects a time source
+    (default ``time.monotonic``) — deadline tests and the open-loop load
+    benchmark drive a virtual clock through it.
     """
 
     def __init__(self, graph: CSRGraph, *,
@@ -114,7 +178,15 @@ class GraphService:
                  sharded_threshold: int = 16,
                  sharded_config: Optional[ShardedConfig] = None,
                  sharded_weighted_config: Optional[ShardedConfig] = None,
-                 centrality_config: Optional[CentralityConfig] = None):
+                 centrality_config: Optional[CentralityConfig] = None,
+                 n_landmarks: int = 0,
+                 landmark_strategy: str = "mixed",
+                 oracle: Optional[DistanceOracle] = None,
+                 row_cache_size: int = 128,
+                 completed_retention: Optional[int] = 4096,
+                 max_wait: Optional[float] = None,
+                 deadline_safety: float = 2.0,
+                 clock: Callable[[], float] = time.monotonic):
         batch = max(8, ((max_batch + 7) // 8) * 8)
         if batch > 128:  # EngineConfig: above one push tile, multiple of 128
             batch = ((batch + 127) // 128) * 128
@@ -150,8 +222,38 @@ class GraphService:
         # betweenness is a whole-graph analytic: computed once (sharded
         # when a mesh is configured), then served from this cache
         self._betweenness: Optional[np.ndarray] = None
-        self.queue: deque[GraphQuery] = deque()
+        # --- serving tier ----------------------------------------------
+        self._clock = clock
+        if oracle is not None:
+            self.oracle: Optional[DistanceOracle] = oracle
+        elif n_landmarks > 0:
+            self.oracle = DistanceOracle(self.prepared,
+                                         n_landmarks=n_landmarks,
+                                         strategy=landmark_strategy,
+                                         config=self.config)
+        else:
+            self.oracle = None
+        # LRU of exact distance rows keyed (kind, source); every sweep
+        # feeds it, so a hot source pays one sweep ever
+        self.row_cache_size = max(0, row_cache_size)
+        self._row_cache: "OrderedDict[Tuple[str, int], np.ndarray]" = \
+            OrderedDict()
+        # FIFO buckets keyed (kind, predicted-sweep bin); _seq preserves
+        # global submit order for the compat flush() drain
+        self.buckets: "OrderedDict[Tuple[str, int], deque]" = OrderedDict()
+        self._seq = 0
+        self.max_wait = max_wait
+        self.deadline_safety = deadline_safety
+        self._flush_est = 0.02   # EWMA of sweep-flush seconds
+        self.completed_retention = completed_retention
         self.completed: List[GraphQuery] = []
+        # serving counters (totals since construction)
+        self.cache_hits = 0
+        self.oracle_hits = 0
+        self.sweep_served = 0
+        self.expired_count = 0
+        self.n_submitted = 0
+        self.n_completed_total = 0
 
     def _sharded_operands(self, semiring: str) -> ShardedOperands:
         """Lazy per-semiring ShardedOperands (dense/partitioned operands
@@ -178,7 +280,15 @@ class GraphService:
         return self.mesh is not None and \
             n_queries >= self.sharded_threshold
 
+    # -- admission ---------------------------------------------------------
+
     def submit(self, query: GraphQuery):
+        """Validate, then answer from the cache/oracle tier or enqueue.
+
+        Certified answers (row cache, landmark oracle) complete *at
+        submit* — they never occupy a sweep batch.  Everything else
+        lands in the FIFO bucket for its (kind, predicted-sweeps) key.
+        """
         n = self.prepared.graph.n_nodes
         if not 0 <= query.source < n:
             raise ValueError(f"source {query.source} not in [0, {n})")
@@ -192,26 +302,199 @@ class GraphService:
             if unknown:
                 raise ValueError(f"unknown analytics {sorted(unknown)}; "
                                  f"available: {MEASURES}")
+        if query.k_nearest is not None:
+            if query.k_nearest < 1:
+                raise ValueError(f"k_nearest must be >= 1, "
+                                 f"got {query.k_nearest}")
+            if query.target is not None or query.analytics is not None \
+                    or query.weighted:
+                raise ValueError("k_nearest queries are unweighted and "
+                                 "exclusive of target=/analytics=")
         if query.weighted and self.prepared_weighted is None:
             raise ValueError(
                 "weighted query on a GraphService built without weights=")
-        query.t_submit = time.monotonic()
-        self.queue.append(query)
+        now = self._clock()
+        query.t_submit = now
+        query.t_deadline = now + query.deadline \
+            if query.deadline is not None else math.inf
+        query._seq = self._seq
+        self._seq += 1
+        self.n_submitted += 1
+        if self._try_serve_cached(query, now):
+            return
+        self.buckets.setdefault(self._bucket_key(query),
+                                deque()).append(query)
+
+    def _try_serve_cached(self, q: GraphQuery, now: float) -> bool:
+        """Row-cache then landmark-oracle admission; True == completed."""
+        if q.analytics is not None:
+            return False
+        kind = "weighted" if q.weighted else "unweighted"
+        row = self._row_cache.get((kind, q.source))
+        if row is not None:
+            self._row_cache.move_to_end((kind, q.source))
+            self._fill_from_row(q, row)
+            self.cache_hits += 1
+            q.certified = True
+            self._complete(q, "cache", now)
+            return True
+        if self.oracle is None or q.weighted:
+            return False
+        if q.target is not None:
+            ans = self.oracle.query(q.source, q.target)
+            if not ans.exact:
+                return False
+            q.hops = ans.hops
+        elif q.k_nearest is not None:
+            nearest = self.oracle.top_k(q.source, q.k_nearest)
+            if nearest is None:
+                return False
+            q.nearest = nearest
+        else:
+            lrow = self.oracle.landmark_row(q.source)
+            if lrow is None:
+                return False
+            q.dist = np.array(lrow)
+        self.oracle_hits += 1
+        q.certified = True
+        self._complete(q, "oracle", now)
+        return True
+
+    def _fill_from_row(self, q: GraphQuery, row: np.ndarray) -> None:
+        """Answer any non-analytics query kind from an exact dist row."""
+        if q.target is not None:
+            if q.weighted:
+                q.cost = float(row[q.target])
+            else:
+                q.hops = int(row[q.target])
+        elif q.k_nearest is not None:
+            q.nearest = select_top_k(row, q.source, q.k_nearest)
+        else:
+            q.dist = np.array(row)
+
+    def _cache_row(self, kind: str, source: int, row: np.ndarray) -> None:
+        if self.row_cache_size <= 0:
+            return
+        self._row_cache[(kind, int(source))] = np.asarray(row)
+        self._row_cache.move_to_end((kind, int(source)))
+        while len(self._row_cache) > self.row_cache_size:
+            self._row_cache.popitem(last=False)
+
+    def _bucket_key(self, q: GraphQuery) -> Tuple[str, int]:
+        """(kind, predicted-sweep bin): queries expected to converge in a
+        similar sweep count batch together, so a deep-BFS straggler can't
+        stretch the while_loop of a shallow batch (pad waste)."""
+        if q.analytics is not None:
+            return ("analytics", 0)
+        if q.weighted:
+            return ("weighted", 0)
+        bin_ = self.oracle.predicted_sweeps(q.source).bit_length() \
+            if self.oracle is not None else 0
+        return ("unweighted", bin_)
+
+    def _complete(self, q: GraphQuery, served_by: str, now: float) -> None:
+        q.served_by = served_by
+        q.t_done = now
+        self.completed.append(q)
+        self.n_completed_total += 1
+        if self.completed_retention is not None and \
+                len(self.completed) > self.completed_retention:
+            del self.completed[: len(self.completed)
+                               - self.completed_retention]
+
+    def drain_completed(self) -> List[GraphQuery]:
+        """Return all retained completed queries and clear the buffer —
+        the consumption API for long-running serving loops (retention
+        only bounds callers that never drain)."""
+        out = self.completed
+        self.completed = []
+        return out
 
     def pending(self) -> int:
-        return len(self.queue)
+        return sum(len(b) for b in self.buckets.values())
+
+    # -- flush policy ------------------------------------------------------
 
     def flush(self) -> List[GraphQuery]:
-        """Serve up to one source tile of pending queries; returns them."""
-        if not self.queue:
+        """Serve up to ``max_batch`` pending queries in global FIFO
+        order regardless of buckets or deadlines; returns them.  The
+        unconditional drain — ``ServingEngine.step`` calls it every
+        tick; :meth:`tick` is the deadline/size-aware alternative."""
+        batch = self._take_global(self.max_batch)
+        return self._serve(batch)
+
+    def tick(self) -> List[GraphQuery]:
+        """Deadline-aware flush: serve ONE ripe bucket (FIFO within it),
+        or nothing if no bucket is ripe.
+
+        A bucket is ripe when it is full (``max_batch``), when its
+        earliest deadline leaves less headroom than ``deadline_safety``
+        x the EWMA flush-time estimate, or when its head query has
+        waited ``max_wait``.  Serving a single bucket keeps the
+        micro-batch homogeneous in predicted sweep count — the whole
+        point of bucketing.  Ripest = earliest deadline, then oldest.
+        """
+        now = self._clock()
+        headroom = self.deadline_safety * self._flush_est
+        best_key, best_rank = None, None
+        for key, bucket in self.buckets.items():
+            if not bucket:
+                continue
+            dl = min(q.t_deadline for q in bucket)
+            ripe = (len(bucket) >= self.max_batch
+                    or dl - now <= headroom
+                    or (self.max_wait is not None
+                        and now - bucket[0].t_submit >= self.max_wait))
+            if not ripe:
+                continue
+            rank = (dl, bucket[0]._seq)
+            if best_rank is None or rank < best_rank:
+                best_key, best_rank = key, rank
+        if best_key is None:
             return []
-        batch = [self.queue.popleft()
-                 for _ in range(min(len(self.queue), self.max_batch))]
-        now = time.monotonic()
-        analytics = [q for q in batch if q.analytics is not None]
-        unweighted = [q for q in batch
+        bucket = self.buckets[best_key]
+        batch = [bucket.popleft()
+                 for _ in range(min(len(bucket), self.max_batch))]
+        return self._serve(batch)
+
+    def _take_global(self, limit: int) -> List[GraphQuery]:
+        """Pop up to ``limit`` queries in global submit order (merge the
+        per-bucket FIFOs by sequence number)."""
+        batch: List[GraphQuery] = []
+        while len(batch) < limit:
+            best = None
+            for key, bucket in self.buckets.items():
+                if bucket and (best is None
+                               or bucket[0]._seq < self.buckets[best][0]._seq):
+                    best = key
+            if best is None:
+                break
+            batch.append(self.buckets[best].popleft())
+        return batch
+
+    # -- batch execution ---------------------------------------------------
+
+    def _serve(self, batch: List[GraphQuery]) -> List[GraphQuery]:
+        if not batch:
+            return []
+        now = self._clock()
+        live: List[GraphQuery] = []
+        for q in batch:
+            if q.t_deadline < now:
+                # deadline already blown: surface, don't compute — an
+                # expired query must neither vanish nor pad a live batch
+                q.expired = True
+                self.expired_count += 1
+                self._complete(q, "expired", now)
+            else:
+                live.append(q)
+        if not live:
+            return batch
+        t0 = time.monotonic()
+        analytics = [q for q in live if q.analytics is not None]
+        unweighted = [q for q in live
                       if not q.weighted and q.analytics is None]
-        weighted = [q for q in batch if q.weighted]
+        weighted = [q for q in live if q.weighted]
         if unweighted:
             sources = np.asarray([q.source for q in unweighted], np.int32)
             if self._route_sharded(len(unweighted)):
@@ -219,16 +502,16 @@ class GraphService:
                     sharded_apsp(self._sharded_operands("boolean"),
                                  sources).dist)
                 self.sharded_flushes += 1
+                served_by = "sharded"
             else:
                 (_, dist, _), = apsp_engine_blocks(self.prepared, sources,
                                                    config=self.config)
                 dist = np.asarray(dist)
-            now = time.monotonic()
+                served_by = "sweep"
             for row, q in zip(dist, unweighted):
-                if q.target is None:
-                    q.dist = row
-                else:
-                    q.hops = int(row[q.target])
+                self._fill_from_row(q, row)
+                self._cache_row("unweighted", q.source, row)
+                q.served_by = served_by
         if weighted:
             sources = np.asarray([q.source for q in weighted], np.int32)
             if self._route_sharded(len(weighted)):
@@ -236,22 +519,34 @@ class GraphService:
                     sharded_apsp(self._sharded_operands("tropical"),
                                  sources).dist)
                 self.sharded_flushes += 1
+                served_by = "sharded"
             else:
                 res = weighted_apsp(self.prepared_weighted, sources=sources,
                                     config=self.weighted_config)
                 dist = np.asarray(res.dist)
-            now = time.monotonic()
+                served_by = "sweep"
             for row, q in zip(dist, weighted):
-                if q.target is None:
-                    q.dist = row
-                else:
-                    q.cost = float(row[q.target])
+                self._fill_from_row(q, row)
+                self._cache_row("weighted", q.source, row)
+                q.served_by = served_by
         if analytics:
             self._flush_analytics(analytics)
-            now = time.monotonic()
-        for q in batch:
+            for q in analytics:
+                q.served_by = "sweep"
+        self.sweep_served += len(live)
+        # EWMA of the wall cost of one sweep flush — feeds tick()'s
+        # deadline-headroom estimate
+        self._flush_est = 0.5 * self._flush_est + \
+            0.5 * (time.monotonic() - t0)
+        now = self._clock()
+        for q in live:
             q.t_done = now
             self.completed.append(q)
+            self.n_completed_total += 1
+        if self.completed_retention is not None and \
+                len(self.completed) > self.completed_retention:
+            del self.completed[: len(self.completed)
+                               - self.completed_retention]
         return batch
 
     def _flush_analytics(self, queries: List[GraphQuery]) -> None:

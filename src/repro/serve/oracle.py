@@ -1,0 +1,304 @@
+"""Landmark distance oracle: O(|landmarks|) point-to-point answers with
+an exactness certificate, backed by label tables the batched APSP engine
+builds offline.
+
+The serving tier's hot path is repeated point-to-point queries, and a
+full direction-optimized sweep run per micro-batch is O(sweeps · n)
+work when the answer is often determined by |landmarks| table lookups.
+This module implements the classic landmark (ALT-style) oracle on top of
+the engine's own machinery:
+
+  * **offline** — :func:`build_landmark_labels` selects landmarks
+    (``graph/landmarks.py``: degree/farthest-point mix) and computes one
+    BFS row per landmark with ``core/engine.py::apsp_engine`` — the
+    batched engine *is* the preprocessing pass (Burkhardt's algebraic-BFS
+    bound covers its cost: one O(ε·m) sweep run per landmark tile).
+    Directed graphs get a second table from the reversed graph; symmetric
+    graphs share one.  Tables live on the :class:`PreparedGraph` so every
+    oracle over the same prepared graph reuses one build.
+
+  * **online** — for a query (s, t) the triangle inequality gives, per
+    landmark L with forward rows F[L, v] = d(L, v) and reverse rows
+    R[L, v] = d(v, L):
+
+        upper:  d(s,t) ≤ R[L, s] + F[L, t]             (route via L)
+        lower:  d(s,t) ≥ F[L, t] − F[L, s]             (F[L, s] finite)
+        lower:  d(s,t) ≥ R[L, s] − R[L, t]             (R[L, t] finite)
+
+    Unreachability propagates soundly through the lower bounds: if L
+    reaches s but not t (or s reaches L but t does not... reversed), the
+    bound is +inf — a *certificate* that t is unreachable from s.  The
+    answer is **certified exact** when the query hits a landmark's own
+    shortest-path tree root (s or t is a landmark — the Yamane &
+    Kobayashi SPT case: the landmark's BFS row is the exact answer) or
+    when upper == lower.  Everything else is a miss the serving tier
+    falls back to an exact batched sweep for — oracle answers are
+    therefore bit-identical to the engine by construction, never
+    approximate.
+
+All online math is host-side numpy over the (L, n) tables: queries are
+O(L), full-row bounds are O(L·n).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple, Union
+
+import numpy as np
+
+from ..core.engine import (EngineConfig, PreparedGraph, apsp_engine,
+                           prepare_graph)
+from ..graph.csr import CSRGraph
+from ..graph.landmarks import STRATEGIES, select_landmarks
+
+_INF = np.inf
+
+
+def _is_symmetric(g: CSRGraph) -> bool:
+    """Edge-set symmetry check: for a symmetric graph the CSC arrays
+    equal the CSR arrays (same lexsorted layout), so the reverse label
+    table would be identical and need not be built."""
+    return bool(
+        np.array_equal(np.asarray(g.indptr), np.asarray(g.indptr_t))
+        and np.array_equal(np.asarray(g.indices), np.asarray(g.indices_t)))
+
+
+def _label_config(n_landmarks: int,
+                  config: Optional[EngineConfig]) -> EngineConfig:
+    if config is not None:
+        return config
+    batch = max(8, ((n_landmarks + 7) // 8) * 8)
+    if batch > 128:
+        batch = ((batch + 127) // 128) * 128
+    return EngineConfig(source_batch=min(batch, 128))
+
+
+def build_landmark_labels(pg: PreparedGraph, *, n_landmarks: int = 16,
+                          strategy: str = "mixed",
+                          config: Optional[EngineConfig] = None
+                          ) -> np.ndarray:
+    """Select landmarks and attach the (L, n) label tables to ``pg``.
+
+    Idempotent per (n_landmarks, strategy): a matching ``landmark_key``
+    reuses the cached tables, anything else rebuilds.  Returns the
+    landmark id array.
+    """
+    key = (int(n_landmarks), strategy)
+    if pg.landmark_key == key and pg.landmark_dist is not None:
+        return pg.landmarks
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown landmark strategy {strategy!r}; "
+                         f"available: {STRATEGIES}")
+    if n_landmarks < 1:
+        raise ValueError(f"n_landmarks must be >= 1, got {n_landmarks}")
+    cfg = _label_config(n_landmarks, config)
+
+    def bfs_row(v: int) -> np.ndarray:
+        return np.asarray(
+            apsp_engine(pg, np.asarray([v], np.int32), config=cfg).dist[0])
+
+    marks = select_landmarks(pg.graph, n_landmarks, strategy=strategy,
+                             dist_fn=bfs_row)
+    fwd = np.asarray(apsp_engine(pg, marks, config=cfg).dist)
+    if _is_symmetric(pg.graph):
+        rev = fwd
+    else:
+        rev_pg = prepare_graph(pg.graph.reverse())
+        rev = np.asarray(apsp_engine(rev_pg, marks, config=cfg).dist)
+    pg.landmarks = marks
+    pg.landmark_dist = fwd
+    pg.landmark_dist_rev = rev
+    pg.landmark_key = key
+    return marks
+
+
+def select_top_k(dist_row: np.ndarray, source: int, k: int
+                 ) -> List[Tuple[int, int]]:
+    """Deterministic top-k-nearest from an exact distance row: reachable
+    targets (excluding the source itself) sorted by (distance, vertex
+    id), first ``k``.  The oracle's certified top-k answer and the exact
+    sweep fallback both use this rule, so they are bit-identical."""
+    dist = np.asarray(dist_row)
+    nodes = np.arange(len(dist))
+    mask = (dist >= 0) & np.isfinite(dist.astype(np.float64)) & \
+        (nodes != source)
+    nodes = nodes[mask]
+    d = dist[mask]
+    order = np.lexsort((nodes, d))[:k]
+    return [(int(nodes[i]), int(d[i])) for i in order]
+
+
+@dataclasses.dataclass
+class OracleAnswer:
+    """One point-to-point oracle result.  ``exact`` means the bounds (or
+    a landmark hit) *prove* ``hops`` — certified answers are bit-identical
+    to an exact sweep.  Uncertified answers carry only the bound
+    interval; ``hops`` is None and the caller must fall back."""
+    source: int
+    target: int
+    lower: float              # sound lower bound (may be +inf: proof of
+    upper: float              # unreachability); upper may be +inf too
+    exact: bool
+    hops: Optional[int] = None        # set iff exact; -1 = unreachable
+    certificate: str = ""     # "trivial" | "landmark-source" |
+    #                           "landmark-target" | "bounds" | ""
+
+
+class DistanceOracle:
+    """Query-time wrapper over the landmark label tables.
+
+    Construct from a :class:`CSRGraph` or an already-shared
+    :class:`PreparedGraph`; the label build goes through
+    :func:`build_landmark_labels` (cached on the prepared graph).
+    """
+
+    def __init__(self, g: Union[CSRGraph, PreparedGraph], *,
+                 n_landmarks: int = 16, strategy: str = "mixed",
+                 config: Optional[EngineConfig] = None):
+        pg = g if isinstance(g, PreparedGraph) else prepare_graph(g)
+        self.prepared = pg
+        build_landmark_labels(pg, n_landmarks=n_landmarks,
+                              strategy=strategy, config=config)
+        self.landmarks: np.ndarray = pg.landmarks
+        self._pos = {int(v): i for i, v in enumerate(self.landmarks)}
+        # float views with +inf for unreachable — the bound arithmetic's
+        # native encoding (int -1 sentinels don't min/max soundly)
+        self._F = np.where(pg.landmark_dist < 0, _INF,
+                           pg.landmark_dist.astype(np.float64))
+        self._R = self._F if pg.landmark_dist_rev is pg.landmark_dist \
+            else np.where(pg.landmark_dist_rev < 0, _INF,
+                          pg.landmark_dist_rev.astype(np.float64))
+        # per-landmark forward eccentricity over reachable targets —
+        # feeds the serving tier's predicted-sweep-count buckets
+        finite = np.where(np.isfinite(self._F), self._F, 0.0)
+        self._ecc_fwd = finite.max(axis=1)
+        self.n_queries = 0
+        self.n_certified = 0
+
+    @property
+    def n_landmarks(self) -> int:
+        return len(self.landmarks)
+
+    def landmark_row(self, source: int) -> Optional[np.ndarray]:
+        """The exact (n,) int32 forward row when ``source`` is a
+        landmark (its SPT is the label), else None."""
+        i = self._pos.get(int(source))
+        if i is None:
+            return None
+        return self.prepared.landmark_dist[i]
+
+    # -- point-to-point ----------------------------------------------------
+
+    def query(self, source: int, target: int) -> OracleAnswer:
+        """O(L) bounds + certificate for one (source, target) pair."""
+        self.n_queries += 1
+        s, t = int(source), int(target)
+        if s == t:
+            self.n_certified += 1
+            return OracleAnswer(s, t, 0.0, 0.0, True, hops=0,
+                                certificate="trivial")
+        i = self._pos.get(s)
+        if i is not None:
+            d = float(self._F[i, t])
+            self.n_certified += 1
+            return OracleAnswer(s, t, d, d, True,
+                                hops=-1 if np.isinf(d) else int(d),
+                                certificate="landmark-source")
+        j = self._pos.get(t)
+        if j is not None:
+            d = float(self._R[j, s])
+            self.n_certified += 1
+            return OracleAnswer(s, t, d, d, True,
+                                hops=-1 if np.isinf(d) else int(d),
+                                certificate="landmark-target")
+        Fs, Ft = self._F[:, s], self._F[:, t]
+        Rs, Rt = self._R[:, s], self._R[:, t]
+        upper = float(np.min(Rs + Ft, initial=_INF))
+        with np.errstate(invalid="ignore"):   # inf-inf in masked branches
+            lb_f = np.where(np.isfinite(Fs), Ft - Fs, -_INF)
+            lb_r = np.where(np.isfinite(Rt), Rs - Rt, -_INF)
+        lower = max(float(np.max(lb_f, initial=1.0)),
+                    float(np.max(lb_r, initial=1.0)), 1.0)
+        if upper == lower:
+            self.n_certified += 1
+            return OracleAnswer(s, t, lower, upper, True,
+                                hops=-1 if np.isinf(upper) else int(upper),
+                                certificate="bounds")
+        return OracleAnswer(s, t, lower, upper, False)
+
+    # -- full-row bounds / top-k ------------------------------------------
+
+    def bounds(self, source: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(lower, upper) float64 rows over ALL targets — O(L·n)."""
+        s = int(source)
+        i = self._pos.get(s)
+        if i is not None:
+            row = self._F[i]
+            return row.copy(), row.copy()
+        Fs = self._F[:, s][:, None]
+        Rs = self._R[:, s][:, None]
+        upper = np.min(Rs + self._F, axis=0, initial=_INF)
+        with np.errstate(invalid="ignore"):   # inf-inf in masked branches
+            lb_f = np.max(np.where(np.isfinite(Fs), self._F - Fs, -_INF),
+                          axis=0, initial=1.0)
+            lb_r = np.max(np.where(np.isfinite(self._R), Rs - self._R,
+                                   -_INF), axis=0, initial=1.0)
+        lower = np.maximum(np.maximum(lb_f, lb_r), 1.0)
+        lower[s] = 0.0
+        upper[s] = 0.0
+        return lower, upper
+
+    def top_k(self, source: int, k: int
+              ) -> Optional[List[Tuple[int, int]]]:
+        """Certified top-k-nearest, or None when the bounds cannot prove
+        the full answer.
+
+        The selected set is the k lexicographically-(distance, id)-
+        smallest certified-reachable targets; the whole answer certifies
+        only if no *uncertified* target could still beat the k-th
+        selected distance (every uncertified lower bound is strictly
+        larger).  Certified-but-excluded targets are safe by
+        construction of the selection order."""
+        self.n_queries += 1
+        lower, upper = self.bounds(source)
+        s = int(source)
+        nodes = np.arange(len(lower))
+        certified = (lower == upper) & (nodes != s)
+        reach = certified & np.isfinite(upper)
+        cand_nodes = nodes[reach]
+        cand_d = upper[reach]
+        order = np.lexsort((cand_nodes, cand_d))[:k]
+        sel = [(int(cand_nodes[i]), int(cand_d[i])) for i in order]
+        d_k = sel[-1][1] if len(sel) == k else _INF
+        uncert = ~certified & (nodes != s)
+        if np.any(lower[uncert] <= d_k):
+            return None
+        self.n_certified += 1
+        return sel
+
+    # -- serving-tier helpers ---------------------------------------------
+
+    def predicted_sweeps(self, source: int) -> int:
+        """Upper estimate of the sweep count a fresh BFS from ``source``
+        would run: ecc(s) ≤ min_L d(s, L) + ecc_fwd(L).  Falls back to n
+        when s reaches no landmark (nothing is known).  Drives the
+        serving tier's pad-waste-avoiding buckets — an estimate only,
+        never correctness-relevant."""
+        s = int(source)
+        i = self._pos.get(s)
+        if i is not None:
+            return int(self._ecc_fwd[i])
+        bound = float(np.min(self._R[:, s] + self._ecc_fwd, initial=_INF))
+        if np.isinf(bound):
+            return self.prepared.graph.n_nodes
+        return int(bound)
+
+    def labels_checksum(self) -> int:
+        """Deterministic fingerprint of (landmarks, tables) — a hard
+        regression-gate field: any drift means selection or the label
+        build did different work."""
+        return int(self.landmarks.astype(np.int64).sum()
+                   + np.int64(7) * self.prepared.landmark_dist.astype(
+                       np.int64).sum()
+                   + np.int64(13) * self.prepared.landmark_dist_rev.astype(
+                       np.int64).sum())

@@ -129,6 +129,58 @@ def test_centrality_sigma_checksum_gates_hard():
     assert failures == []
 
 
+def test_serving_determinism_fields_gate_hard():
+    """bench_serving's hit-rate / certified-fraction / labels checksum
+    are pure functions of the seeds (virtual-clock load loop): any drift
+    fails hard, while the latency fields stay ungated and the
+    oracle_p50_beats_exact boolean only warns."""
+    def agg(hit=0.9904, cert=6171, checksum=8238884, beats=True,
+            p50=120.0):
+        out = _aggregate()
+        out["bench_serving"] = {"families": {"grid_road": {
+            "n_nodes": 1024, "n_edges": 3968, "n_queries": 20000,
+            "n_landmarks": 16, "labels_checksum": checksum,
+            "certified_count": cert, "certified_fraction": cert / 20000,
+            "hit_rate": hit, "cache_hits": 19000, "oracle_hits": 808,
+            "sweep_served": 192,
+            "p50_latency_us": p50, "p99_latency_us": p50 * 40,
+            "qps": 5000.0, "oracle_p50_beats_exact": beats,
+        }}}
+        return out
+    for kwargs, field in ((dict(hit=0.5), "hit_rate"),
+                          (dict(cert=6000), "certified_count"),
+                          (dict(checksum=1), "labels_checksum")):
+        failures, _ = compare(agg(**kwargs), agg())
+        assert any("bench_serving" in f and field in f
+                   for f in failures), field
+    # latency drift never fails; the advisory boolean warns
+    failures, warnings = compare(agg(p50=5000.0, beats=False), agg())
+    assert failures == []
+    assert any("oracle_p50_beats_exact" in w for w in warnings)
+    failures, _ = compare(agg(), agg())
+    assert failures == []
+
+
+def test_batching_tile_skip_fraction_gates_hard():
+    """bench_batching's tile-skip fraction depends only on the seeded
+    graph and sweep schedule — drift means the occupancy accounting (or
+    the fixpoint) changed."""
+    def agg(frac=0.428, median=0.2):
+        out = _aggregate()
+        out["bench_batching"] = {"families": {"rmat_64src": {
+            "n_nodes": 1024, "n_edges": 7628, "n_sources": 64,
+            "tile_skip_fraction": frac, "t_batched_median": median,
+        }}}
+        return out
+    failures, _ = compare(agg(frac=0.3), agg())
+    assert any("bench_batching" in f and "tile_skip_fraction" in f
+               for f in failures)
+    failures, _ = compare(agg(median=0.3), agg())
+    assert failures == []
+    failures, _ = compare(agg(), agg())
+    assert failures == []
+
+
 def test_sharded_bench_sweeps_gate_hard():
     """bench_sharded rides the same hard gates: a tropical sweep-count
     change (sharded and single device are pinned to agree) fails."""

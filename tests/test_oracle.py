@@ -1,0 +1,193 @@
+"""Landmark distance oracle: selection determinism, bound soundness,
+certificates, top-k certification, and bit-identity of every certified
+answer against the queue-BFS oracle — including the adversarial edge-list
+families."""
+import numpy as np
+import pytest
+
+from oracles import adversarial_families, bfs_dist
+
+from repro.core.engine import prepare_graph
+from repro.graph import generators as gen
+from repro.graph.csr import CSRGraph
+from repro.graph.landmarks import (degree_landmarks, farthest_point_fill,
+                                   select_landmarks)
+from repro.serve import DistanceOracle, build_landmark_labels, select_top_k
+
+
+def _bfs_fn(g):
+    return lambda v: bfs_dist(g, int(v))
+
+
+# -- landmark selection ----------------------------------------------------
+
+def test_degree_landmarks_deterministic_and_sorted():
+    g = gen.barabasi_albert(200, 3, seed=7)
+    a = degree_landmarks(g, 8)
+    b = degree_landmarks(g, 8)
+    np.testing.assert_array_equal(a, b)
+    assert len(np.unique(a)) == 8
+    # top-degree vertices really are the highest-degree ones
+    deg = np.diff(np.asarray(g.indptr)[:g.n_nodes + 1]) + \
+        np.diff(np.asarray(g.indptr_t)[:g.n_nodes + 1])
+    cutoff = np.sort(deg)[::-1][7]
+    assert all(deg[v] >= cutoff for v in a)
+
+
+def test_farthest_point_fill_spreads_over_components():
+    # two disjoint paths: greedy k-center must pick from both components
+    src = np.r_[np.arange(9), 10 + np.arange(9)]
+    dst = np.r_[np.arange(1, 10), 11 + np.arange(9)]
+    g = CSRGraph.from_edges(np.r_[src, dst], np.r_[dst, src], 20)
+    marks = farthest_point_fill(g, [0], 3, _bfs_fn(g))
+    comp = {int(v) // 10 for v in marks}
+    assert comp == {0, 1}
+
+
+def test_select_landmarks_strategies():
+    g = gen.watts_strogatz(128, 6, 0.1, seed=1)
+    for strategy in ("degree", "farthest", "mixed"):
+        marks = select_landmarks(g, 8, strategy=strategy,
+                                 dist_fn=_bfs_fn(g))
+        assert len(marks) == 8 == len(np.unique(marks))
+        np.testing.assert_array_equal(marks, np.sort(marks))
+    with pytest.raises(ValueError, match="strategy"):
+        select_landmarks(g, 8, strategy="random", dist_fn=_bfs_fn(g))
+
+
+# -- label build / caching -------------------------------------------------
+
+def test_build_landmark_labels_cached_on_prepared_graph():
+    pg = prepare_graph(gen.grid2d(8, 8))
+    m1 = build_landmark_labels(pg, n_landmarks=4)
+    t1 = pg.landmark_dist
+    m2 = build_landmark_labels(pg, n_landmarks=4)
+    assert m2 is m1 and pg.landmark_dist is t1     # reused, not rebuilt
+    build_landmark_labels(pg, n_landmarks=6)       # new key -> rebuild
+    assert pg.landmark_dist is not t1
+    assert pg.landmark_key == (6, "mixed")
+
+
+def test_labels_match_bfs_and_symmetric_graph_shares_reverse_table():
+    pg = prepare_graph(gen.watts_strogatz(96, 4, 0.2, seed=9))
+    build_landmark_labels(pg, n_landmarks=4)
+    assert pg.landmark_dist_rev is pg.landmark_dist    # symmetric: shared
+    for i, L in enumerate(pg.landmarks):
+        np.testing.assert_array_equal(pg.landmark_dist[i],
+                                      bfs_dist(pg.graph, int(L)))
+
+
+def test_directed_graph_builds_reverse_table():
+    g = gen.rmat(7, 8, directed=True, seed=4)
+    oc = DistanceOracle(g, n_landmarks=4)
+    pg = oc.prepared
+    assert pg.landmark_dist_rev is not pg.landmark_dist
+    grev = g.reverse()
+    for i, L in enumerate(pg.landmarks):
+        np.testing.assert_array_equal(pg.landmark_dist_rev[i],
+                                      bfs_dist(grev, int(L)))
+
+
+def test_labels_checksum_deterministic():
+    a = DistanceOracle(gen.grid2d(8, 8), n_landmarks=4).labels_checksum()
+    b = DistanceOracle(gen.grid2d(8, 8), n_landmarks=4).labels_checksum()
+    assert a == b and isinstance(a, int)
+
+
+# -- point-to-point bounds -------------------------------------------------
+
+def _check_pairs(g, oracle, pairs):
+    """Soundness on every pair; exactness wherever certified."""
+    certified = 0
+    rows = {}
+    for s, t in pairs:
+        if s not in rows:
+            rows[s] = bfs_dist(g, s)
+        d = int(rows[s][t])
+        ans = oracle.query(s, t)
+        true = np.inf if d < 0 else float(d)
+        assert ans.lower <= true <= ans.upper, \
+            (s, t, ans.lower, true, ans.upper)
+        if ans.exact:
+            certified += 1
+            assert ans.hops == d, (s, t, ans.certificate)
+            assert ans.certificate in ("trivial", "landmark-source",
+                                       "landmark-target", "bounds")
+    return certified
+
+
+@pytest.mark.parametrize("make", [
+    lambda: gen.grid2d(12, 12),
+    lambda: gen.watts_strogatz(144, 6, 0.1, seed=2),
+    lambda: gen.rmat(7, 8, directed=True, seed=3),
+], ids=["grid", "ws", "rmat_directed"])
+def test_bounds_sound_and_certified_answers_exact(make):
+    g = make()
+    oracle = DistanceOracle(g, n_landmarks=8)
+    rng = np.random.default_rng(0)
+    pairs = [(int(s), int(t)) for s, t in
+             rng.integers(0, g.n_nodes, size=(120, 2))]
+    # landmark hits and the trivial certificate, explicitly
+    pairs += [(int(oracle.landmarks[0]), 5), (5, int(oracle.landmarks[1])),
+              (7, 7)]
+    certified = _check_pairs(g, oracle, pairs)
+    assert certified >= 3               # at least the explicit hits
+    assert oracle.n_certified >= certified
+
+
+def test_unreachability_certified_via_inf_bounds():
+    # two components: landmark in component A proves B unreachable
+    src = np.r_[np.arange(4), 6 + np.arange(3)]
+    dst = np.r_[np.arange(1, 5), 7 + np.arange(3)]
+    g = CSRGraph.from_edges(np.r_[src, dst], np.r_[dst, src], 10)
+    oracle = DistanceOracle(g, n_landmarks=4)
+    ans = oracle.query(0, 9)
+    if ans.exact:                       # certified unreachable
+        assert ans.hops == -1 and np.isinf(ans.upper)
+    assert bfs_dist(g, 0)[9] == -1      # the ground truth it must match
+
+
+def test_adversarial_families_certified_bit_identity():
+    for name, src, dst, n in adversarial_families(seed=123):
+        g = CSRGraph.from_edges(src, dst, n)
+        k = min(4, n)
+        oracle = DistanceOracle(g, n_landmarks=k)
+        rng = np.random.default_rng(1)
+        pairs = [(int(s), int(t)) for s, t in
+                 rng.integers(0, n, size=(40, 2))]
+        pairs += [(int(L), (int(L) + 1) % n) for L in oracle.landmarks]
+        _check_pairs(g, oracle, pairs)
+
+
+# -- top-k ------------------------------------------------------------------
+
+def test_select_top_k_rule():
+    row = np.asarray([0, 2, 1, 2, -1, 1], np.int32)
+    assert select_top_k(row, 0, 3) == [(2, 1), (5, 1), (1, 2)]
+    assert select_top_k(row, 0, 10) == [(2, 1), (5, 1), (1, 2), (3, 2)]
+    # source itself excluded; other zero-distance entries still rank first
+    assert select_top_k(row, 2, 1) == [(0, 0)]
+
+
+def test_top_k_certified_matches_exact_selection():
+    g = gen.watts_strogatz(128, 6, 0.1, seed=8)
+    oracle = DistanceOracle(g, n_landmarks=8)
+    hits = 0
+    for s in range(0, 128, 7):
+        got = oracle.top_k(s, 5)
+        if got is None:
+            continue
+        hits += 1
+        assert got == select_top_k(bfs_dist(g, s), s, 5)
+    # every landmark source must certify (its row is exact)
+    for L in oracle.landmarks:
+        got = oracle.top_k(int(L), 5)
+        assert got == select_top_k(bfs_dist(g, int(L)), int(L), 5)
+
+
+def test_predicted_sweeps_upper_bounds_true_eccentricity():
+    g = gen.grid2d(10, 10)
+    oracle = DistanceOracle(g, n_landmarks=4)
+    for s in range(0, 100, 11):
+        true_ecc = int(bfs_dist(g, s).max())
+        assert oracle.predicted_sweeps(s) >= true_ecc

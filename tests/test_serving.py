@@ -158,3 +158,198 @@ def test_graph_service_rejects_bad_analytics():
     with pytest.raises(ValueError, match="unweighted"):
         svc.submit(GraphQuery(qid=1, source=0, weighted=True,
                               analytics=("closeness",)))
+    with pytest.raises(ValueError, match="k_nearest"):
+        svc.submit(GraphQuery(qid=2, source=0, k_nearest=0))
+    with pytest.raises(ValueError, match="k_nearest"):
+        svc.submit(GraphQuery(qid=3, source=0, target=5, k_nearest=2))
+
+
+# -- serving tier: cache / oracle / buckets / deadlines ---------------------
+
+class _FakeClock:
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self):
+        return self.now
+
+
+def test_fifo_order_within_bucket_and_flush_global_order():
+    """flush() serves strict global submit order; within one bucket the
+    queue is FIFO."""
+    from repro.graph import generators as gen
+    from repro.serve import GraphQuery, GraphService
+
+    g = gen.watts_strogatz(64, 4, 0.1, seed=0)
+    svc = GraphService(g, max_batch=8)          # no oracle: one bucket
+    for i in range(6):
+        svc.submit(GraphQuery(qid=i, source=i))
+    served = svc.flush()
+    assert [q.qid for q in served] == list(range(6))
+
+    # with an oracle, buckets may differ, but flush still drains in
+    # global submit order
+    svc2 = GraphService(g, max_batch=8, n_landmarks=4, row_cache_size=0)
+    qs = [GraphQuery(qid=i, source=(i * 13) % 64, target=(i * 7 + 1) % 64)
+          for i in range(10)]
+    for q in qs:
+        svc2.submit(q)
+    order = []
+    while svc2.pending():
+        order += [q.qid for q in svc2.flush()]
+    queued = [q.qid for q in qs if q.served_by not in ("cache", "oracle")]
+    assert order == queued
+
+
+def test_max_batch_cap_across_mixed_kinds():
+    """One flush never serves more than max_batch queries even when the
+    batch mixes unweighted / weighted / analytics kinds."""
+    import numpy as np
+    from repro.graph import generators as gen
+    from repro.serve import GraphQuery, GraphService
+
+    g = gen.watts_strogatz(64, 4, 0.1, seed=1)
+    w = np.random.default_rng(0).uniform(0.5, 2.0, g.m_pad).astype(
+        np.float32)
+    svc = GraphService(g, weights=w, max_batch=8)
+    for i in range(20):
+        if i % 3 == 0:
+            svc.submit(GraphQuery(qid=i, source=i, weighted=True))
+        elif i % 3 == 1:
+            svc.submit(GraphQuery(qid=i, source=i,
+                                  analytics=("eccentricity",)))
+        else:
+            svc.submit(GraphQuery(qid=i, source=i))
+    sizes = []
+    while svc.pending():
+        sizes.append(len(svc.flush()))
+    assert sizes == [8, 8, 4]
+    assert sum(sizes) == 20
+
+
+def test_deadline_expired_queries_surfaced_not_dropped():
+    from repro.graph import generators as gen
+    from repro.serve import GraphQuery, GraphService
+
+    clock = _FakeClock()
+    g = gen.grid2d(8, 8)
+    svc = GraphService(g, max_batch=4, clock=clock)
+    svc.submit(GraphQuery(qid=0, source=0, target=63, deadline=0.5))
+    svc.submit(GraphQuery(qid=1, source=1, target=63))   # no deadline
+    clock.now = 10.0                       # blow the first deadline
+    served = svc.flush()
+    assert len(served) == 2
+    by_qid = {q.qid: q for q in served}
+    assert by_qid[0].expired and by_qid[0].served_by == "expired"
+    assert by_qid[0].hops is None
+    assert not by_qid[1].expired and by_qid[1].hops is not None
+    assert svc.expired_count == 1
+    assert len(svc.drain_completed()) == 2  # surfaced, not dropped
+
+
+def test_tick_flushes_on_deadline_headroom_and_max_wait():
+    from repro.graph import generators as gen
+    from repro.serve import GraphQuery, GraphService
+
+    clock = _FakeClock()
+    g = gen.grid2d(8, 8)
+    svc = GraphService(g, max_batch=8, clock=clock, deadline_safety=1.0,
+                       max_wait=5.0)
+    svc._flush_est = 0.1                   # deterministic headroom
+    svc.submit(GraphQuery(qid=0, source=0, deadline=1.0))
+    assert svc.tick() == []                # plenty of headroom
+    clock.now = 0.95                       # 0.05s left < 0.1s estimate
+    assert [q.qid for q in svc.tick()] == [0]
+
+    svc.submit(GraphQuery(qid=1, source=1))   # no deadline
+    clock.now = 4.0
+    assert svc.tick() == []                # not full, no deadline
+    clock.now = 6.1                        # head waited > max_wait
+    assert [q.qid for q in svc.tick()] == [1]
+
+
+def test_row_cache_serves_repeats_and_is_bounded():
+    import numpy as np
+    from oracles import bfs_dist
+    from repro.graph import generators as gen
+    from repro.serve import GraphQuery, GraphService
+
+    g = gen.watts_strogatz(64, 4, 0.1, seed=2)
+    svc = GraphService(g, max_batch=8, row_cache_size=2)
+    svc.submit(GraphQuery(qid=0, source=5))
+    svc.flush()
+    q = GraphQuery(qid=1, source=5, target=40)
+    svc.submit(q)                          # cache hit: done at submit
+    assert q.served_by == "cache" and q.certified
+    assert q.hops == int(bfs_dist(g, 5)[40])
+    assert svc.cache_hits == 1 and svc.pending() == 0
+    k = GraphQuery(qid=2, source=5, k_nearest=3)
+    svc.submit(k)
+    assert k.served_by == "cache" and len(k.nearest) == 3
+    # LRU bound: two more sources evict source 5
+    for i, s in enumerate((7, 9)):
+        svc.submit(GraphQuery(qid=10 + i, source=s))
+    svc.flush()
+    assert len(svc._row_cache) == 2
+    miss = GraphQuery(qid=20, source=5)
+    svc.submit(miss)
+    assert miss.served_by is None and svc.pending() == 1
+
+
+def test_completed_retention_bounded_and_drain():
+    from repro.graph import generators as gen
+    from repro.serve import GraphQuery, GraphService
+
+    g = gen.grid2d(8, 8)
+    svc = GraphService(g, max_batch=8, completed_retention=5,
+                       row_cache_size=0)
+    for i in range(16):
+        svc.submit(GraphQuery(qid=i, source=i))
+    while svc.pending():
+        svc.flush()
+    assert len(svc.completed) == 5          # bounded
+    assert [q.qid for q in svc.completed] == list(range(11, 16))
+    assert svc.n_completed_total == 16      # nothing lost to the counter
+    drained = svc.drain_completed()
+    assert len(drained) == 5 and svc.completed == []
+
+
+def test_oracle_tier_bit_identical_to_exact_sweeps():
+    """Every query kind, served by any tier, matches the BFS oracle —
+    including on the adversarial families."""
+    import numpy as np
+    from oracles import adversarial_families, bfs_dist
+    from repro.graph.csr import CSRGraph
+    from repro.serve import GraphQuery, GraphService, select_top_k
+
+    for name, src, dst, n in adversarial_families(seed=7):
+        g = CSRGraph.from_edges(src, dst, n)
+        svc = GraphService(g, max_batch=8, n_landmarks=min(4, n),
+                           row_cache_size=4)
+        rng = np.random.default_rng(0)
+        qs = []
+        for i in range(12):
+            s = int(rng.integers(0, n))
+            kind = i % 3
+            if kind == 0:
+                q = GraphQuery(qid=i, source=s,
+                               target=int(rng.integers(0, n)))
+            elif kind == 1:
+                q = GraphQuery(qid=i, source=s, k_nearest=3)
+            else:
+                q = GraphQuery(qid=i, source=s)
+            qs.append(q)
+            svc.submit(q)
+        while svc.pending():
+            svc.flush()
+        for q in qs:
+            ref = bfs_dist(g, q.source)
+            if q.target is not None:
+                assert q.hops == int(ref[q.target]), (name, q.qid,
+                                                      q.served_by)
+            elif q.k_nearest is not None:
+                assert q.nearest == select_top_k(ref, q.source, 3), \
+                    (name, q.qid, q.served_by)
+            else:
+                np.testing.assert_array_equal(q.dist, ref,
+                                              err_msg=f"{name}/{q.qid}")
