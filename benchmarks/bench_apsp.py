@@ -38,7 +38,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import EngineConfig, apsp_engine, pack_bits, prepare_graph
+from repro.core import EngineConfig, pack_bits, prepare_graph
+from repro.core.engine import apsp_engine
 from repro.graph import generators as gen
 from repro.kernels.bovm import fused_sweep, packed_push_sweep
 

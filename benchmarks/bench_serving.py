@@ -43,7 +43,8 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
-from repro.core import EngineConfig, apsp_engine, prepare_graph
+from repro.core import EngineConfig, prepare_graph
+from repro.core.engine import apsp_engine
 from repro.graph import generators as gen
 from repro.serve import DistanceOracle, GraphQuery, GraphService
 

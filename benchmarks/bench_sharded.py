@@ -56,8 +56,11 @@ def _mesh():
 def run(quick: bool = False, n_sources: int = 32, repeats: int = 3,
         csv: Optional[List[str]] = None) -> Dict:
     from repro.core import (EngineConfig, ShardedConfig, WeightedConfig,
-                            apsp_engine, prepare_graph, prepare_sharded,
-                            prepare_weighted, sharded_apsp, weighted_apsp)
+                            prepare_graph, prepare_sharded,
+                            prepare_weighted)
+    from repro.core.engine import apsp_engine
+    from repro.core.distributed import sharded_apsp
+    from repro.core.weighted import weighted_apsp
 
     mesh = _mesh()
     rng = np.random.default_rng(0)

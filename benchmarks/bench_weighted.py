@@ -24,7 +24,8 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.core import (WeightedConfig, dijkstra_oracle, minplus_sssp,
-                        prepare_weighted, weighted_apsp)
+                        prepare_weighted)
+from repro.core.weighted import weighted_apsp
 from repro.graph import generators as gen
 
 from ._timing import (BEAT_MARGIN, TOLERANCE, auto_vs_fixed,

@@ -52,9 +52,18 @@ _HARD_FAMILY_FIELDS = ("n_nodes", "n_edges", "n_sources", "sweeps",
                        "certified_count", "certified_fraction", "hit_rate",
                        "cache_hits", "oracle_hits", "sweep_served",
                        # kernel tile occupancy: graph + schedule only
-                       "tile_skip_fraction")
+                       "tile_skip_fraction",
+                       # dynamic tier: the recorded update stream is
+                       # seeded, so repair/scratch sweep totals, the
+                       # bit-identity flag, the epoch/compaction
+                       # counters and the interleaved-query checksum
+                       # are exact
+                       "repair_sweeps", "scratch_sweeps",
+                       "repair_equals_scratch", "n_epochs",
+                       "n_compactions", "query_checksum")
 _BENCHES = ("bench_apsp", "bench_weighted", "bench_sharded",
-            "bench_centrality", "bench_batching", "bench_serving")
+            "bench_centrality", "bench_batching", "bench_serving",
+            "bench_dynamic")
 
 
 def load(path: str) -> Dict:

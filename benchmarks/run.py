@@ -31,6 +31,12 @@ work:
                         per-source loop vs jit-batched vs Pallas kernel
                         (betweenness asserted equal, sigma checksum
                         recorded for the hard gate; JSON)
+  * bench_dynamic     — streaming tier: locality-heavy interleaved
+                        update/query stream over DynamicCSRGraph;
+                        frontier-seeded repair vs scratch recompute
+                        (bit-identity and repair_sweeps < scratch_sweeps
+                        asserted in-bench; sweep totals, epoch counters
+                        and query checksum hard-gated; JSON)
 """
 from __future__ import annotations
 
@@ -43,8 +49,9 @@ import time
 import jax
 
 from . import (bench_apsp, bench_batching, bench_centrality,
-               bench_complexity, bench_memory, bench_scaling, bench_serving,
-               bench_sharded, bench_sssp, bench_weighted, regression)
+               bench_complexity, bench_dynamic, bench_memory, bench_scaling,
+               bench_serving, bench_sharded, bench_sssp, bench_weighted,
+               regression)
 
 
 def _csv_rows_to_records(rows):
@@ -90,6 +97,8 @@ def main() -> None:
     central = bench_centrality.run(quick=args.quick,
                                    repeats=2 if args.quick else 3,
                                    csv=rows)
+    dynamic = bench_dynamic.run(quick=args.quick,
+                                repeats=2 if args.quick else 3, csv=rows)
     total = time.time() - t0
     print("\n".join(rows))
     print(f"# total {total:.1f}s", file=sys.stderr)
@@ -109,6 +118,7 @@ def main() -> None:
         "bench_centrality": central,
         "bench_batching": batching,
         "bench_serving": serving,
+        "bench_dynamic": dynamic,
     }
     if args.out:
         with open(args.out, "w") as f:

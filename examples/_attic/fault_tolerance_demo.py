@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import transformer as T
+from repro._attic.models import transformer as T
 from repro.train import checkpoint as C
 from repro.train import optimizer as O
 from repro.train.fault_tolerance import FaultTolerantRunner

@@ -8,8 +8,8 @@ import time
 import jax
 import numpy as np
 
-from repro.models import transformer as T
-from repro.serve import Request, ServingEngine
+from repro._attic.models import transformer as T
+from repro._attic.lm_serving import Request, ServingEngine
 
 
 def main():

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data import tokens as DT
-from repro.models import transformer as T
+from repro._attic.models import transformer as T
 from repro.train import checkpoint as C
 from repro.train import optimizer as O
 from repro.train.train_loop import make_train_step

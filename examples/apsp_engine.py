@@ -3,17 +3,17 @@
     PYTHONPATH=src python examples/apsp_engine.py
 
 Part 1 runs tiled all-pairs shortest paths over a road-network-like graph
-and prints which sweep forms the engine chose.  Part 2 stands up the
-continuous-batching ServingEngine with a GraphService attached and serves
-shortest-path queries alongside LM decode steps.
+through the ``dawn`` facade and prints which sweep forms the engine chose.
+Part 2 stands up the tiered, continuously-batching GraphService — built
+from the same facade handle — and serves point-to-point queries, a
+k-nearest lookup, and a centrality analytic, then mutates the graph and
+shows the epoch guard invalidating the serving-tier caches.
 """
 import numpy as np
-import jax
 
-from repro.core import EngineConfig, apsp_engine, prepare_graph
+import repro as dawn
 from repro.graph import generators as gen
-from repro.models import transformer as T
-from repro.serve import GraphQuery, GraphService, Request, ServingEngine
+from repro.serve import GraphQuery
 
 
 def part1_batched_apsp():
@@ -22,8 +22,8 @@ def part1_batched_apsp():
     print(f"graph: n={stats.n_nodes} m={stats.n_edges} "
           f"avg_deg={stats.avg_degree:.1f} density={stats.density:.2%}")
 
-    pg = prepare_graph(g)                        # dense + packed operands
-    res = apsp_engine(pg, config=EngineConfig(source_batch=128))
+    h = dawn.prepare(g, source_batch=128)        # dense + packed operands
+    res = h.apsp()                               # all sources
     dirs = dict(zip(("push", "pull", "sparse"),
                     np.asarray(res.direction_counts).tolist()))
     print(f"APSP over all {stats.n_nodes} sources: dist {res.dist.shape}, "
@@ -33,23 +33,40 @@ def part1_batched_apsp():
 
 
 def part2_serving():
-    cfg = T.LMConfig(name="demo", n_layers=2, d_model=64, n_heads=4,
-                     n_kv=2, d_head=16, d_ff=128, vocab=96)
-    params = T.init_params(jax.random.PRNGKey(0), cfg)
-    g = gen.watts_strogatz(512, 8, 0.05, seed=1)
-    eng = ServingEngine(params, cfg, slots=2, max_len=64,
-                        graph_service=GraphService(g, max_batch=16))
+    dg = dawn.DynamicCSRGraph(gen.watts_strogatz(512, 8, 0.05, seed=1))
+    svc = dawn.prepare(dg).serve(max_batch=16, n_landmarks=8)
 
-    eng.submit(Request(rid=0, prompt=np.array([3, 1, 4], np.int32),
-                       max_new=4))
     for i in range(20):
-        eng.submit_graph(GraphQuery(qid=i, source=i * 7 % 512, target=200))
-    eng.run_to_completion()
+        svc.submit(GraphQuery(qid=i, source=i * 7 % 512, target=200))
+    svc.submit(GraphQuery(qid=20, source=3, k_nearest=5))
+    svc.submit(GraphQuery(qid=21, source=200, analytics=("closeness",)))
+    done = []
+    while svc.pending():                 # each flush serves one batch
+        done.extend(svc.flush())
 
-    lm = eng.completed[0]
-    print(f"LM request: generated {lm.out}")
-    hops = [q.hops for q in eng.graph_service.completed]
-    print(f"graph queries: {len(hops)} served, hops to node 200: {hops}")
+    hops = [q.hops for q in done if q.target is not None]
+    tiers = sorted({q.served_by for q in done})
+    print(f"graph queries: {len(done)} served via {tiers}, "
+          f"hops to node 200: {hops}")
+    knn = next(q for q in done if q.k_nearest)
+    print(f"5 nearest to node 3: {knn.nearest}")
+    cen = next(q for q in done if q.analytics)
+    print(f"closeness(200) = {cen.analytics_result['closeness']:.4f}")
+
+    # mutate the live graph — the service notices the epoch change and
+    # rebuilds operands / drops stale caches before the next answer
+    def ask(qid):
+        svc.submit(GraphQuery(qid=qid, source=3, target=200))
+        svc.flush()
+        q = [x for x in svc.drain_completed() if x.qid == qid][0]
+        return q.hops, q.served_by
+
+    svc.drain_completed()
+    before, tier_b = ask(22)             # row-cache hit from the k-NN row
+    dg.insert_edges([3], [200])
+    after, tier_a = ask(23)              # epoch guard forces a fresh sweep
+    print(f"insert (3, 200): hops {before} ({tier_b}) → {after} ({tier_a}), "
+          f"{svc.epoch_invalidations} epoch invalidation")
 
 
 if __name__ == "__main__":

@@ -20,9 +20,7 @@ import time  # noqa: E402
 
 import numpy as np  # noqa: E402
 
-from repro.core import (EngineConfig, ShardedConfig, WeightedConfig,  # noqa: E402
-                        apsp_engine, prepare_sharded, sharded_apsp,
-                        weighted_apsp)
+import repro as dawn  # noqa: E402
 from repro.graph import generators as gen  # noqa: E402
 from repro.launch.mesh import make_mesh  # noqa: E402
 
@@ -44,26 +42,22 @@ def main():
     sources = np.arange(32, dtype=np.int32)
     print(f"graph: n={g.n_nodes} m={g.n_edges}, {len(sources)} sources")
 
-    single_b = _timed("single-device boolean (push)", lambda: apsp_engine(
-        g, sources, config=EngineConfig(mode="push", source_batch=32)))
+    h = dawn.prepare(g, weights=w, mode="dense", source_batch=32)
+    hp = dawn.prepare(g, mode="push", source_batch=32)
+
+    single_b = _timed("single-device boolean (push)",
+                      lambda: hp.apsp(sources))
     single_t = _timed("single-device tropical (dense)",
-                      lambda: weighted_apsp(g, w, sources,
-                                            config=WeightedConfig(
-                                                mode="dense",
-                                                source_batch=32)))
+                      lambda: h.apsp(sources, semiring="tropical"))
 
     for shape, axes in [((8,), ("data",)), ((4, 2), ("data", "model"))]:
         mesh = make_mesh(shape, axes)
         tag = "x".join(map(str, shape)) + " " + "/".join(axes)
-        ops_b = prepare_sharded(g, mesh,
-                                config=ShardedConfig(mode="dense"))
-        ops_t = prepare_sharded(g, mesh, weights=w,
-                                config=ShardedConfig(semiring="tropical",
-                                                     mode="dense"))
         res_b = _timed(f"sharded boolean  mesh {tag}",
-                       lambda: sharded_apsp(ops_b, sources))
+                       lambda: h.apsp(sources, mesh=mesh))
         res_t = _timed(f"sharded tropical mesh {tag}",
-                       lambda: sharded_apsp(ops_t, sources))
+                       lambda: h.apsp(sources, semiring="tropical",
+                                      mesh=mesh))
         assert (np.asarray(res_b.dist) == np.asarray(single_b.dist)).all()
         assert (np.asarray(res_t.dist) == np.asarray(single_t.dist)).all()
         assert int(res_b.sweeps) == int(single_b.sweeps)

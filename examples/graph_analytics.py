@@ -4,7 +4,8 @@ Computes, for any generated or on-disk graph:
   connectivity (WCC sizes) → one batched centrality run over the counting
   semiring (closeness / harmonic / exact eccentricity + radius/diameter /
   exact Brandes betweenness) → sample shortest paths → weighted APSP
-  through the tropical engine.
+  through the tropical semiring.  All query dispatch goes through the
+  unified ``dawn`` facade: one ``prepare`` handle serves every semiring.
 
     PYTHONPATH=src python examples/graph_analytics.py --graph rmat \
         --scale 10 --sources 128
@@ -14,8 +15,8 @@ import time
 
 import numpy as np
 
-from repro.core import (CentralityConfig, centrality, reconstruct_path,
-                        sssp, wcc_stats, weighted_apsp)
+import repro as dawn
+from repro.core import reconstruct_path, sssp, wcc_stats
 from repro.graph import generators as gen
 from repro.graph.io import load_edgelist
 
@@ -46,6 +47,11 @@ def main():
         g = load_edgelist(args.path, undirected=True)
     print(f"graph: {g.n_nodes} nodes / {g.n_edges} edges")
 
+    # one facade handle drives every semiring below; weights attach here
+    rng = np.random.default_rng(0)
+    w = rng.uniform(0.5, 4.0, g.m_pad).astype(np.float32)
+    h = dawn.prepare(g, weights=w, source_batch=128)
+
     t0 = time.perf_counter()
     stats = wcc_stats(g)
     print(f"WCC: {stats['n_components']} components, "
@@ -60,7 +66,7 @@ def main():
         min(args.sources, g.n_nodes)
     sources = np.arange(n_src, dtype=np.int32)
     t0 = time.perf_counter()
-    res = centrality(g, sources, config=CentralityConfig(source_batch=128))
+    res = h.centrality(sources)
     dt = time.perf_counter() - t0
     exact = "exact" if n_src == g.n_nodes else f"{n_src}-source estimate"
     print(f"centrality ({exact}) in {dt:.2f}s "
@@ -86,11 +92,9 @@ def main():
           f"(len {d0[far]}): {path[:12]}{'...' if len(path) > 12 else ''}")
 
     # weighted analytics ride the same sweep core through the tropical
-    # semiring
-    rng = np.random.default_rng(0)
-    w = rng.uniform(0.5, 4.0, g.m_pad).astype(np.float32)
+    # semiring — same handle, different semiring=
     t0 = time.perf_counter()
-    wres = weighted_apsp(g, w, sources[: min(32, len(sources))])
+    wres = h.apsp(sources[: min(32, len(sources))], semiring="tropical")
     wd = np.asarray(wres.dist)
     forms = dict(zip(("dense", "sparse"),
                      np.asarray(wres.direction_counts).tolist()))

@@ -1,27 +1,41 @@
-"""Quickstart: DAWN shortest paths in five lines.
+"""Quickstart: DAWN shortest paths through the ``dawn`` facade.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import sssp, multi_source, bfs_scipy
+import repro as dawn
+from repro.core import bfs_scipy
 from repro.graph import generators as gen
 
 # 1. build a graph (or CSRGraph.from_edges / repro.graph.io.load_edgelist)
 g = gen.watts_strogatz(5000, 8, 0.05, seed=0)
 print(f"graph: {g.n_nodes} nodes, {g.n_edges} edges")
 
-# 2. single-source shortest paths (auto-dispatches BOVM/SOVM)
-res = sssp(g, source=0)
-dist = np.asarray(res.dist)
-print(f"SSSP from 0: eccentricity={int(res.eccentricity)}, "
-      f"reachable={int((dist >= 0).sum())}, "
-      f"edges touched={int(res.edges_touched)}")
+# 2. wrap it in a handle — one verb for every semiring and topology
+h = dawn.prepare(g)
 
-# 3. verify against scipy's C BFS
+# 3. single-source shortest paths (auto-dispatches BOVM/SOVM)
+dist = h.sssp(0)
+print(f"SSSP from 0: eccentricity={int(dist.max())}, "
+      f"reachable={int((dist >= 0).sum())}")
+
+# 4. verify against scipy's C BFS
 assert (dist == bfs_scipy(g, 0)).all()
 print("matches scipy.sparse.csgraph ✓")
 
-# 4. batched multi-source (the MXU-friendly formulation)
-batch = multi_source(g, np.arange(64), method="bovm")
-print(f"64-source batch: dist matrix {batch.dist.shape}")
+# 5. batched multi-source (the MXU-friendly formulation)
+batch = h.apsp(np.arange(64))
+print(f"64-source batch: dist matrix {batch.dist.shape}, "
+      f"{int(batch.sweeps)} sweeps, "
+      f"edges touched={int(batch.edges_touched)}")
+
+# 6. the same call works on a mutable graph — mutate, query, repeat
+dg = dawn.DynamicCSRGraph(g)
+hd = dawn.prepare(dg)
+base = hd.sssp(0)
+far = int(np.argmax(base))                     # most distant node
+hd.insert_edges([0], [far])                    # add a shortcut edge
+after = hd.sssp(0)                             # fresh epoch, same call
+print(f"dynamic: dist[{far}] {int(base[far])} → {int(after[far])} "
+      f"after inserting shortcut (epoch {hd.epoch})")

@@ -1,2 +1,37 @@
-"""repro — DAWN (matrix-operation shortest paths) as a production JAX framework."""
-__version__ = "1.0.0"
+"""repro — DAWN (matrix-operation shortest paths) as a production JAX framework.
+
+The caller-facing surface is the unified ``dawn`` facade (``repro.api``):
+
+    import repro as dawn
+
+    h = dawn.prepare(graph)          # CSRGraph or DynamicCSRGraph
+    row = h.sssp(0)
+    res = h.apsp(semiring="tropical")
+    svc = h.serve(n_landmarks=16)
+
+Per-semiring entry points (``repro.core.apsp_engine`` & co.) still work
+but are deprecated for external callers; ``tests/test_api_surface.py``
+pins this module's ``__all__`` so the surface cannot grow silently.
+"""
+from .api import DawnGraph, SEMIRING_NAMES, prepare
+from .core.incremental import (IncrementalSSSP, IncrementalState,
+                               RepairResult, repair, sssp_state)
+from .core.options import SweepOptions
+from .graph.csr import CSRGraph
+from .graph.dynamic import DynamicCSRGraph
+
+__version__ = "1.1.0"
+
+__all__ = [
+    "CSRGraph",
+    "DawnGraph",
+    "DynamicCSRGraph",
+    "IncrementalSSSP",
+    "IncrementalState",
+    "RepairResult",
+    "SEMIRING_NAMES",
+    "SweepOptions",
+    "prepare",
+    "repair",
+    "sssp_state",
+]

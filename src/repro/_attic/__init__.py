@@ -1,0 +1,10 @@
+"""Quarantined seed-era model zoo and LM-serving stack.
+
+Everything under ``repro._attic`` is dormant with respect to the DAWN
+reproduction (ROADMAP item 3): the transformer/GNN/recsys model zoo,
+their launch cells and dry-run matrix, the token/recsys data pipelines,
+and the KV-cache LM serving engine.  Nothing here is imported by the
+live package — importing ``repro`` never touches this subtree.  The
+code still works (its tests import it explicitly) but carries no API
+stability promise.
+"""

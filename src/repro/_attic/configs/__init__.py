@@ -1,0 +1,2 @@
+from .registry import all_cells, get_arch, list_archs, shapes_for
+from . import shapes

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 from typing import Any, Dict
 
-from . import (arctic_480b, dawn, deepseek_v3_671b, dien, equiformer_v2,
+from . import (arctic_480b, deepseek_v3_671b, dien, equiformer_v2,
                granite_34b, graphsage_reddit, meshgraphnet, nemotron_4_15b,
                qwen2_72b, schnet)
 from .shapes import GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES

@@ -1,0 +1,4 @@
+"""Attic launchers (LM/GNN/recsys train + dry-run + LM serve).
+
+The live ``repro.launch`` keeps only mesh/HLO/roofline tooling.
+"""

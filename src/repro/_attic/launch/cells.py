@@ -13,7 +13,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .. import compat
+from repro import compat
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import get_arch, shapes_for
@@ -22,9 +22,9 @@ from ..configs.shapes import (GNNShape, LMShape, RecsysShape, pad_to,
 from ..models import gnn as G
 from ..models import recsys as R
 from ..models import transformer as T
-from ..train import optimizer as O
-from ..train.train_loop import make_train_step
-from .mesh import dp_axes, dp_size
+from repro.train import optimizer as O
+from repro.train.train_loop import make_train_step
+from repro.launch.mesh import dp_axes, dp_size
 
 
 @dataclasses.dataclass

@@ -21,11 +21,11 @@ import traceback     # noqa: E402
 
 import jax           # noqa: E402
 
-from .. import compat  # noqa: E402
+from repro import compat  # noqa: E402
 
 from ..configs import all_cells, shapes_for          # noqa: E402
 from .cells import build_cell, jit_cell              # noqa: E402
-from .mesh import make_production_mesh               # noqa: E402
+from repro.launch.mesh import make_production_mesh               # noqa: E402
 
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")

@@ -16,7 +16,7 @@ import numpy as np
 from ..configs import get_arch
 from ..models import recsys as R
 from ..models import transformer as T
-from ..serve.engine import Request, ServingEngine
+from ..lm_serving import Request, ServingEngine
 from .train import reduced_lm
 
 

@@ -16,15 +16,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_arch
-from ..data import graphs as DG
+from repro.data import graphs as DG
 from ..data import recsys as DR
-from ..data import tokens as DTok
+from repro.data import tokens as DTok
 from ..models import gnn as G
 from ..models import recsys as R
 from ..models import transformer as T
-from ..train import optimizer as O
-from ..train.checkpoint import CheckpointHook, latest_step, restore
-from ..train.train_loop import make_train_step, train
+from repro.train import optimizer as O
+from repro.train.checkpoint import CheckpointHook, latest_step, restore
+from repro.train.train_loop import make_train_step, train
 
 
 def reduced_lm(cfg: T.LMConfig) -> T.LMConfig:

@@ -1,0 +1,150 @@
+"""LM serving engine: prefill/decode split + continuous batching.
+
+A single-host simulation of the production LM serving loop: requests
+arrive with prompts; the engine prefills them into free KV-cache slots,
+then runs batched decode steps over all active slots, retiring finished
+sequences and immediately admitting queued ones (continuous batching).
+The decode step is the same jitted ``transformer.decode_step`` the
+dry-run lowers at the 32k/500k shapes.
+
+Moved to the attic with the rest of the model zoo (ROADMAP item 3); the
+live graph-query serving tier is :class:`repro.serve.GraphService`.  An
+engine built with ``graph_service=`` still co-serves
+:class:`repro.serve.GraphQuery` traffic on each tick, which is what
+``tests/test_serving.py`` exercises.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.engine import GraphQuery, GraphService
+from .models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (L,) int32
+    max_new: int = 16
+    out: Optional[List[int]] = None
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+class ServingEngine:
+    """Fixed-slot continuous batching over a shared KV cache.
+
+    Optionally co-serves graph ``shortest_path`` queries: pass a
+    :class:`GraphService` and submit :class:`GraphQuery` objects via
+    :meth:`submit_graph`; each engine tick flushes one micro-batch of
+    graph queries alongside the decode step.
+    """
+
+    def __init__(self, params, cfg: T.LMConfig, *, slots: int = 4,
+                 max_len: int = 256, greedy: bool = True,
+                 graph_service: Optional[GraphService] = None):
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.queue: deque[Request] = deque()
+        self.active: Dict[int, Request] = {}
+        self.slot_of: Dict[int, int] = {}
+        self.free = list(range(slots))
+        self.remaining = np.zeros(slots, np.int32)
+        self.cache = T.make_cache(cfg, slots, max_len)
+        self.cur_tok = np.zeros((slots, 1), np.int32)
+        self._decode = jax.jit(
+            lambda p, c, t, a: T.decode_step(p, c, t, cfg, active=a))
+        self.completed: List[Request] = []
+        self.graph_service = graph_service
+
+    def submit_graph(self, query: GraphQuery):
+        if self.graph_service is None:
+            raise RuntimeError(
+                "construct ServingEngine with graph_service= to serve graphs")
+        self.graph_service.submit(query)
+
+    def submit(self, req: Request):
+        req.t_submit = time.monotonic()
+        req.out = []
+        self.queue.append(req)
+
+    def _admit(self):
+        while self.queue and self.free:
+            req = self.queue.popleft()
+            slot = self.free.pop()
+            self.active[req.rid] = req
+            self.slot_of[req.rid] = slot
+            # reset the slot's cache position, then prefill its prompt
+            # token-by-token with only this slot active (the production
+            # prefill_step lowers the full-sequence path — launch/serve.py)
+            self.cache["pos"] = self.cache["pos"].at[slot].set(0)
+            mask = np.zeros(self.slots, bool)
+            mask[slot] = True
+            for tok in req.prompt:
+                self.cur_tok[slot, 0] = tok
+                self._decode_tick(mask)
+            # first generated token comes from the last prefill logits
+            first = int(np.argmax(self._last_logits[slot]))
+            req.out.append(first)
+            req.t_first = time.monotonic()
+            self.cur_tok[slot, 0] = first
+            self.remaining[slot] = req.max_new - 1
+            if self.remaining[slot] == 0:
+                req.t_done = req.t_first
+                self.completed.append(self.active.pop(req.rid))
+                self.free.append(self.slot_of.pop(req.rid))
+
+    def _decode_tick(self, active_mask: np.ndarray):
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.cur_tok),
+            jnp.asarray(active_mask))
+        self._last_logits = np.asarray(logits[:, 0], np.float32)
+
+    def step(self) -> int:
+        """One engine tick: admit, serve one graph micro-batch, decode one
+        token for all active slots, retire finished requests.  Returns the
+        number of live requests (LM and graph)."""
+        graph_live = 0
+        if self.graph_service is not None:
+            self.graph_service.flush()
+            graph_live = self.graph_service.pending()
+        self._admit()
+        if not self.active:
+            return graph_live
+        mask = np.zeros(self.slots, bool)
+        for rid in self.active:
+            mask[self.slot_of[rid]] = True
+        self._decode_tick(mask)
+        nxt = np.argmax(self._last_logits, axis=-1).astype(np.int32)
+        done_rids = []
+        for rid, req in self.active.items():
+            s = self.slot_of[rid]
+            if self.remaining[s] <= 0:
+                continue
+            req.out.append(int(nxt[s]))
+            self.cur_tok[s, 0] = nxt[s]
+            self.remaining[s] -= 1
+            if self.remaining[s] == 0:
+                done_rids.append(rid)
+        for rid in done_rids:
+            req = self.active.pop(rid)
+            req.t_done = time.monotonic()
+            self.completed.append(req)
+            self.free.append(self.slot_of.pop(rid))
+        return len(self.active) + len(self.queue) + graph_live
+
+    def run_to_completion(self, max_ticks: int = 10_000):
+        for _ in range(max_ticks):
+            if self.step() == 0 and not self.queue:
+                break
+        return self.completed

@@ -16,7 +16,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .. import compat
+from repro import compat
 from jax.sharding import PartitionSpec as P
 
 Params = Dict[str, Any]

@@ -1,2 +1,1 @@
-from .registry import all_cells, get_arch, list_archs, shapes_for
-from . import shapes
+from . import dawn

@@ -60,3 +60,41 @@ __all__ = [
     "frontier_stats", "sweep_costs", "choose_direction",
     "measure_sweep_costs", "apsp_engine", "apsp_engine_blocks",
 ]
+
+# --- deprecated caller-facing entry points --------------------------------
+# The per-semiring functions remain the internal engines (submodule imports
+# are unwrapped), but external callers should go through the unified facade
+# (repro.prepare).  Each wrapper warns exactly once per process.
+import functools as _functools
+import warnings as _warnings
+
+from .options import SweepOptions  # noqa: F401  (facade config base)
+
+__all__.append("SweepOptions")
+
+
+def _deprecated_entry_point(fn, replacement):
+    warned = []
+
+    @_functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        if not warned:
+            warned.append(True)
+            _warnings.warn(
+                f"repro.core.{fn.__name__} is deprecated as a public entry "
+                f"point; use {replacement} (the unified dawn facade)",
+                DeprecationWarning, stacklevel=2)
+        return fn(*args, **kwargs)
+
+    wrapper.__wrapped__ = fn
+    return wrapper
+
+
+apsp_engine = _deprecated_entry_point(
+    apsp_engine, "repro.prepare(g).apsp()")
+weighted_apsp = _deprecated_entry_point(
+    weighted_apsp, "repro.prepare(g, weights=...).apsp(semiring='tropical')")
+counting_apsp = _deprecated_entry_point(
+    counting_apsp, "repro.prepare(g).apsp(semiring='counting')")
+sharded_apsp = _deprecated_entry_point(
+    sharded_apsp, "repro.prepare(g).apsp(mesh=...)")

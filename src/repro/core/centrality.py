@@ -45,6 +45,7 @@ from . import sweep as S
 from .engine import (PreparedGraph, _resolve_kernel, frontier_stats,
                      prepare_graph)
 from .frontier import UNREACHED, one_hot_frontier
+from .options import SweepOptions
 from .sssp import multi_source
 
 PUSH, SPARSE = 0, 1
@@ -54,38 +55,21 @@ MEASURES = ("closeness", "harmonic", "eccentricity", "betweenness")
 
 
 @dataclasses.dataclass(frozen=True)
-class CentralityConfig:
-    """Static counting-engine parameters (hashable jit static arg) —
-    the same shape as ``WeightedConfig`` with the pull form removed
-    (bit-packing does not apply to f32 path counts).
+class CentralityConfig(SweepOptions):
+    """Static counting-engine parameters (a :class:`SweepOptions`
+    subclass, hashable jit static arg) — the same shape as
+    ``WeightedConfig`` with the pull form removed (bit-packing does not
+    apply to f32 path counts).
 
     ``use_kernel=None`` resolves to "Pallas kernels iff on TPU" and
     ``dynamic=None`` to "per-sweep switching iff on the kernel path",
     exactly like the boolean/tropical engines; the calibrated regime
     times the same counting closures the driver dispatches.
     """
-    source_batch: int = 128          # sources per tile (multiple of 8)
-    mode: str = "auto"               # auto | push | sparse
-    use_kernel: Optional[bool] = None  # None -> Pallas kernels iff on TPU
-    dynamic: Optional[bool] = None   # per-sweep switch; None -> use_kernel
-    max_steps: Optional[int] = None  # None -> n_nodes (diameter bound)
-    bn: int = 128
-    bk: int = 128
     c_push: float = 1.0              # per f32 MAC in a live push tile
     c_sparse: float = 8.0            # per CSR gather + scatter-add lane
-    # fused multi-sweep blocks (kernel push path only): 0 = off, K > 0 =
-    # K sweeps per launch, -1 = whole fixpoint; pins the push form
-    fused_steps: int = 0
 
-    def __post_init__(self):
-        assert self.mode in ("auto",) + COUNTING_FORM_NAMES, self.mode
-        assert self.source_batch % 8 == 0, \
-            f"source_batch must be a multiple of 8, got {self.source_batch}"
-        assert self.source_batch <= 128 or self.source_batch % 128 == 0, \
-            f"source_batch > 128 must be a multiple of 128, " \
-            f"got {self.source_batch}"
-        assert self.fused_steps >= -1, \
-            f"fused_steps must be -1, 0 or positive, got {self.fused_steps}"
+    _mode_names = COUNTING_FORM_NAMES  # push | sparse
 
 
 class CountingResult(NamedTuple):

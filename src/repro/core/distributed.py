@@ -54,6 +54,7 @@ from . import sweep as S
 from .engine import _resolve_kernel, frontier_stats
 from .frontier import (UNREACHED, one_hot_frontier, pack_bits,
                        unpack_bits)
+from .options import SweepOptions
 
 INF = jnp.float32(jnp.inf)
 
@@ -64,8 +65,9 @@ SHARDED_FORM_NAMES = ("dense", "sparse")
 
 
 @dataclasses.dataclass(frozen=True)
-class ShardedConfig:
-    """Static sharded-executor parameters (hashable jit static arg).
+class ShardedConfig(SweepOptions):
+    """Static sharded-executor parameters (a :class:`SweepOptions`
+    subclass, hashable jit static arg).
 
     ``semiring`` picks the algebra ("boolean" unweighted BFS, "tropical"
     (min,+) APSP — weights required, "counting" shortest-path counting
@@ -78,13 +80,10 @@ class ShardedConfig:
     branch).  ``use_kernel=None`` resolves to "Pallas kernels iff on
     TPU", exactly like ``EngineConfig``/``WeightedConfig``.
     """
-    semiring: str = "boolean"          # boolean | tropical | counting
     mode: str = "dense"                # dense | sparse | auto
-    use_kernel: Optional[bool] = None  # None -> Pallas kernels iff on TPU
-    max_sweeps: Optional[int] = None   # None -> n_nodes (hop bound)
+    semiring: str = "boolean"          # boolean | tropical | counting
+    max_sweeps: Optional[int] = None   # alias of max_steps (hop bound)
     # kernel / reference tiling knobs (mirror the single-device configs)
-    bn: int = 128
-    bk: int = 128
     eb: int = 128
     chunk: int = 128
     # auto-mode cost constants (same units as the single-device engines)
@@ -96,13 +95,17 @@ class ShardedConfig:
     # sweeps, so it always falls back to the per-sweep loop; with C == 1
     # only the Fact-1 predicate crosses shards and the fused block's
     # (prod, stopped) scalars psum/pmax-combine instead (fused_combine).
-    fused_steps: int = 0
+
+    _mode_names = SHARDED_FORM_NAMES   # dense | sparse
 
     def __post_init__(self):
         assert self.semiring in ("boolean", "tropical", "counting"), \
             self.semiring
-        assert self.mode in ("auto",) + SHARDED_FORM_NAMES, self.mode
-        assert self.fused_steps >= -1, self.fused_steps
+        bound = self.max_sweeps if self.max_sweeps is not None \
+            else self.max_steps
+        object.__setattr__(self, "max_sweeps", bound)
+        object.__setattr__(self, "max_steps", bound)
+        super().__post_init__()
 
     @property
     def tropical(self) -> bool:

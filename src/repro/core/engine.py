@@ -54,12 +54,14 @@ import numpy as np
 from ..graph.csr import CSRGraph
 from . import sweep as S
 from .frontier import UNREACHED, one_hot_frontier
+from .options import SweepOptions
 from .sweep import DIRECTION_NAMES, PULL, PUSH, SPARSE, SweepState
 
 
 @dataclasses.dataclass(frozen=True)
-class EngineConfig:
-    """Static engine parameters (hashable: used as a jit static arg).
+class EngineConfig(SweepOptions):
+    """Static boolean-engine parameters (a :class:`SweepOptions`
+    subclass, hashable: used as a jit static arg).
 
     Cost-model units (see docs/ARCHITECTURE.md for the calibration):
       c_push   — per dense element in a live (i, j, k) push tile (MXU MAC)
@@ -68,35 +70,13 @@ class EngineConfig:
                  c_pull / 32)
       c_sparse — per padded CSR edge lane (gather + random scatter)
     """
-    source_batch: int = 128          # sources per tile (multiple of 8)
-    mode: str = "auto"               # auto | push | pull | sparse
-    use_kernel: Optional[bool] = None  # None -> Pallas kernels iff on TPU
-    dynamic: Optional[bool] = None   # per-sweep switch; None -> use_kernel
-    max_steps: Optional[int] = None  # None -> n_nodes (diameter bound)
-    # fused multi-sweep blocks: 0 = off, K > 0 = K sweeps per kernel
-    # launch, -1 = whole fixpoint in one launch.  Kernel path only; pins
-    # the push direction (sweep.resolve_fused_steps documents the gate).
-    fused_steps: int = 0
-    # push-kernel tiles (bs adapts to the source batch)
-    bn: int = 128
-    bk: int = 128
     # cost model
     c_push: float = 1.0
     c_pull: float = 8.0
     c_sparse: float = 8.0
     pull_chunk: int = 512            # ref pull: nodes per lax.map chunk
 
-    def __post_init__(self):
-        assert self.mode in ("auto",) + DIRECTION_NAMES, self.mode
-        assert self.source_batch % 8 == 0, \
-            f"source_batch must be a multiple of 8, got {self.source_batch}"
-        # above one push tile, the batch must tile exactly (bs = 128)
-        assert self.source_batch <= 128 or self.source_batch % 128 == 0, \
-            f"source_batch > 128 must be a multiple of 128, " \
-            f"got {self.source_batch}"
-        assert self.fused_steps >= -1, \
-            f"fused_steps must be -1 (whole fixpoint), 0 (off) or a " \
-            f"positive sweep count, got {self.fused_steps}"
+    _mode_names = DIRECTION_NAMES    # push | pull | sparse
 
 
 class SweepStats(NamedTuple):
@@ -125,6 +105,9 @@ class PreparedGraph:
     graph: CSRGraph
     deg: jax.Array        # (n_pad,) float32 out-degrees (0 on pad)
     n_pad: int
+    # content epoch of the source graph at prepare time (0 for a static
+    # CSRGraph) — staleness checks in serve/ and repro.api key on it
+    epoch: int = 0
     # per-graph sweep-cost measurements, keyed (s, bn, bk, pull_chunk, path)
     cost_cache: dict = dataclasses.field(default_factory=dict, repr=False)
     # landmark label tables for the distance-oracle serving tier
@@ -167,13 +150,22 @@ class PreparedGraph:
         return self._adj_pull
 
 
-def prepare_graph(g: CSRGraph, *, align: int = 128) -> PreparedGraph:
+def prepare_graph(g, *, align: int = 128) -> PreparedGraph:
     """Pad-size the graph and build the O(n) degree operand; the dense
-    push/pull operands materialize lazily when a sweep form needs them."""
+    push/pull operands materialize lazily when a sweep form needs them.
+
+    Accepts a plain :class:`CSRGraph` or a
+    :class:`repro.graph.dynamic.DynamicCSRGraph` — the latter prepares
+    its merged ``view()`` snapshot and records the content ``epoch`` so
+    downstream caches can staleness-check against the live graph."""
+    epoch = 0
+    if hasattr(g, "view"):            # DynamicCSRGraph duck-type
+        epoch = int(g.epoch)
+        g = g.view()
     n_pad = g.n_padded(align)
     deg = jnp.zeros(n_pad, jnp.float32).at[: g.n_nodes].set(
         g.out_degrees().astype(jnp.float32))
-    return PreparedGraph(graph=g, deg=deg, n_pad=n_pad)
+    return PreparedGraph(graph=g, deg=deg, n_pad=n_pad, epoch=epoch)
 
 
 # --------------------------------------------------------------------------

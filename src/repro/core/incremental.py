@@ -1,0 +1,341 @@
+"""Incremental BFS/SSSP repair — resume the sweep from the affected
+frontier instead of re-running from scratch.
+
+DAWN's per-source bound O(E_wcc(i)) comes from touching only reachable
+structure; the same argument localizes *updates*: an edge mutation whose
+affected region is small should cost a correspondingly small resumed
+sweep.  This module classifies a batch of edge updates against a stored
+``(dist, parent)`` state and re-converges it through the existing
+one-``lax.while_loop`` driver (:func:`repro.core.sweep.sweep_loop`) —
+no new loop, no new sweep semantics.
+
+Classification (Yamane & Kobayashi, arXiv:1908.06806):
+
+  * **Inserts can only lower distances.**  For each inserted (or
+    weight-decreased) edge (u, v, w), if ``d[u] + w < d[v]`` the head v
+    improves immediately and seeds the resume frontier; otherwise the
+    insert is provably inert.
+  * **Deletes taint the shortest-path subtree.**  A vertex's stored
+    distance survives a delete iff its recorded shortest path avoids the
+    deleted edges.  v is tainted iff its parent edge was deleted or its
+    parent chain passes through a tainted vertex — computed by
+    propagating taint down the parent forest.  Tainted distances reset
+    to +inf (their parents to -1); untainted distances are still
+    achievable (deletes never shorten paths), hence still optimal.
+
+Seeding: the resume frontier F0 is the set of insert-improved heads plus
+every *untainted* vertex with an out-edge into the tainted set (the
+taint boundary).  Completeness: walk any true shortest path to a
+tainted vertex backwards — it leaves the untainted region (where stored
+distances are exact) through some boundary edge whose tail is in F0, so
+the resumed relaxation rebuilds the path level by level; interior
+tainted vertices join the frontier as they improve, exactly the sparse
+form's Bellman–Ford frontier dynamics.  If F0 is empty the tainted set
+is unreachable and +inf is already correct (the resume is skipped — 0
+sweeps).
+
+The resume always runs the **tropical** sparse form (unit lane weights
+for unweighted graphs): the boolean forms gate on ``dist == UNREACHED``
+and write the global step counter, so they cannot lower an existing
+finite distance — value-based (min,+) relaxation is the one sweep
+algebra that is resumable from any partial state.  Unit-weight f32
+distances are integer-exact far past any reachable hop count, so the
+final ``int32`` conversion is lossless and the repaired state is
+**bit-identical** to a from-scratch boolean sweep (dist and the
+``derive_parents`` max-id tie-break both depend only on the dist
+fixpoint).  Weighted repair requires strictly positive weights: a
+zero-weight cycle can make the recorded parent forest cyclic, which
+breaks the subtree-taint argument.
+
+Counting-semiring state (sigma) is NOT incrementally repaired — path
+counts have no local taint bound — so the serving tier invalidates and
+rebuilds its betweenness vector on epoch change instead (trivially
+bit-identical).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph.csr import CSRGraph
+from ..graph.dynamic import DynamicCSRGraph
+from . import sweep as S
+from .engine import EngineConfig, apsp_engine
+from .frontier import UNREACHED
+from .weighted import WeightedConfig, weighted_apsp
+
+__all__ = ["IncrementalState", "RepairResult", "IncrementalSSSP",
+           "sssp_state", "repair"]
+
+
+@dataclasses.dataclass
+class IncrementalState:
+    """Resumable multi-source shortest-path state.
+
+    ``dist`` is stored in the tropical domain for both algebras:
+    (S, n) float32, +inf = unreached (integer-valued for unweighted
+    graphs).  ``parent`` is the ``derive_parents`` forest (max-id
+    tie-break, -1 = root/unreached) — the taint classifier walks it.
+    """
+    sources: np.ndarray          # (S,) int32
+    dist: np.ndarray             # (S, n) float32, +inf unreached
+    parent: np.ndarray           # (S, n) int32, -1 none
+    weighted: bool
+    epoch: int = 0               # graph epoch this state reflects
+
+    def dist_int(self) -> np.ndarray:
+        """Boolean-engine view: (S, n) int32 hops, -1 unreachable."""
+        return np.where(np.isinf(self.dist), UNREACHED,
+                        self.dist).astype(np.int32)
+
+
+class RepairResult(NamedTuple):
+    state: IncrementalState
+    sweeps: int                  # productive resumed sweeps (0 if inert)
+    tainted: int                 # vertices whose subtree a delete cut
+    seeded: int                  # |F0| — resume frontier size
+    rebuilt: bool                # True when repair fell back to scratch
+
+
+def _unwrap(graph, weights):
+    """-> (CSRGraph view, lane weights or None, content epoch)."""
+    if isinstance(graph, DynamicCSRGraph):
+        return graph.view(), graph.view_weights(), graph.epoch
+    return graph, weights, 0
+
+
+def sssp_state(graph: Union[CSRGraph, DynamicCSRGraph], sources, *,
+               weights=None, config=None) -> Tuple[IncrementalState, int]:
+    """From-scratch state build through the batched engines; returns
+    ``(state, sweeps)`` so callers can compare repair-vs-scratch cost."""
+    view, w, epoch = _unwrap(graph, weights)
+    sources = np.asarray(sources, np.int32).ravel()
+    if w is not None:
+        cfg = config if isinstance(config, WeightedConfig) \
+            else WeightedConfig()
+        res = weighted_apsp(view, w, sources, config=cfg)
+        dist = np.asarray(res.dist, np.float32)
+        parent = np.asarray(S.derive_parents(view, res.dist,
+                                             weights=jnp.asarray(w)))
+    else:
+        cfg = config if isinstance(config, EngineConfig) else EngineConfig()
+        res = apsp_engine(view, sources, config=cfg)
+        dist_i = np.asarray(res.dist)
+        dist = np.where(dist_i == UNREACHED, np.inf,
+                        dist_i).astype(np.float32)
+        parent = np.asarray(S.derive_parents(view, res.dist))
+    state = IncrementalState(sources=sources, dist=dist,
+                             parent=parent.astype(np.int32),
+                             weighted=w is not None, epoch=epoch)
+    return state, int(res.sweeps)
+
+
+@jax.jit
+def _resume(src_idx, dst_idx, w_lanes, f0, d0, max_steps) -> S.SweepState:
+    """Resume the tropical relaxation from a partial (frontier, dist)
+    through THE sweep driver (sparse form; n_forms=2 mirrors the
+    weighted engine's accounting layout)."""
+    _, sparse = S.tropical_forms(None, src_idx, dst_idx, w_lanes)
+    st0 = S.make_state(f0, d0, n_forms=2)
+    return S.sweep_loop((sparse, sparse), st0, max_steps=max_steps,
+                        forced_dir=1)
+
+
+def _normalize_pairs(edges, n_cols):
+    if edges is None:
+        return tuple(np.zeros(0, np.int64) for _ in range(n_cols))
+    out = tuple(np.asarray(e).ravel() for e in edges)
+    assert len(out) == n_cols, \
+        f"expected {n_cols} arrays, got {len(out)}"
+    return out
+
+
+def repair(graph: Union[CSRGraph, DynamicCSRGraph],
+           state: IncrementalState, *,
+           inserts=None, deletes=None, weights=None,
+           max_steps: Optional[int] = None) -> RepairResult:
+    """Repair ``state`` against ``graph`` (which must already contain
+    the mutations): taint delete subtrees, apply insert improvements,
+    resume the sweep from the affected frontier.
+
+    ``inserts`` is ``(src, dst)`` or ``(src, dst, w)`` (w required for
+    weighted states — the *current* weight of each inserted/decreased
+    edge); ``deletes`` is ``(src, dst)``.  The result is bit-identical
+    to a from-scratch run on the mutated graph.
+    """
+    view, w, epoch = _unwrap(graph, weights)
+    n = view.n_nodes
+    n_src, n_cols = state.dist.shape
+    assert n_cols == n, (n_cols, n)
+
+    if state.weighted:
+        assert w is not None, "weighted state needs the mutated weights"
+        ins_src, ins_dst, ins_w = _normalize_pairs(
+            inserts, 3) if (inserts is not None and len(inserts) == 3) \
+            else (*_normalize_pairs(inserts, 2), None)
+        assert ins_w is not None or ins_src.size == 0, \
+            "weighted repair needs (src, dst, w) inserts"
+        if ins_w is None:
+            ins_w = np.zeros(0, np.float32)
+        w_np = np.asarray(w, np.float32)
+        live_w = w_np[np.asarray(view.src) < n]
+        assert live_w.size == 0 or live_w.min() > 0, \
+            "weighted repair requires strictly positive weights " \
+            "(zero-weight cycles break the parent-subtree taint bound)"
+    else:
+        ins_src, ins_dst = _normalize_pairs(inserts, 2)[:2]
+        ins_w = np.ones(ins_src.size, np.float32)
+    del_src, del_dst = _normalize_pairs(deletes, 2)
+
+    dist = state.dist.copy()
+    parent = state.parent.copy()
+
+    # -- delete classification: taint the cut shortest-path subtrees ----
+    tainted = np.zeros(dist.shape, bool)
+    for u, v in zip(del_src, del_dst):
+        tainted[:, int(v)] |= parent[:, int(v)] == int(u)
+    if tainted.any():
+        rows = np.arange(n_src)[:, None]
+        parc = np.where(parent >= 0, parent, 0)
+        while True:
+            grown = tainted | (tainted[rows, parc] & (parent >= 0))
+            if (grown == tainted).all():
+                break
+            tainted = grown
+        dist[tainted] = np.inf
+        parent[tainted] = -1
+    n_tainted = int(tainted.sum())
+
+    # -- insert classification: apply immediate improvements ------------
+    f0 = np.zeros(dist.shape, bool)
+    for u, v, wt in zip(ins_src, ins_dst, ins_w):
+        u, v = int(u), int(v)
+        cand = dist[:, u] + (float(wt) if state.weighted else 1.0)
+        imp = cand < dist[:, v]
+        if imp.any():
+            dist[imp, v] = cand[imp]
+            parent[imp, v] = u
+            f0[imp, v] = True
+
+    # -- boundary seeds: untainted tails of edges into the tainted set --
+    if n_tainted:
+        gsrc = np.asarray(view.src)
+        gdst = np.asarray(view.dst)
+        live = gsrc < n
+        us, vs = gsrc[live], gdst[live]
+        contrib = (~tainted[:, us]) & tainted[:, vs]     # (S, m_live)
+        for s in range(n_src):
+            np.logical_or.at(f0[s], us, contrib[s])
+        # (no ~tainted mask on f0: an insert-improved vertex inside the
+        # tainted set holds a finite dist that must propagate; tainted
+        # seeds still at +inf are inert in the relaxation anyway)
+
+    n_seeded = int(f0.sum())
+    new_epoch = epoch if isinstance(graph, DynamicCSRGraph) \
+        else state.epoch
+    if state.weighted:
+        w_lanes = jnp.asarray(w_np)
+    else:
+        w_lanes = jnp.where(view.src < n, jnp.float32(1.0),
+                            jnp.float32(np.inf))
+
+    def _parents(d):
+        # parents re-derive from the dist fixpoint — same max-id
+        # tie-break as scratch, so equal dist => bit-equal parents
+        if state.weighted:
+            return np.asarray(S.derive_parents(
+                view, jnp.asarray(d), weights=w_lanes)).astype(np.int32)
+        di = np.where(np.isinf(d), UNREACHED, d).astype(np.int32)
+        return np.asarray(S.derive_parents(
+            view, jnp.asarray(di))).astype(np.int32)
+
+    if n_seeded == 0:
+        # inert batch: non-improving inserts and/or a tainted region
+        # with no untainted in-boundary (provably unreachable -> +inf).
+        # Parents still re-derive when the edge set changed: an insert
+        # that only TIES an existing distance adds a valid predecessor,
+        # which can move the canonical (max-id) parent without moving
+        # any distance.
+        if ins_src.size or del_src.size:
+            parent = _parents(dist)
+        out = IncrementalState(sources=state.sources, dist=dist,
+                               parent=parent, weighted=state.weighted,
+                               epoch=new_epoch)
+        return RepairResult(out, 0, n_tainted, 0, False)
+
+    # -- resume through THE driver on the merged operand -----------------
+    n_pad = view.n_padded(128)
+    d0 = np.full((n_src, n_pad), np.inf, np.float32)
+    d0[:, :n] = dist
+    f0p = np.zeros((n_src, n_pad), np.int8)
+    f0p[:, :n] = f0
+    st = _resume(view.src, view.dst, w_lanes, jnp.asarray(f0p),
+                 jnp.asarray(d0), jnp.int32(max_steps or n))
+    newd = np.asarray(st.dist)[:, :n]
+
+    out = IncrementalState(sources=state.sources,
+                           dist=newd.astype(np.float32),
+                           parent=_parents(newd),
+                           weighted=state.weighted, epoch=new_epoch)
+    return RepairResult(out, int(st.sweeps), n_tainted, n_seeded, False)
+
+
+class IncrementalSSSP:
+    """Streaming repair driver bound to a :class:`DynamicCSRGraph`.
+
+    Holds the resumable state for a fixed source set and pulls the
+    graph's journalled net deltas on :meth:`update` — repairing
+    incrementally when the journal reaches back to the last sync and
+    rebuilding from scratch when it doesn't.  ``scratch_sweeps`` /
+    ``repair_sweeps`` accumulate the cost of each path for
+    repair-vs-scratch accounting (bench_dynamic hard-gates these).
+    """
+
+    def __init__(self, graph: DynamicCSRGraph, sources, *, config=None):
+        assert isinstance(graph, DynamicCSRGraph), type(graph)
+        self.graph = graph
+        self.config = config
+        self.state, sweeps = sssp_state(graph, sources, config=config)
+        self.scratch_sweeps = sweeps
+        self.repair_sweeps = 0
+        self.rebuilds = 0
+        self.repairs = 0
+
+    @property
+    def dist(self) -> np.ndarray:
+        return self.state.dist
+
+    @property
+    def parent(self) -> np.ndarray:
+        return self.state.parent
+
+    def dist_int(self) -> np.ndarray:
+        return self.state.dist_int()
+
+    def update(self) -> Optional[RepairResult]:
+        """Sync with the graph's current epoch.  Returns the
+        :class:`RepairResult` (``None`` when already in sync)."""
+        if self.graph.epoch == self.state.epoch:
+            return None
+        delta = self.graph.delta_since(self.state.epoch)
+        if delta is None:                 # journal trimmed: full rebuild
+            self.state, sweeps = sssp_state(self.graph,
+                                            self.state.sources,
+                                            config=self.config)
+            self.scratch_sweeps += sweeps
+            self.rebuilds += 1
+            return RepairResult(self.state, sweeps, 0, 0, True)
+        ins_src, ins_dst, ins_w, del_src, del_dst = delta
+        res = repair(self.graph, self.state,
+                     inserts=(ins_src, ins_dst, ins_w)
+                     if self.state.weighted else (ins_src, ins_dst),
+                     deletes=(del_src, del_dst))
+        self.state = res.state
+        self.repair_sweeps += res.sweeps
+        self.repairs += 1
+        return res

@@ -47,6 +47,7 @@ from ..graph.csr import CSRGraph
 from . import sweep as S
 from .engine import _resolve_kernel, frontier_stats
 from .frontier import one_hot_frontier
+from .options import SweepOptions
 from .sovm import sovm_sssp
 
 INF = jnp.float32(jnp.inf)
@@ -68,8 +69,9 @@ class WeightedApspResult(NamedTuple):
 
 
 @dataclasses.dataclass(frozen=True)
-class WeightedConfig:
-    """Static tropical-engine parameters (hashable jit static arg).
+class WeightedConfig(SweepOptions):
+    """Static tropical-engine parameters (a :class:`SweepOptions`
+    subclass, hashable jit static arg).
 
     Cost-model units: ``c_dense`` per f32 add+min lane in a live dense
     tile, ``c_sparse`` per CSR relax lane — same shape as the boolean
@@ -81,34 +83,26 @@ class WeightedConfig:
     kernel registry via ``sweep.tropical_forms``.  ``dynamic=None``
     mirrors the boolean engine too: per-sweep occupancy switching on the
     kernel path, per-graph wall-clock calibration on the reference path.
+
+    ``max_sweeps`` is this engine's historical spelling of the base
+    ``max_steps`` hop bound; setting either sets both.
     """
     source_batch: int = 64           # sources per tile (multiple of 8)
-    mode: str = "auto"               # auto | dense | sparse
-    use_kernel: Optional[bool] = None  # None -> Pallas kernels iff on TPU
-    dynamic: Optional[bool] = None   # per-sweep switch; None -> use_kernel
-    max_sweeps: Optional[int] = None  # None -> n_nodes (hop bound)
+    max_sweeps: Optional[int] = None  # alias of max_steps (hop bound)
     chunk: int = 128                 # dense min-plus dst cols per map step
-    # dense min-plus kernel tiles (bs adapts to the source batch)
-    bn: int = 128
-    bk: int = 128
     eb: int = 128                    # sparse relax kernel edges per step
     c_dense: float = 1.0
     c_sparse: float = 8.0
-    # fused multi-sweep blocks (kernel dense path only): 0 = off, K > 0 =
-    # K sweeps per launch, -1 = whole fixpoint; pins the dense form
-    fused_steps: int = 0
+
+    _mode_names = WEIGHTED_FORM_NAMES  # dense | sparse
 
     def __post_init__(self):
-        assert self.mode in ("auto",) + WEIGHTED_FORM_NAMES, self.mode
-        assert self.source_batch % 8 == 0, \
-            f"source_batch must be a multiple of 8, got {self.source_batch}"
-        # above one stats tile the batch must tile exactly (bs = 128), or
-        # the dynamic regime's frontier_stats reshape fails at trace time
-        assert self.source_batch <= 128 or self.source_batch % 128 == 0, \
-            f"source_batch > 128 must be a multiple of 128, " \
-            f"got {self.source_batch}"
-        assert self.fused_steps >= -1, \
-            f"fused_steps must be -1, 0 or positive, got {self.fused_steps}"
+        # fold the two spellings of the hop bound into one value
+        bound = self.max_sweeps if self.max_sweeps is not None \
+            else self.max_steps
+        object.__setattr__(self, "max_sweeps", bound)
+        object.__setattr__(self, "max_steps", bound)
+        super().__post_init__()
 
 
 @dataclasses.dataclass
@@ -118,6 +112,8 @@ class PreparedWeightedGraph:
     w_edges: jax.Array    # (m_pad,) float32; +inf on padded lanes
     deg: jax.Array        # (n_pad,) float32 out-degrees (0 on pad)
     n_pad: int
+    # content epoch of the source graph at prepare time (0 = static)
+    epoch: int = 0
     cost_cache: dict = dataclasses.field(default_factory=dict, repr=False)
     _wdense: Optional[jax.Array] = dataclasses.field(default=None,
                                                      repr=False)
@@ -133,10 +129,22 @@ class PreparedWeightedGraph:
         return self._wdense
 
 
-def prepare_weighted(g: CSRGraph, weights, *,
+def prepare_weighted(g, weights=None, *,
                      align: int = 128) -> PreparedWeightedGraph:
     """Normalize weights to the padded edge lanes and build the O(n)
-    operands; the dense weight matrix materializes lazily."""
+    operands; the dense weight matrix materializes lazily.
+
+    Accepts a plain :class:`CSRGraph` (``weights`` required) or a
+    weighted :class:`repro.graph.dynamic.DynamicCSRGraph` (lane weights
+    come from its merged view; the content ``epoch`` is recorded for
+    downstream staleness checks)."""
+    epoch = 0
+    if hasattr(g, "view"):            # DynamicCSRGraph duck-type
+        epoch = int(g.epoch)
+        if weights is None:
+            weights = g.view_weights()
+        g = g.view()
+    assert weights is not None, "prepare_weighted needs edge weights"
     w = np.asarray(weights, np.float32)
     assert w.ndim == 1 and w.size >= g.n_edges, \
         f"need >= {g.n_edges} weights, got shape {w.shape}"
@@ -147,7 +155,7 @@ def prepare_weighted(g: CSRGraph, weights, *,
     deg = jnp.zeros(n_pad, jnp.float32).at[: g.n_nodes].set(
         g.out_degrees().astype(jnp.float32))
     return PreparedWeightedGraph(graph=g, w_edges=jnp.asarray(lanes),
-                                 deg=deg, n_pad=n_pad)
+                                 deg=deg, n_pad=n_pad, epoch=epoch)
 
 
 # --------------------------------------------------------------------------

@@ -1,1 +1,1 @@
-from . import tokens, graphs, recsys, pipeline
+from . import tokens, graphs, pipeline

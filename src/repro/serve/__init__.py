@@ -1,7 +1,33 @@
-from .engine import (GraphQuery, GraphService, Request, ServingEngine)
+"""Graph-query serving tier: tiered admission + bucketed micro-batching.
+
+The LM serving engine (``Request`` / ``ServingEngine``) moved to
+``repro._attic.lm_serving`` with the rest of the model zoo; importing
+those names from here still works but emits a :class:`DeprecationWarning`
+(once per process per name).
+"""
+import warnings
+
+from .engine import GraphQuery, GraphService
 from .oracle import (DistanceOracle, OracleAnswer, build_landmark_labels,
                      select_top_k)
 
-__all__ = ["GraphQuery", "GraphService", "Request", "ServingEngine",
+__all__ = ["GraphQuery", "GraphService",
            "DistanceOracle", "OracleAnswer", "build_landmark_labels",
            "select_top_k"]
+
+_ATTIC_NAMES = ("Request", "ServingEngine")
+_warned = set()
+
+
+def __getattr__(name):
+    if name in _ATTIC_NAMES:
+        if name not in _warned:
+            _warned.add(name)
+            warnings.warn(
+                f"repro.serve.{name} moved to repro._attic.lm_serving "
+                "(seed-era LM serving stack, quarantined per ROADMAP "
+                "item 3); import it from there",
+                DeprecationWarning, stacklevel=2)
+        from repro._attic import lm_serving
+        return getattr(lm_serving, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,14 +1,6 @@
-"""Batched serving engine: prefill/decode split + continuous batching.
+"""Batched graph-query serving: tiered admission + bucketed micro-batching.
 
-A single-host simulation of the production serving loop: requests arrive
-with prompts; the engine prefills them into free KV-cache slots, then runs
-batched decode steps over all active slots, retiring finished sequences and
-immediately admitting queued ones (continuous batching).  The decode step
-is the same jitted ``transformer.decode_step`` the dry-run lowers at the
-32k/500k shapes.
-
-The engine also serves ``shortest_path`` graph queries: a
-:class:`GraphService` answers :class:`GraphQuery` requests through a
+A :class:`GraphService` answers :class:`GraphQuery` requests through a
 three-level serving tier —
 
   1. **row cache** — an LRU of distance rows earlier sweeps already
@@ -22,8 +14,19 @@ three-level serving tier —
      multi-source run (core/engine.py) per flush, with per-query
      deadlines driving a deadline-aware flush policy (``tick``).
 
-so graph analytics ride the same continuous-batching loop as decode
-steps instead of needing a separate deployment.
+so graph analytics share one continuous-batching loop instead of
+needing a separate deployment.
+
+The service also fronts **mutable graphs**: built over a
+:class:`repro.graph.dynamic.DynamicCSRGraph`, every entry point
+(``submit`` / ``flush`` / ``tick``) first compares the graph's content
+``epoch`` against the epoch the cached operands were prepared at.  On a
+mismatch the prepared operands are rebuilt from the merged view and
+every derived cache — the LRU row cache, the betweenness vector, the
+sharded operands, and the landmark label tables behind the oracle — is
+invalidated (the oracle rebuilds lazily on next touch).  A stale
+certified answer is therefore impossible: admission never consults a
+cache whose epoch disagrees with the graph.
 """
 from __future__ import annotations
 
@@ -33,8 +36,6 @@ import time
 from collections import OrderedDict, deque
 from typing import Callable, Dict, List, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..core.centrality import (MEASURES, CentralityConfig, betweenness,
@@ -45,20 +46,7 @@ from ..core.engine import EngineConfig, PreparedGraph, apsp_engine_blocks, \
     prepare_graph
 from ..core.weighted import (PreparedWeightedGraph, WeightedConfig,
                              prepare_weighted, weighted_apsp)
-from ..graph.csr import CSRGraph
-from ..models import transformer as T
 from .oracle import DistanceOracle, select_top_k
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray          # (L,) int32
-    max_new: int = 16
-    out: Optional[List[int]] = None
-    t_submit: float = 0.0
-    t_first: float = 0.0
-    t_done: float = 0.0
 
 
 @dataclasses.dataclass
@@ -139,7 +127,7 @@ class GraphService:
     so one deep-BFS query doesn't pad-waste a micro-batch of shallow
     ones (the length-bucketed batching idiom).  :meth:`flush` drains up
     to ``max_batch`` queries in global FIFO order (compat path — the
-    `ServingEngine` tick uses it); :meth:`tick` applies the
+    attic LM ``ServingEngine`` tick uses it); :meth:`tick` applies the
     deadline-aware policy instead: a bucket flushes when it is full,
     when its earliest deadline minus the EWMA-estimated flush time
     leaves no headroom, or when its head has waited ``max_wait``.
@@ -169,7 +157,7 @@ class GraphService:
     benchmark drive a virtual clock through it.
     """
 
-    def __init__(self, graph: CSRGraph, *,
+    def __init__(self, graph, *,
                  config: Optional[EngineConfig] = None,
                  weights=None,
                  weighted_config: Optional[WeightedConfig] = None,
@@ -194,9 +182,14 @@ class GraphService:
         # per-flush latency cap: honored even with an explicit config (the
         # source tile stays config.source_batch wide; short flushes pad)
         self.max_batch = min(max_batch, self.config.source_batch)
-        self.prepared: PreparedGraph = prepare_graph(graph)
-        self.prepared_weighted: Optional[PreparedWeightedGraph] = \
-            None if weights is None else prepare_weighted(graph, weights)
+        if hasattr(graph, "view") and weights is not None:
+            raise ValueError(
+                "weights= with a DynamicCSRGraph is ambiguous — a static "
+                "weight array cannot track mutations; build the dynamic "
+                "graph with weights instead")
+        self.graph_source = graph
+        self._base_weights = weights
+        self._build_operands()
         # weighted queries ride the same kernel-path resolution as the
         # boolean engine: both semirings dispatch Pallas kernels through
         # the registry when the config (or TPU detection) says so
@@ -213,7 +206,6 @@ class GraphService:
             ShardedConfig(semiring="tropical", mode="dense",
                           use_kernel=self.config.use_kernel),
         }
-        self._weights = weights
         self._sharded_ops: Dict[str, ShardedOperands] = {}
         self.sharded_flushes = 0
         self.centrality_config = centrality_config or CentralityConfig(
@@ -224,15 +216,16 @@ class GraphService:
         self._betweenness: Optional[np.ndarray] = None
         # --- serving tier ----------------------------------------------
         self._clock = clock
+        # the oracle is lazily (re)built by the `oracle` property so an
+        # epoch invalidation can drop it without paying the label-table
+        # sweeps until the next query that would consult it
+        self._landmark_strategy = landmark_strategy
         if oracle is not None:
-            self.oracle: Optional[DistanceOracle] = oracle
-        elif n_landmarks > 0:
-            self.oracle = DistanceOracle(self.prepared,
-                                         n_landmarks=n_landmarks,
-                                         strategy=landmark_strategy,
-                                         config=self.config)
+            self._oracle: Optional[DistanceOracle] = oracle
+            self._oracle_n_landmarks = oracle.n_landmarks
         else:
-            self.oracle = None
+            self._oracle = None
+            self._oracle_n_landmarks = n_landmarks
         # LRU of exact distance rows keyed (kind, source); every sweep
         # feeds it, so a hot source pays one sweep ever
         self.row_cache_size = max(0, row_cache_size)
@@ -254,6 +247,61 @@ class GraphService:
         self.expired_count = 0
         self.n_submitted = 0
         self.n_completed_total = 0
+        self.epoch_invalidations = 0
+
+    # -- epoch freshness ---------------------------------------------------
+
+    def _build_operands(self) -> None:
+        """(Re)prepare engine operands from the current graph content.
+
+        ``prepare_graph``/``prepare_weighted`` duck-type dynamic graphs
+        (merged view + content epoch); for a weighted dynamic graph the
+        lane weights come from its ``view_weights()``.
+        """
+        g = self.graph_source
+        self.prepared: PreparedGraph = prepare_graph(g)
+        if self._base_weights is not None:
+            self.prepared_weighted: Optional[PreparedWeightedGraph] = \
+                prepare_weighted(g, self._base_weights)
+            self._weights = self._base_weights
+        elif getattr(g, "weighted", False) and hasattr(g, "view_weights"):
+            self.prepared_weighted = prepare_weighted(g)
+            self._weights = g.view_weights()
+        else:
+            self.prepared_weighted = None
+            self._weights = None
+
+    @property
+    def oracle(self) -> Optional[DistanceOracle]:
+        """Landmark oracle for the *current* epoch, built on demand."""
+        if self._oracle is None and self._oracle_n_landmarks > 0:
+            self._oracle = DistanceOracle(
+                self.prepared, n_landmarks=self._oracle_n_landmarks,
+                strategy=self._landmark_strategy, config=self.config)
+        return self._oracle
+
+    def _ensure_fresh(self) -> None:
+        """Invalidate every cached artifact when the graph has mutated.
+
+        Compares the source graph's content ``epoch`` against the epoch
+        ``self.prepared`` was built at (static graphs are always epoch
+        0, so this is a no-op for them).  On mismatch: re-prepare the
+        engine operands, clear the LRU row cache, the cached
+        betweenness vector and the sharded operands, and drop the
+        oracle (its landmark label tables rebuild lazily against the
+        fresh ``PreparedGraph`` on next touch).  Called at the top of
+        every entry point (``submit``/``flush``/``tick``), so no
+        admission or batch execution can ever read a stale cache.
+        """
+        if int(getattr(self.graph_source, "epoch", 0)) == \
+                self.prepared.epoch:
+            return
+        self._build_operands()
+        self._row_cache.clear()
+        self._betweenness = None
+        self._sharded_ops.clear()
+        self._oracle = None
+        self.epoch_invalidations += 1
 
     def _sharded_operands(self, semiring: str) -> ShardedOperands:
         """Lazy per-semiring ShardedOperands (dense/partitioned operands
@@ -289,6 +337,7 @@ class GraphService:
         submit* — they never occupy a sweep batch.  Everything else
         lands in the FIFO bucket for its (kind, predicted-sweeps) key.
         """
+        self._ensure_fresh()
         n = self.prepared.graph.n_nodes
         if not 0 <= query.source < n:
             raise ValueError(f"source {query.source} not in [0, {n})")
@@ -418,8 +467,10 @@ class GraphService:
     def flush(self) -> List[GraphQuery]:
         """Serve up to ``max_batch`` pending queries in global FIFO
         order regardless of buckets or deadlines; returns them.  The
-        unconditional drain — ``ServingEngine.step`` calls it every
-        tick; :meth:`tick` is the deadline/size-aware alternative."""
+        unconditional drain — the attic ``ServingEngine.step`` calls it
+        every tick; :meth:`tick` is the deadline/size-aware
+        alternative."""
+        self._ensure_fresh()
         batch = self._take_global(self.max_batch)
         return self._serve(batch)
 
@@ -434,6 +485,7 @@ class GraphService:
         micro-batch homogeneous in predicted sweep count — the whole
         point of bucketing.  Ripest = earliest deadline, then oldest.
         """
+        self._ensure_fresh()
         now = self._clock()
         headroom = self.deadline_safety * self._flush_est
         best_key, best_rank = None, None
@@ -603,114 +655,3 @@ class GraphService:
         for q in queries:
             q.analytics_result = {m: results[id(q)][m]
                                   for m in q.analytics}
-
-
-class ServingEngine:
-    """Fixed-slot continuous batching over a shared KV cache.
-
-    Optionally co-serves graph ``shortest_path`` queries: pass a
-    :class:`GraphService` and submit :class:`GraphQuery` objects via
-    :meth:`submit_graph`; each engine tick flushes one micro-batch of
-    graph queries alongside the decode step.
-    """
-
-    def __init__(self, params, cfg: T.LMConfig, *, slots: int = 4,
-                 max_len: int = 256, greedy: bool = True,
-                 graph_service: Optional[GraphService] = None):
-        self.params = params
-        self.cfg = cfg
-        self.slots = slots
-        self.max_len = max_len
-        self.queue: deque[Request] = deque()
-        self.active: Dict[int, Request] = {}
-        self.slot_of: Dict[int, int] = {}
-        self.free = list(range(slots))
-        self.remaining = np.zeros(slots, np.int32)
-        self.cache = T.make_cache(cfg, slots, max_len)
-        self.cur_tok = np.zeros((slots, 1), np.int32)
-        self._decode = jax.jit(
-            lambda p, c, t, a: T.decode_step(p, c, t, cfg, active=a))
-        self.completed: List[Request] = []
-        self.graph_service = graph_service
-
-    def submit_graph(self, query: GraphQuery):
-        if self.graph_service is None:
-            raise RuntimeError(
-                "construct ServingEngine with graph_service= to serve graphs")
-        self.graph_service.submit(query)
-
-    def submit(self, req: Request):
-        req.t_submit = time.monotonic()
-        req.out = []
-        self.queue.append(req)
-
-    def _admit(self):
-        while self.queue and self.free:
-            req = self.queue.popleft()
-            slot = self.free.pop()
-            self.active[req.rid] = req
-            self.slot_of[req.rid] = slot
-            # reset the slot's cache position, then prefill its prompt
-            # token-by-token with only this slot active (the production
-            # prefill_step lowers the full-sequence path — launch/serve.py)
-            self.cache["pos"] = self.cache["pos"].at[slot].set(0)
-            mask = np.zeros(self.slots, bool)
-            mask[slot] = True
-            for tok in req.prompt:
-                self.cur_tok[slot, 0] = tok
-                self._decode_tick(mask)
-            # first generated token comes from the last prefill logits
-            first = int(np.argmax(self._last_logits[slot]))
-            req.out.append(first)
-            req.t_first = time.monotonic()
-            self.cur_tok[slot, 0] = first
-            self.remaining[slot] = req.max_new - 1
-            if self.remaining[slot] == 0:
-                req.t_done = req.t_first
-                self.completed.append(self.active.pop(req.rid))
-                self.free.append(self.slot_of.pop(req.rid))
-
-    def _decode_tick(self, active_mask: np.ndarray):
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self.cur_tok),
-            jnp.asarray(active_mask))
-        self._last_logits = np.asarray(logits[:, 0], np.float32)
-
-    def step(self) -> int:
-        """One engine tick: admit, serve one graph micro-batch, decode one
-        token for all active slots, retire finished requests.  Returns the
-        number of live requests (LM and graph)."""
-        graph_live = 0
-        if self.graph_service is not None:
-            self.graph_service.flush()
-            graph_live = self.graph_service.pending()
-        self._admit()
-        if not self.active:
-            return graph_live
-        mask = np.zeros(self.slots, bool)
-        for rid in self.active:
-            mask[self.slot_of[rid]] = True
-        self._decode_tick(mask)
-        nxt = np.argmax(self._last_logits, axis=-1).astype(np.int32)
-        done_rids = []
-        for rid, req in self.active.items():
-            s = self.slot_of[rid]
-            if self.remaining[s] <= 0:
-                continue
-            req.out.append(int(nxt[s]))
-            self.cur_tok[s, 0] = nxt[s]
-            self.remaining[s] -= 1
-            if self.remaining[s] == 0:
-                done_rids.append(rid)
-        for rid in done_rids:
-            req = self.active.pop(rid)
-            req.t_done = time.monotonic()
-            self.completed.append(req)
-            self.free.append(self.slot_of.pop(rid))
-        return len(self.active) + len(self.queue) + graph_live
-
-    def run_to_completion(self, max_ticks: int = 10_000):
-        for _ in range(max_ticks):
-            if self.step() == 0 and not self.queue:
-                break
-        return self.completed

@@ -197,3 +197,38 @@ def test_sharded_bench_sweeps_gate_hard():
                for f in failures)
     failures, _ = compare(agg(), agg())
     assert failures == []
+
+
+def test_dynamic_repair_fields_gate_hard():
+    """bench_dynamic's repair/scratch sweep totals, bit-identity flag,
+    epoch counters and interleaved-query checksum are exact given the
+    seeded update stream: any drift fails hard, while the replay timings
+    ride the ordinary generous median gate."""
+    def agg(repair=20, scratch=77, identical=True, epochs=10,
+            compactions=4, checksum=157, t=1.5):
+        out = _aggregate()
+        out["bench_dynamic"] = {"families": {"ws_locality": {
+            "n_nodes": 2048, "n_edges": 16382, "n_sources": 4,
+            "n_rounds": 6, "repair_sweeps": repair,
+            "scratch_sweeps": scratch,
+            "repair_equals_scratch": identical,
+            "n_epochs": epochs, "n_compactions": compactions,
+            "query_checksum": checksum,
+            "t_repair": t * 0.9, "t_repair_median": t,
+            "t_scratch": t * 6, "t_scratch_median": t * 7,
+        }}}
+        return out
+    for kwargs, field in ((dict(repair=25), "repair_sweeps"),
+                          (dict(scratch=80), "scratch_sweeps"),
+                          (dict(identical=False), "repair_equals_scratch"),
+                          (dict(epochs=11), "n_epochs"),
+                          (dict(compactions=0), "n_compactions"),
+                          (dict(checksum=0), "query_checksum")):
+        failures, _ = compare(agg(**kwargs), agg())
+        assert any("bench_dynamic" in f and field in f
+                   for f in failures), field
+    # timing drift inside tolerance passes; identical aggregates pass
+    failures, _ = compare(agg(t=2.0), agg())
+    assert failures == []
+    failures, _ = compare(agg(), agg())
+    assert failures == []

@@ -233,10 +233,10 @@ def test_sharded_lm_train_step_matches_single_device():
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
-        from repro.models import transformer as T
+        from repro._attic.models import transformer as T
         from repro.train import optimizer as O
         from repro.train.train_loop import make_train_step
-        from repro.launch.cells import shardings
+        from repro._attic.launch.cells import shardings
 
         cfg = T.LMConfig(name="t", n_layers=2, d_model=64, n_heads=4,
                          n_kv=2, d_head=16, d_ff=128, vocab=256,
@@ -279,7 +279,7 @@ def test_embed_lookup_sharded_equals_local():
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
-        from repro.models.layers import embed_lookup
+        from repro._attic.models.layers import embed_lookup
         from repro.launch.mesh import make_mesh
         mesh = make_mesh((2, 4), ("data", "model"))
         table = jax.random.normal(jax.random.PRNGKey(0), (64, 32))

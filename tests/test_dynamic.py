@@ -1,0 +1,347 @@
+"""Dynamic graphs: delta-CSR mutation, incremental repair, epoch guards.
+
+Three layers under test, matching the write-path subsystem's stack:
+
+1. :class:`repro.graph.dynamic.DynamicCSRGraph` — every mutation
+   sequence must leave ``view()`` bit-identical (indptr/indices, both
+   directions) to a ``CSRGraph`` rebuilt from the surviving edge set;
+   compaction must be content-neutral and epoch-neutral.
+2. :mod:`repro.core.incremental` — frontier-seeded repair must be
+   bit-identical (dist AND parent forest) to a from-scratch sweep on
+   every adversarial family, including deletes that disconnect whole
+   components (the Yamane–Kobayashi taint case).
+3. The serving tier — once the graph mutates, no cached artifact (LRU
+   row, landmark oracle label, betweenness vector) may answer: the
+   fake-clock test proves a stale certified answer is impossible.
+"""
+import zlib
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.engine import apsp_engine
+from repro.core.incremental import repair, sssp_state
+from repro.core.sweep import UNREACHED, derive_parents
+from repro.core.weighted import weighted_apsp
+from repro.graph.csr import CSRGraph
+from repro.graph.dynamic import DynamicCSRGraph
+from repro.serve.engine import GraphQuery, GraphService
+
+from oracles import adversarial_families, bfs_dists
+
+
+def _families():
+    return list(adversarial_families(seed=7))
+
+
+def _edge_list(dg):
+    e = dg.edges()
+    return list(zip(e[0].tolist(), e[1].tolist()))
+
+
+# --------------------------------------------------------------------------
+# 1. DynamicCSRGraph round-trips
+# --------------------------------------------------------------------------
+
+def test_insert_delete_roundtrip_matches_rebuilt_csr():
+    rng = np.random.default_rng(0)
+    n = 37
+    dg = DynamicCSRGraph.from_edges(np.array([0]), np.array([1]), n_nodes=n)
+    live = {(0, 1)}
+    for it in range(25):
+        ins = rng.integers(0, n, (rng.integers(1, 9), 2))
+        dg.insert_edges(ins[:, 0], ins[:, 1])
+        live |= {(int(u), int(v)) for u, v in ins if u != v}
+        if live and it % 3 == 2:
+            kill = [list(live)[i] for i in
+                    rng.choice(len(live), min(4, len(live)), replace=False)]
+            dg.delete_edges(np.array([u for u, _ in kill]),
+                            np.array([v for _, v in kill]))
+            live -= set(map(tuple, kill))
+        view = dg.view()
+        ref = CSRGraph.from_edges(
+            np.array([u for u, _ in sorted(live)], np.int64),
+            np.array([v for _, v in sorted(live)], np.int64), n,
+            pad_to=view.m_pad)
+        np.testing.assert_array_equal(view.indptr, ref.indptr)
+        np.testing.assert_array_equal(view.indices, ref.indices)
+        np.testing.assert_array_equal(view.indptr_t, ref.indptr_t)
+        np.testing.assert_array_equal(view.indices_t, ref.indices_t)
+        assert dg.n_edges == len(live)
+    assert dg.epoch > 0
+
+
+def test_compact_is_content_and_epoch_neutral():
+    rng = np.random.default_rng(1)
+    n = 50
+    e = rng.integers(0, n, (200, 2))
+    dg = DynamicCSRGraph.from_edges(e[:, 0], e[:, 1], n_nodes=n)
+    dg.delete_edges(e[:20, 0], e[:20, 1])
+    before = _edge_list(dg)
+    epoch = dg.epoch
+    layout = dg.layout_version
+    dg.compact()
+    assert _edge_list(dg) == before
+    assert dg.epoch == epoch            # content unchanged
+    assert dg.layout_version > layout   # layout repacked
+    assert len(dg._dead_slots) == 0
+
+
+def test_auto_compaction_triggers_on_tombstone_ratio():
+    n = 32
+    src = np.repeat(np.arange(n), 2)
+    dst = np.concatenate([(np.arange(n) + k) % n for k in (1, 2)])
+    dg = DynamicCSRGraph.from_edges(src, dst, n_nodes=n,
+                                    compact_threshold=0.25)
+    base = dg.compactions
+    dg.delete_edges(src[: n], dst[: n])  # kill half the edges
+    assert dg.compactions > base
+    ref = CSRGraph.from_edges(src[n:], dst[n:], n, pad_to=dg.view().m_pad)
+    np.testing.assert_array_equal(dg.view().indices, ref.indices)
+
+
+def test_weighted_roundtrip_and_decrease_only_insert():
+    n = 16
+    dg = DynamicCSRGraph.from_edges(
+        np.array([0, 1]), np.array([1, 2]), n_nodes=n,
+        weights=np.array([2.0, 3.0], np.float32))
+    assert dg.weighted
+    # re-insert with a HIGHER weight: no-op (min semantics, no epoch bump)
+    e0 = dg.epoch
+    dg.insert_edges(np.array([0]), np.array([1]),
+                    weights=np.array([9.0], np.float32))
+    assert dg.epoch == e0
+    # lower weight: decrease-key, epoch bumps
+    dg.insert_edges(np.array([0]), np.array([1]),
+                    weights=np.array([0.5], np.float32))
+    assert dg.epoch == e0 + 1
+    view, w = dg.view(), dg.view_weights()
+    lane = {(int(s), int(d)): float(x)
+            for s, d, x in zip(view.src, view.dst, w) if s < n}
+    assert lane[(0, 1)] == 0.5 and lane[(1, 2)] == 3.0
+
+
+def test_journal_delta_and_trim():
+    n = 8
+    dg = DynamicCSRGraph.from_edges(np.array([0]), np.array([1]), n_nodes=n)
+    e0 = dg.epoch
+    dg.insert_edges(np.array([1, 2]), np.array([2, 3]))
+    dg.delete_edges(np.array([0]), np.array([1]))
+    ins_src, ins_dst, _, del_src, del_dst = dg.delta_since(e0)
+    assert set(zip(ins_src.tolist(), ins_dst.tolist())) == {(1, 2), (2, 3)}
+    assert set(zip(del_src.tolist(), del_dst.tolist())) == {(0, 1)}
+    # net delta: an edge inserted then deleted cancels out
+    e1 = dg.epoch
+    dg.insert_edges(np.array([4]), np.array([5]))
+    dg.delete_edges(np.array([4]), np.array([5]))
+    ins_src, ins_dst, _, del_src, del_dst = dg.delta_since(e1)
+    assert ins_src.size == 0 and del_src.size == 0
+    assert dg.delta_since(-10_000) is None  # beyond the journal floor
+
+
+# --------------------------------------------------------------------------
+# 2. Incremental repair bit-identity
+# --------------------------------------------------------------------------
+
+def _dynamic_from_family(src, dst, n):
+    if len(src) == 0:
+        src, dst = np.array([0]), np.array([min(1, n - 1)])
+    return DynamicCSRGraph.from_edges(np.asarray(src, np.int64),
+                                      np.asarray(dst, np.int64), n_nodes=n)
+
+
+def _assert_repair_matches_scratch(dg, state, sources, name):
+    scratch = apsp_engine(dg.view(), sources)
+    dist_ref = np.asarray(scratch.dist)
+    par_ref = np.asarray(derive_parents(dg.view(), scratch.dist))
+    np.testing.assert_array_equal(state.dist_int(), dist_ref,
+                                  err_msg=f"{name}: dist")
+    np.testing.assert_array_equal(state.parent, par_ref,
+                                  err_msg=f"{name}: parent")
+    np.testing.assert_array_equal(
+        dist_ref, bfs_dists(dg.view(), sources), err_msg=f"{name}: oracle")
+
+
+@pytest.mark.parametrize("name,src,dst,n",
+                         _families(), ids=[f[0] for f in _families()])
+def test_repair_bit_identity_adversarial(name, src, dst, n):
+    rng = np.random.default_rng(zlib.crc32(name.encode()))
+    dg = _dynamic_from_family(src, dst, n)
+    sources = np.unique(rng.integers(0, n, min(4, n))).astype(np.int32)
+    state, _ = sssp_state(dg, sources)
+    for it in range(4):
+        ins = rng.integers(0, n, (rng.integers(1, 4), 2))
+        ins = ins[ins[:, 0] != ins[:, 1]]
+        dg.insert_edges(ins[:, 0], ins[:, 1])
+        res = repair(dg, state, inserts=(ins[:, 0], ins[:, 1]))
+        state = res.state
+        _assert_repair_matches_scratch(dg, state, sources, name)
+        es = _edge_list(dg)
+        if es and it % 2 == 1:
+            u, v = es[rng.integers(0, len(es))]
+            dg.delete_edges(np.array([u]), np.array([v]))
+            state = repair(dg, state,
+                           deletes=(np.array([u]), np.array([v]))).state
+            _assert_repair_matches_scratch(dg, state, sources, name)
+
+
+def test_repair_delete_disconnects_component():
+    # path 0->1->2->3->4 plus a bridge: deleting the bridge edge must
+    # taint (and re-unreach) everything downstream
+    src = np.array([0, 1, 2, 3])
+    dst = np.array([1, 2, 3, 4])
+    dg = _dynamic_from_family(src, dst, 5)
+    state, _ = sssp_state(dg, [0])
+    dg.delete_edges(np.array([1]), np.array([2]))
+    res = repair(dg, state, deletes=(np.array([1]), np.array([2])))
+    state = res.state
+    assert res.sweeps == 0          # tainted subtree is unreachable: free
+    d = state.dist_int()[0]
+    np.testing.assert_array_equal(d, [0, 1, UNREACHED, UNREACHED, UNREACHED])
+    _assert_repair_matches_scratch(dg, state, np.array([0], np.int32),
+                                   "disconnect")
+
+
+def test_repair_insert_reconnects_component():
+    src = np.array([0, 2, 3])
+    dst = np.array([1, 3, 4])
+    dg = _dynamic_from_family(src, dst, 5)
+    state, scratch_sweeps = sssp_state(dg, [0])
+    dg.insert_edges(np.array([1]), np.array([2]))
+    res = repair(dg, state, inserts=(np.array([1]), np.array([2])))
+    np.testing.assert_array_equal(res.state.dist_int()[0], [0, 1, 2, 3, 4])
+    assert res.sweeps > 0
+    _assert_repair_matches_scratch(dg, res.state, np.array([0], np.int32),
+                                   "reconnect")
+
+
+def test_weighted_repair_bit_identity():
+    rng = np.random.default_rng(11)
+    n = 24
+    e = rng.integers(0, n, (60, 2))
+    w = rng.uniform(0.5, 4.0, 60).astype(np.float32)
+    dg = DynamicCSRGraph.from_edges(e[:, 0], e[:, 1], n_nodes=n, weights=w)
+    sources = np.array([0, 5], np.int32)
+    state, _ = sssp_state(dg, sources)
+    for it in range(4):
+        u, v = int(rng.integers(0, n)), int(rng.integers(0, n))
+        wt = float(rng.uniform(0.1, 2.0))
+        if dg.insert_edges(np.array([u]), np.array([v]),
+                           weights=np.array([wt], np.float32)):
+            res = repair(dg, state,
+                         inserts=(np.array([u]), np.array([v]),
+                                  np.array([wt], np.float32)))
+            state = res.state
+        es = _edge_list(dg)
+        du, dv = es[rng.integers(0, len(es))]
+        dg.delete_edges(np.array([du]), np.array([dv]))
+        res = repair(dg, state, deletes=(np.array([du]), np.array([dv])))
+        state = res.state
+        ref = weighted_apsp(dg.view(), dg.view_weights(), sources)
+        np.testing.assert_array_equal(state.dist, np.asarray(ref.dist))
+
+
+def test_incremental_sssp_streaming_and_rebuild_fallback():
+    rng = np.random.default_rng(3)
+    n = 64
+    e = rng.integers(0, n, (220, 2))
+    dg = DynamicCSRGraph.from_edges(e[:, 0], e[:, 1], n_nodes=n)
+    inc = repro.IncrementalSSSP(dg, [0, 1, 2])
+    for _ in range(6):
+        ins = rng.integers(0, n, (3, 2))
+        dg.insert_edges(ins[:, 0], ins[:, 1])
+        es = _edge_list(dg)
+        u, v = es[rng.integers(0, len(es))]
+        dg.delete_edges(np.array([u]), np.array([v]))
+        inc.update()
+        ref = apsp_engine(dg.view(), inc.state.sources)
+        np.testing.assert_array_equal(inc.dist_int(), np.asarray(ref.dist))
+    assert inc.repairs > 0
+    # trim the journal past the sync point: update() must full-rebuild
+    inc2 = repro.IncrementalSSSP(dg, [0])
+    for _ in range(600):   # overflow the bounded journal
+        dg.insert_edges(np.array([rng.integers(0, n)]),
+                        np.array([rng.integers(0, n)]))
+    inc2.update()
+    assert inc2.rebuilds > 0
+    ref = apsp_engine(dg.view(), inc2.state.sources)
+    np.testing.assert_array_equal(inc2.dist_int(), np.asarray(ref.dist))
+
+
+# --------------------------------------------------------------------------
+# 3. Serving-tier epoch invalidation
+# --------------------------------------------------------------------------
+
+def _ring_dynamic(n=48):
+    src = np.arange(n)
+    return DynamicCSRGraph.from_edges(src, (src + 1) % n, n_nodes=n)
+
+
+def test_stale_oracle_answer_impossible_fake_clock():
+    """After a mutation, neither the row cache nor the landmark oracle
+    may certify an answer computed against the old graph — even with
+    zero wall-clock time elapsing between mutation and query."""
+    t = [0.0]
+    dg = _ring_dynamic(48)
+    svc = GraphService(dg, max_batch=8, n_landmarks=6, row_cache_size=64,
+                       clock=lambda: t[0])
+    q0 = GraphQuery(qid=0, source=0, target=24)
+    svc.submit(q0)
+    svc.flush()
+    assert q0.hops == 24
+    # warm both tiers: second identical query must come from a cache
+    q1 = GraphQuery(qid=1, source=0, target=24)
+    svc.submit(q1)
+    assert q1.certified and q1.served_by in ("cache", "oracle")
+    # mutate: shortcut straight to the antipode; the virtual clock does
+    # not advance, so any staleness check keyed on time would pass here
+    dg.insert_edges(np.array([0]), np.array([24]))
+    q2 = GraphQuery(qid=2, source=0, target=24)
+    svc.submit(q2)
+    svc.flush()
+    assert q2.hops == 1, (q2.hops, q2.served_by)
+    assert svc.epoch_invalidations == 1
+    # the oracle rebuilt against the fresh epoch, lazily
+    assert svc.oracle.prepared.epoch == dg.epoch
+    # betweenness cache: analytics answer reflects the new edge
+    qa = GraphQuery(qid=3, source=0, analytics=("betweenness",))
+    svc.submit(qa)
+    svc.flush()
+    assert qa.analytics_result is not None
+
+
+def test_tick_entry_point_also_invalidates():
+    t = [0.0]
+    dg = _ring_dynamic(32)
+    svc = GraphService(dg, max_batch=4, clock=lambda: t[0])
+    q0 = GraphQuery(qid=0, source=0, deadline=0.5)
+    svc.submit(q0)
+    dg.insert_edges(np.array([0]), np.array([16]))
+    t[0] = 10.0   # deadline long gone -> tick must surface, not serve
+    out = svc.tick()
+    assert svc.epoch_invalidations == 1
+    assert q0 in out and q0.expired and q0.served_by == "expired"
+    # fill one bucket to max_batch so the next tick serves it whole
+    qs = [GraphQuery(qid=1 + i, source=i, target=(i + 16) % 32,
+                     deadline=99.0) for i in range(4)]
+    for q in qs:
+        svc.submit(q)
+    svc.tick()
+    assert qs[0].hops == 1          # sees the inserted shortcut
+    assert all(q.served_by == "sweep" for q in qs)
+
+
+def test_facade_serve_is_epoch_guarded():
+    dg = _ring_dynamic(32)
+    h = repro.prepare(dg)
+    svc = h.serve(max_batch=8, clock=lambda: 0.0)
+    q = GraphQuery(qid=0, source=0)
+    svc.submit(q)
+    svc.flush()
+    d_before = np.array(q.dist)
+    h.insert_edges([0], [16])
+    q2 = GraphQuery(qid=1, source=0)
+    svc.submit(q2)
+    svc.flush()
+    assert q2.dist[16] == 1 and d_before[16] == 16

@@ -172,9 +172,9 @@ def test_to_pull_packed_roundtrip():
 
 def test_graph_queries_served_alongside_decode():
     import jax
-    from repro.models import transformer as T
-    from repro.serve import (GraphQuery, GraphService, Request,
-                             ServingEngine)
+    from repro._attic.models import transformer as T
+    from repro._attic.lm_serving import Request, ServingEngine
+    from repro.serve import GraphQuery, GraphService
     cfg = T.LMConfig(name="t", n_layers=1, d_model=32, n_heads=2, n_kv=1,
                      d_head=16, d_ff=64, vocab=64)
     params = T.init_params(jax.random.PRNGKey(0), cfg)

@@ -5,7 +5,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.models import gnn as G
+from repro._attic.models import gnn as G
 
 
 def test_chunked_equals_unchunked():

@@ -8,11 +8,11 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_arch, list_archs, shapes_for, all_cells
-from repro.models import gnn as G
-from repro.models import recsys as R
-from repro.models import transformer as T
-from repro.launch.train import reduced_lm
+from repro._attic.configs import get_arch, list_archs, shapes_for, all_cells
+from repro._attic.models import gnn as G
+from repro._attic.models import recsys as R
+from repro._attic.models import transformer as T
+from repro._attic.launch.train import reduced_lm
 
 LM_ARCHS = [a for a in list_archs() if get_arch(a)[0] == "lm"]
 GNN_ARCHS = [a for a in list_archs() if get_arch(a)[0] == "gnn"]

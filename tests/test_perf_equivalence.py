@@ -5,8 +5,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.models import layers as L
-from repro.models import transformer as T
+from repro._attic.models import layers as L
+from repro._attic.models import transformer as T
 
 
 def test_mla_absorption_equivalence():

@@ -21,7 +21,7 @@ except ImportError:
 from repro.graph.csr import CSRGraph
 from repro.core import (sovm_sssp, bovm_sssp, pack_bits, unpack_bits,
                         popcount)
-from repro.models.recsys import embedding_bag, embedding_bag_ragged
+from repro._attic.models.recsys import embedding_bag, embedding_bag_ragged
 
 from oracles import bfs_dist
 

@@ -3,8 +3,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.models import transformer as T
-from repro.serve import Request, ServingEngine
+from repro._attic.models import transformer as T
+from repro._attic.lm_serving import Request, ServingEngine
 
 CFG = T.LMConfig(name="t", n_layers=2, d_model=64, n_heads=4, n_kv=2,
                  d_head=16, d_ff=128, vocab=96)
