@@ -307,28 +307,36 @@ class DynamicCSRGraph:
 
         Returns ``(ins_src, ins_dst, ins_w, del_src, del_dst)`` numpy
         arrays: the edges now live that were inserted/updated after
-        ``since_epoch``, and the edges deleted after it.  Net of
-        round-trips: an edge deleted then re-inserted appears only as an
-        insert at its current weight, and an edge *created* after
-        ``since_epoch`` and deleted again cancels out entirely (its
-        first journal entry records whether the insert created the edge
-        or merely decreased a live weight)."""
+        ``since_epoch``, and the edges deleted after it.  An edge
+        *created* after ``since_epoch`` and deleted again cancels out
+        entirely (its first journal entry records whether the insert
+        created the edge or merely decreased a live weight).  An edge
+        that existed at ``since_epoch`` and was deleted at any point
+        appears in the delete list even when a later insert revived it
+        (then also in the insert list, at its current weight): the
+        revived weight may exceed the old one, so consumers must taint
+        the state built on the old edge before applying the insert —
+        netting the round-trip to a bare insert would leave distances
+        that relied on the cheaper edge stale."""
         if since_epoch < self._journal_floor:
             return None
-        net = {}   # (u, v) -> [first_op_created_edge, last_kind, last_w]
+        # (u, v) -> [first_op_created_edge, last_kind, last_w, saw_delete]
+        net = {}
         for ep, kind, edges in self._journal:
             if ep <= since_epoch:
                 continue
             for (u, v, w, created) in edges:
                 cur = net.get((u, v))
                 if cur is None:
-                    net[(u, v)] = [kind == "insert" and created, kind, w]
+                    net[(u, v)] = [kind == "insert" and created, kind, w,
+                                   kind == "delete"]
                 else:
                     cur[1], cur[2] = kind, w
-        ins = [(u, v, w) for (u, v), (_, k, w) in net.items()
+                    cur[3] = cur[3] or kind == "delete"
+        ins = [(u, v, w) for (u, v), (_, k, w, _) in net.items()
                if k == "insert"]
-        dels = [(u, v) for (u, v), (fc, k, _) in net.items()
-                if k == "delete" and not fc]
+        dels = [(u, v) for (u, v), (fc, _, _, sd) in net.items()
+                if sd and not fc]
         ins_src = np.array([e[0] for e in ins], np.int64)
         ins_dst = np.array([e[1] for e in ins], np.int64)
         ins_w = np.array([e[2] for e in ins], np.float32)

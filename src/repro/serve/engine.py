@@ -542,7 +542,9 @@ class GraphService:
                 live.append(q)
         if not live:
             return batch
-        t0 = time.monotonic()
+        # measured with the injected clock so the EWMA below shares a
+        # time scale with deadlines/ripeness under a virtual clock
+        t0 = self._clock()
         analytics = [q for q in live if q.analytics is not None]
         unweighted = [q for q in live
                       if not q.weighted and q.analytics is None]
@@ -589,7 +591,7 @@ class GraphService:
         # EWMA of the wall cost of one sweep flush — feeds tick()'s
         # deadline-headroom estimate
         self._flush_est = 0.5 * self._flush_est + \
-            0.5 * (time.monotonic() - t0)
+            0.5 * (self._clock() - t0)
         now = self._clock()
         for q in live:
             q.t_done = now

@@ -140,6 +140,43 @@ def test_journal_delta_and_trim():
     assert dg.delta_since(-10_000) is None  # beyond the journal floor
 
 
+def test_delete_reinsert_higher_weight_surfaces_delete():
+    """REGRESSION: delta_since must not net a delete + re-insert of a
+    pre-existing edge into a bare insert.  The revived weight can exceed
+    the old one, so the repair has to taint the subtree built on the
+    cheaper edge first — otherwise IncrementalSSSP serves stale,
+    too-small distances."""
+    n = 4
+    dg = DynamicCSRGraph.from_edges(
+        np.array([0, 1]), np.array([1, 2]), n_nodes=n,
+        weights=np.array([1.0, 1.0], np.float32))
+    inc = repro.IncrementalSSSP(dg, [0])
+    assert float(inc.dist[0, 2]) == 2.0
+    e0 = dg.epoch
+    dg.delete_edges(np.array([1]), np.array([2]))
+    dg.insert_edges(np.array([1]), np.array([2]),
+                    weights=np.array([5.0], np.float32))
+    # the round-trip must appear in BOTH lists: delete (taints the old
+    # subtree) and insert (at the current, higher weight)
+    ins_src, ins_dst, ins_w, del_src, del_dst = dg.delta_since(e0)
+    assert list(zip(ins_src.tolist(), ins_dst.tolist())) == [(1, 2)]
+    assert ins_w.tolist() == [5.0]
+    assert list(zip(del_src.tolist(), del_dst.tolist())) == [(1, 2)]
+    res = inc.update()
+    assert res is not None and res.tainted > 0
+    ref = weighted_apsp(dg.view(), dg.view_weights(), inc.state.sources)
+    np.testing.assert_array_equal(inc.dist, np.asarray(ref.dist))
+    assert float(inc.dist[0, 2]) == 6.0     # not the stale 2.0
+    # an edge CREATED inside the window still nets out on round-trips:
+    # deleting it again needs no taint (the synced state never saw it)
+    e1 = dg.epoch
+    dg.insert_edges(np.array([2]), np.array([3]),
+                    weights=np.array([1.0], np.float32))
+    dg.delete_edges(np.array([2]), np.array([3]))
+    ins_src, _, _, del_src, _ = dg.delta_since(e1)
+    assert ins_src.size == 0 and del_src.size == 0
+
+
 # --------------------------------------------------------------------------
 # 2. Incremental repair bit-identity
 # --------------------------------------------------------------------------
