@@ -60,10 +60,17 @@ _HARD_FAMILY_FIELDS = ("n_nodes", "n_edges", "n_sources", "sweeps",
                        # are exact
                        "repair_sweeps", "scratch_sweeps",
                        "repair_equals_scratch", "n_epochs",
-                       "n_compactions", "query_checksum")
+                       "n_compactions", "query_checksum",
+                       # resumable jobs: full-run checksums and the
+                       # resumed-chunk accounting are exact given the
+                       # seeds (bit-identity full-vs-resumed is asserted
+                       # in-bench before the JSON is written)
+                       "chunks_total", "dist_checksum",
+                       "checkpoints_written", "resumed_chunks",
+                       "recomputed_chunks", "resume_equals_full")
 _BENCHES = ("bench_apsp", "bench_weighted", "bench_sharded",
             "bench_centrality", "bench_batching", "bench_serving",
-            "bench_dynamic")
+            "bench_dynamic", "bench_resume")
 
 
 def load(path: str) -> Dict:

@@ -37,6 +37,10 @@ work:
                         (bit-identity and repair_sweeps < scratch_sweeps
                         asserted in-bench; sweep totals, epoch counters
                         and query checksum hard-gated; JSON)
+  * bench_resume      — resumable-job layer: checkpointed counting-APSP
+                        job vs kill-at-half + resume (bit-identity
+                        asserted in-bench; dist/sigma checksums and the
+                        resumed-chunk accounting hard-gated; JSON)
 """
 from __future__ import annotations
 
@@ -49,9 +53,9 @@ import time
 import jax
 
 from . import (bench_apsp, bench_batching, bench_centrality,
-               bench_complexity, bench_dynamic, bench_memory, bench_scaling,
-               bench_serving, bench_sharded, bench_sssp, bench_weighted,
-               regression)
+               bench_complexity, bench_dynamic, bench_memory, bench_resume,
+               bench_scaling, bench_serving, bench_sharded, bench_sssp,
+               bench_weighted, regression)
 
 
 def _csv_rows_to_records(rows):
@@ -99,6 +103,8 @@ def main() -> None:
                                    csv=rows)
     dynamic = bench_dynamic.run(quick=args.quick,
                                 repeats=2 if args.quick else 3, csv=rows)
+    resume = bench_resume.run(quick=args.quick,
+                              repeats=2 if args.quick else 3, csv=rows)
     total = time.time() - t0
     print("\n".join(rows))
     print(f"# total {total:.1f}s", file=sys.stderr)
@@ -119,6 +125,7 @@ def main() -> None:
         "bench_batching": batching,
         "bench_serving": serving,
         "bench_dynamic": dynamic,
+        "bench_resume": resume,
     }
     if args.out:
         with open(args.out, "w") as f:

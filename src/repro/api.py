@@ -156,15 +156,39 @@ class DawnGraph:
                 f"unknown semiring {semiring!r}; one of {SEMIRING_NAMES}")
 
     def apsp(self, sources: Optional[Sequence[int]] = None, *,
-             semiring: str = "boolean", mesh=None):
+             semiring: str = "boolean", mesh=None,
+             checkpoint_dir: Optional[str] = None,
+             checkpoint_interval: int = 1,
+             chunk_size: Optional[int] = None, resume: bool = True,
+             on_chunk=None):
         """Batched multi-source shortest paths (default: all sources).
 
         Returns the dispatched engine's native result — ``ApspResult``
         (boolean), ``WeightedApspResult`` (tropical), ``CountingResult``
         (counting) or ``ShardedApspResult`` (any semiring + ``mesh=``) —
         all carrying ``.dist`` plus sweep counters.
+
+        ``checkpoint_dir=`` routes through the resumable-job layer
+        (:func:`repro.core.jobs.run_sweep_job`): the run is chunked into
+        ``chunk_size`` source tiles, checkpointed every
+        ``checkpoint_interval`` chunks, and a rerun of the same call
+        resumes from the newest intact checkpoint (``resume=False``
+        starts over).  Returns a :class:`repro.core.jobs.JobResult`
+        carrying the resume counters (``chunks_restored``,
+        ``restored_step``, ``corrupt_skipped``, ...) alongside the
+        distances.
         """
         self._check_semiring(semiring)
+        if checkpoint_dir is not None or on_chunk is not None:
+            from .core.jobs import run_sweep_job
+            return run_sweep_job(
+                self.graph, sources, workload=semiring,
+                weights=self._lane_weights()
+                if semiring == "tropical" else None,
+                mesh=mesh, options=self.options, chunk_size=chunk_size,
+                checkpoint_dir=checkpoint_dir,
+                checkpoint_interval=checkpoint_interval, resume=resume,
+                on_chunk=on_chunk)
         if mesh is not None:
             # config is baked into the prepared operands (_sharded_operands)
             return _sharded_apsp(self._sharded_operands(semiring, mesh),

@@ -30,6 +30,7 @@ from .engine import (EngineConfig, SweepStats, ApspResult, PreparedGraph,
                      prepare_graph, frontier_stats, sweep_costs,
                      choose_direction, measure_sweep_costs, apsp_engine,
                      apsp_engine_blocks)
+from .jobs import (JobMismatchError, JobResult, WORKLOADS, run_sweep_job)
 
 __all__ = [
     "UNREACHED", "pack_bits", "unpack_bits", "popcount", "one_hot_frontier",
@@ -59,6 +60,7 @@ __all__ = [
     "SweepStats", "ApspResult", "PreparedGraph", "prepare_graph",
     "frontier_stats", "sweep_costs", "choose_direction",
     "measure_sweep_costs", "apsp_engine", "apsp_engine_blocks",
+    "JobMismatchError", "JobResult", "WORKLOADS", "run_sweep_job",
 ]
 
 # --- deprecated caller-facing entry points --------------------------------

@@ -130,6 +130,11 @@ class ShardedApspResult(NamedTuple):
     direction_counts: jax.Array  # (2,) int32 — dense/sparse sweeps run
     # (S, n) f32 shortest-path counts — counting semiring only, else None
     sigma: Optional[jax.Array] = None
+    # f32 Eq. 10 useful-work counter, psum'd over the data shards (the
+    # per-shard partials are exact integer sums, so the total is
+    # independent of the mesh shape); 0 on the fused-kernel path, which
+    # never materializes per-sweep frontiers to weigh against ``deg``
+    edges_touched: Optional[jax.Array] = None
 
 
 @dataclasses.dataclass
@@ -148,6 +153,7 @@ class ShardedOperands:
     dst_l: jax.Array         #   global ids, CSR sentinel n
     w_l: jax.Array           # tropical lane weights (+inf pad); (1,) dummy
     w_min: jax.Array         # scalar f32 min finite edge weight (0 dummy)
+    deg: jax.Array           # (n_pad,) f32 out-degrees, replicated (0 pad)
 
 
 def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -230,9 +236,14 @@ def prepare_sharded(g: CSRGraph, mesh: Mesh, *, weights=None,
                 w_l = jnp.asarray(lanes)
             m_local = g.m_pad
 
+    deg = jnp.zeros(n_pad, jnp.float32).at[: g.n_nodes].set(
+        jnp.asarray(g.out_degrees(), jnp.float32))
+    deg = jax.device_put(deg, NamedSharding(mesh, P()))
+
     return ShardedOperands(graph=g, mesh=mesh, config=config, n_pad=n_pad,
                            n_shards=C, m_local=m_local, dense_op=dense_op,
-                           src_l=src_l, dst_l=dst_l, w_l=w_l, w_min=w_min)
+                           src_l=src_l, dst_l=dst_l, w_l=w_l, w_min=w_min,
+                           deg=deg)
 
 
 # --------------------------------------------------------------------------
@@ -250,7 +261,7 @@ def _make_runner(mesh: Mesh, cfg: ShardedConfig, n_pad: int, n_real: int,
     nk = n_pad // C
     all_axes = tuple(mesh.axis_names)
 
-    def run_local(dense_l, src_e, dst_e, w_e, w_min, f0_l, dist0_l,
+    def run_local(dense_l, src_e, dst_e, w_e, w_min, deg_l, f0_l, dist0_l,
                   sigma0_l, steps):
         if src_e.ndim == 2:              # (1, e_pad) model-axis block row
             src_e, dst_e = src_e[0], dst_e[0]
@@ -471,7 +482,7 @@ def _make_runner(mesh: Mesh, cfg: ShardedConfig, n_pad: int, n_real: int,
 
         state0 = (dist0_l, sigma0_l) if counting else dist0_l
         st = S.sweep_loop(forms, S.make_state(f0_l, state0, n_forms=2),
-                          max_steps=steps, choose=choose,
+                          max_steps=steps, choose=choose, deg=deg_l,
                           forced_dir=0 if cfg.mode in ("auto", "dense")
                           else 1,
                           converged=converged,
@@ -481,7 +492,13 @@ def _make_runner(mesh: Mesh, cfg: ShardedConfig, n_pad: int, n_real: int,
             dist_out, sigma_out = st.dist
         else:
             dist_out, sigma_out = st.dist, sigma0_l
-        return dist_out, sigma_out, st.step, st.dir_counts
+        # per-shard partials are exact integer sums in f32, so the
+        # psum'd Eq. 10 counter matches any row partition bit-for-bit;
+        # the frontier rows are replicated over MODEL, so the dp-psum
+        # already agrees on every model shard
+        edges = jax.lax.psum(st.edges_touched, dp) if dp \
+            else st.edges_touched
+        return dist_out, sigma_out, st.step, st.dir_counts, edges
 
     row_spec = P(dp, None) if dp else P(None, None)
     dense_spec = P(MODEL_AXIS, None) \
@@ -492,13 +509,13 @@ def _make_runner(mesh: Mesh, cfg: ShardedConfig, n_pad: int, n_real: int,
 
     sharded = compat.shard_map(
         run_local, mesh=mesh,
-        in_specs=(dense_spec, lane_spec, lane_spec, w_spec, P(),
+        in_specs=(dense_spec, lane_spec, lane_spec, w_spec, P(), P(),
                   row_spec, row_spec, row_spec, P()),
-        out_specs=(row_spec, row_spec, P(), P()),
+        out_specs=(row_spec, row_spec, P(), P(), P()),
         check_vma=False)
 
     @jax.jit
-    def runner(dense_op, src_l, dst_l, w_l, w_min, sources, n_valid,
+    def runner(dense_op, src_l, dst_l, w_l, w_min, deg, sources, n_valid,
                steps):
         s_pad = sources.shape[0]
         f0 = one_hot_frontier(sources, n_pad, dtype=jnp.int8)
@@ -518,7 +535,7 @@ def _make_runner(mesh: Mesh, cfg: ShardedConfig, n_pad: int, n_real: int,
         else:
             # inert row-sharded dummy so the shard_map arity stays fixed
             sigma0 = jnp.zeros((s_pad, 1), jnp.float32)
-        return sharded(dense_op, src_l, dst_l, w_l, w_min, f0, dist0,
+        return sharded(dense_op, src_l, dst_l, w_l, w_min, deg, f0, dist0,
                        sigma0, steps)
 
     return runner
@@ -577,11 +594,12 @@ def sharded_apsp(g: Union[CSRGraph, ShardedOperands],
     use_kernel, interpret = _resolve_kernel(cfg)
     runner = _make_runner(ops.mesh, cfg, ops.n_pad, n, ops.m_local,
                           use_kernel, interpret, ops.n_shards)
-    dist, sigma, step, dir_counts = runner(
-        ops.dense_op, ops.src_l, ops.dst_l, ops.w_l, ops.w_min,
+    dist, sigma, step, dir_counts, edges = runner(
+        ops.dense_op, ops.src_l, ops.dst_l, ops.w_l, ops.w_min, ops.deg,
         jnp.asarray(padded), jnp.int32(len(srcs)),
         jnp.int32(cfg.max_sweeps or n))
     return ShardedApspResult(dist=dist[: len(srcs), :n], sweeps=step,
                              direction_counts=dir_counts,
                              sigma=sigma[: len(srcs), :n]
-                             if cfg.counting else None)
+                             if cfg.counting else None,
+                             edges_touched=edges)

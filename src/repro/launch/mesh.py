@@ -40,6 +40,28 @@ def make_test_mesh(n_devices: int | None = None, model: int = 2):
     return make_mesh((n // model, model), ("data", "model"))
 
 
+def mesh_from_plan(plan, devices=None):
+    """Concrete ``jax.sharding.Mesh`` from a fault-tolerance
+    :class:`repro.train.fault_tolerance.ElasticPlan` over whatever
+    devices are alive now — the elastic-restart walk is
+    ``plan_remesh(alive_chips, ...)`` → ``mesh_from_plan(plan)`` →
+    ``checkpoint.restore(..., shardings=on the new mesh)``.
+
+    Builds the Mesh directly from the first ``plan.n_chips`` devices (a
+    shrunken plan must work in the same process that drove the larger
+    mesh, so it cannot assume the plan covers every visible device)."""
+    import numpy as np
+    devs = list(jax.devices()) if devices is None else list(devices)
+    if len(devs) < plan.n_chips:
+        raise ValueError(
+            f"elastic plan needs {plan.n_chips} devices, "
+            f"only {len(devs)} visible")
+    arr = np.empty(plan.n_chips, dtype=object)
+    arr[:] = devs[: plan.n_chips]
+    return jax.sharding.Mesh(arr.reshape(plan.mesh_shape),
+                             plan.axis_names)
+
+
 def dp_axes(mesh) -> Tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a != "model")
 

@@ -1,13 +1,19 @@
-"""Checkpointing: manifest + per-leaf .npy shards, async writes, integrity
-hashes, resume, and re-mesh on restore (elastic restart).
+"""Checkpointing: manifest + per-leaf raw-bytes shards, async writes,
+integrity hashes, resume, and re-mesh on restore (elastic restart).
 
 Layout:
-    <dir>/step_000123/
-        MANIFEST.json     {step, leaves: {path: {file, shape, dtype, sha256}}}
-        0000.npy ...
-A checkpoint directory is atomic: written to ``.tmp`` then renamed, so a
-crash mid-write never corrupts the latest-pointer.  ``latest_step`` scans
-complete checkpoints only.
+    <dir>/step_000000123/
+        MANIFEST.json     {step, meta?, leaves: {path: {file, shape,
+                           dtype, sha256}}}
+        0000.bin ...      raw leaf bytes (bf16-safe; dtype+shape come
+                           from the manifest, not a container format)
+A checkpoint directory is atomic: written to ``.tmp`` then renamed — and
+any stale ``.tmp`` left by a crashed earlier write is purged first, never
+merged — so a crash mid-write never corrupts the latest-pointer.
+``latest_step``/``all_steps`` scan complete checkpoints only.  ``meta``
+is an optional JSON-serializable job-identity blob embedded in the
+manifest; the resumable-job layer (:mod:`repro.core.jobs`) uses it to
+refuse resuming a checkpoint written by a different job.
 """
 from __future__ import annotations
 
@@ -28,17 +34,29 @@ def _leaf_paths(tree) -> list[Tuple[str, Any]]:
 
 
 def save(ckpt_dir: str, step: int, tree, *, blocking: bool = True,
-         keep: int = 3) -> threading.Thread | None:
-    """Save pytree. ``blocking=False`` hands the host copy to a writer
-    thread (device->host transfer happens before returning so training can
-    donate buffers immediately)."""
-    host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+         keep: int = 3, meta: Optional[dict] = None
+         ) -> threading.Thread | None:
+    """Save pytree. ``blocking=False`` hands a host *snapshot* to a writer
+    thread (device->host transfer AND a defensive copy happen before
+    returning, so the caller may donate or mutate its buffers
+    immediately).  ``meta`` (JSON-serializable) is embedded in the
+    manifest — job identity for resume checks."""
+    # np.array(copy=True), not np.asarray: for a leaf that is already a
+    # host ndarray, asarray is a no-copy view — the async writer would
+    # read a buffer the caller keeps mutating (a torn checkpoint).
+    host_tree = jax.tree.map(
+        lambda x: np.array(jax.device_get(x), copy=True), tree)
 
     def write():
         final = os.path.join(ckpt_dir, f"step_{step:09d}")
         tmp = final + ".tmp"
-        os.makedirs(tmp, exist_ok=True)
+        # a stale .tmp from a crashed earlier write would silently merge
+        # its leftover leaf files into this checkpoint: purge, never merge
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
         manifest = {"step": step, "leaves": {}}
+        if meta is not None:
+            manifest["meta"] = meta
         for i, (path, leaf) in enumerate(_leaf_paths(host_tree)):
             fname = f"{i:04d}.bin"
             fpath = os.path.join(tmp, fname)
@@ -88,6 +106,14 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def read_manifest(ckpt_dir: str, step: int) -> dict:
+    """The checkpoint's MANIFEST.json: step, optional ``meta`` job
+    identity, and the per-leaf {file, shape, dtype, sha256} table."""
+    d = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(d, "MANIFEST.json")) as f:
+        return json.load(f)
+
+
 def restore(ckpt_dir: str, step: int, like, *, verify: bool = True,
             shardings=None):
     """Restore into the structure of ``like``.  ``shardings`` (optional
@@ -95,8 +121,7 @@ def restore(ckpt_dir: str, step: int, like, *, verify: bool = True,
     mesh — this is the elastic-restart path: a checkpoint written on a
     512-chip mesh restores onto whatever mesh is alive now."""
     d = os.path.join(ckpt_dir, f"step_{step:09d}")
-    with open(os.path.join(d, "MANIFEST.json")) as f:
-        manifest = json.load(f)
+    manifest = read_manifest(ckpt_dir, step)
 
     import ml_dtypes  # jax dependency; provides bfloat16 etc.
     paths = [p for p, _ in _leaf_paths(like)]
@@ -129,22 +154,53 @@ def restore(ckpt_dir: str, step: int, like, *, verify: bool = True,
 
 
 class CheckpointHook:
-    """Training-loop hook: async save every ``interval`` steps."""
+    """Async checkpoint writer with single-writer discipline.
 
-    def __init__(self, ckpt_dir: str, interval: int = 100, keep: int = 3):
+    ``__call__`` is the training-loop hook (save every ``interval``
+    steps); ``submit`` saves unconditionally — the resumable-job layer
+    (:mod:`repro.core.jobs`) drives it at chunk boundaries.  At most one
+    writer thread is ever in flight: ``policy="join"`` blocks until the
+    previous write lands, ``policy="skip"`` drops the new snapshot
+    instead (counted in ``skipped``) so a slow filesystem never stalls
+    the sweep loop.  ``pending`` exposes the in-flight thread; call
+    ``flush()`` before shutdown so the last write is durable.
+    """
+
+    def __init__(self, ckpt_dir: str, interval: int = 100, keep: int = 3,
+                 policy: str = "join"):
+        if policy not in ("join", "skip"):
+            raise ValueError(f"policy must be 'join' or 'skip': {policy!r}")
         self.dir = ckpt_dir
         self.interval = interval
         self.keep = keep
+        self.policy = policy
+        self.written = 0
+        self.skipped = 0
         self._pending: threading.Thread | None = None
+
+    @property
+    def pending(self) -> threading.Thread | None:
+        """The in-flight writer thread (None when idle)."""
+        return self._pending
+
+    def submit(self, step: int, tree, *, meta: Optional[dict] = None
+               ) -> bool:
+        """Start an async save of ``tree`` at ``step``.  Returns False iff
+        ``policy="skip"`` dropped it because a write is still in flight."""
+        if self._pending is not None:
+            if self.policy == "skip" and self._pending.is_alive():
+                self.skipped += 1
+                return False
+            self._pending.join()        # one in-flight write at a time
+        self._pending = save(self.dir, step, tree, blocking=False,
+                             keep=self.keep, meta=meta)
+        self.written += 1
+        return True
 
     def __call__(self, step, params, opt_state, metrics):
         if (step + 1) % self.interval:
             return
-        if self._pending is not None:
-            self._pending.join()        # one in-flight write at a time
-        self._pending = save(self.dir, step + 1,
-                             {"params": params, "opt": opt_state},
-                             blocking=False, keep=self.keep)
+        self.submit(step + 1, {"params": params, "opt": opt_state})
 
     def flush(self):
         if self._pending is not None:

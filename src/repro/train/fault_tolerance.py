@@ -24,7 +24,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import defaultdict, deque
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -37,21 +37,32 @@ class HostInfo:
 
 
 class HeartbeatMonitor:
+    """``clock`` is the injectable time source (default
+    ``time.monotonic``); virtual-clock tests must pass their own so beat
+    and sweep timestamps never mix time scales."""
+
     def __init__(self, n_hosts: int, interval_s: float = 10.0,
-                 dead_after: int = 3):
-        self.hosts = {i: HostInfo(i) for i in range(n_hosts)}
+                 dead_after: int = 3,
+                 clock: Callable[[], float] = time.monotonic):
+        self.clock = clock
+        # last_beat starts at the construction-time clock reading, NOT
+        # the HostInfo default of 0.0: against a monotonic clock,
+        # now - 0.0 is the machine uptime, so a fresh monitor's first
+        # sweep() would declare every host dead before any beat arrived.
+        now = clock()
+        self.hosts = {i: HostInfo(i, last_beat=now) for i in range(n_hosts)}
         self.interval = interval_s
         self.dead_after = dead_after
 
     def beat(self, host_id: int, t: Optional[float] = None) -> None:
         h = self.hosts[host_id]
-        h.last_beat = time.monotonic() if t is None else t
+        h.last_beat = self.clock() if t is None else t
         h.missed = 0
         h.alive = True
 
     def sweep(self, now: Optional[float] = None) -> List[int]:
         """Returns newly-dead host ids."""
-        now = time.monotonic() if now is None else now
+        now = self.clock() if now is None else now
         newly_dead = []
         for h in self.hosts.values():
             if not h.alive:
@@ -69,24 +80,42 @@ class HeartbeatMonitor:
 
 
 class StragglerDetector:
-    """Median + MAD outlier rule over a sliding window of step times."""
+    """Median + MAD outlier rule over a sliding window of step times.
+
+    ``clock`` is the injectable time source (same convention as
+    :class:`HeartbeatMonitor`).  ``stale_after`` (seconds, optional)
+    drops hosts whose last sample is older than that from ``classify``:
+    a dead host otherwise keeps its final step time in the window
+    forever, polluting the median every call."""
 
     def __init__(self, window: int = 32, threshold: float = 4.0,
-                 evict_after: int = 16):
+                 evict_after: int = 16,
+                 clock: Callable[[], float] = time.monotonic,
+                 stale_after: Optional[float] = None):
         self.window = window
         self.threshold = threshold
         self.evict_after = evict_after
+        self.clock = clock
+        self.stale_after = stale_after
         self.times: Dict[int, deque] = defaultdict(
             lambda: deque(maxlen=window))
+        self.last_seen: Dict[int, float] = {}
         self.strikes: Dict[int, int] = defaultdict(int)
 
-    def record(self, host_id: int, step_time_s: float) -> None:
+    def record(self, host_id: int, step_time_s: float,
+               t: Optional[float] = None) -> None:
         self.times[host_id].append(step_time_s)
+        self.last_seen[host_id] = self.clock() if t is None else t
 
-    def classify(self) -> Tuple[List[int], List[int]]:
+    def classify(self, now: Optional[float] = None
+                 ) -> Tuple[List[int], List[int]]:
         """Returns (stragglers, evictions)."""
         import statistics
         latest = {h: t[-1] for h, t in self.times.items() if t}
+        if self.stale_after is not None:
+            now = self.clock() if now is None else now
+            latest = {h: v for h, v in latest.items()
+                      if now - self.last_seen.get(h, now) <= self.stale_after}
         if len(latest) < 3:
             return [], []
         med = statistics.median(latest.values())
@@ -150,9 +179,10 @@ class FaultTolerantRunner:
             self.plan = plan
 
     def __init__(self, n_hosts: int, model_parallel: int, pods: int = 1,
-                 chips_per_host: int = 4, ckpt_dir: str = ""):
-        self.monitor = HeartbeatMonitor(n_hosts)
-        self.detector = StragglerDetector()
+                 chips_per_host: int = 4, ckpt_dir: str = "",
+                 clock: Callable[[], float] = time.monotonic):
+        self.monitor = HeartbeatMonitor(n_hosts, clock=clock)
+        self.detector = StragglerDetector(clock=clock)
         self.model_parallel = model_parallel
         self.pods = pods
         self.chips_per_host = chips_per_host
@@ -162,7 +192,7 @@ class FaultTolerantRunner:
                 now: Optional[float] = None) -> None:
         for h, t in host_times.items():
             self.monitor.beat(h, now)
-            self.detector.record(h, t)
+            self.detector.record(h, t, now)
         dead = self.monitor.sweep(now)
         _, evict = self.detector.classify()
         if dead or evict:

@@ -232,3 +232,39 @@ def test_dynamic_repair_fields_gate_hard():
     assert failures == []
     failures, _ = compare(agg(), agg())
     assert failures == []
+
+
+def test_resume_job_fields_gate_hard():
+    """bench_resume's full-run checksums and resumed-chunk accounting are
+    exact given the seeds (bit-identity of the resumed job is asserted
+    in-bench): any drift — different distances, different path counts, a
+    lost checkpoint, or a resume that recomputed the wrong tail — fails
+    hard, while the full/resume timings ride the generous median gate."""
+    def agg(dist=48000, sigma=62910.0, written=4, restored=2,
+            recomputed=2, equal=True, t=0.3):
+        out = _aggregate()
+        out["bench_resume"] = {"families": {"grid_road": {
+            "n_nodes": 1024, "n_edges": 3968, "n_sources": 32,
+            "chunks_total": 4, "sweeps": 63,
+            "dist_checksum": dist, "sigma_checksum": sigma,
+            "checkpoints_written": written,
+            "resumed_chunks": restored, "recomputed_chunks": recomputed,
+            "resume_equals_full": equal,
+            "t_full": t * 0.9, "t_full_median": t,
+            "t_resume": t * 0.5, "t_resume_median": t * 0.6,
+        }}}
+        return out
+    for kwargs, field in ((dict(dist=47999), "dist_checksum"),
+                          (dict(sigma=1.0), "sigma_checksum"),
+                          (dict(written=3), "checkpoints_written"),
+                          (dict(restored=3), "resumed_chunks"),
+                          (dict(recomputed=1), "recomputed_chunks"),
+                          (dict(equal=False), "resume_equals_full")):
+        failures, _ = compare(agg(**kwargs), agg())
+        assert any("bench_resume" in f and field in f
+                   for f in failures), field
+    # timing drift inside tolerance passes; identical aggregates pass
+    failures, _ = compare(agg(t=0.5), agg())
+    assert failures == []
+    failures, _ = compare(agg(), agg())
+    assert failures == []

@@ -109,6 +109,117 @@ def test_async_checkpoint():
         assert C.latest_step(d) == 7
 
 
+def test_stale_tmp_dir_is_purged_not_merged():
+    """A .tmp left by a crashed earlier write must not leak leftover
+    leaf files into the next checkpoint at the same step."""
+    with tempfile.TemporaryDirectory() as d:
+        stale = os.path.join(d, "step_000000005.tmp")
+        os.makedirs(stale)
+        with open(os.path.join(stale, "9999.bin"), "wb") as f:
+            f.write(b"leftover from a crashed writer")
+        C.save(d, 5, {"a": jnp.arange(4)})
+        final = os.path.join(d, "step_000000005")
+        assert sorted(os.listdir(final)) == ["0000.bin", "MANIFEST.json"]
+        restored, _ = C.restore(d, 5, {"a": jnp.arange(4)})
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.arange(4))
+
+
+def test_step_scan_ignores_stale_tmp_dirs():
+    """all_steps/latest_step never surface an in-flight or crashed .tmp,
+    even one that already contains a MANIFEST.json."""
+    with tempfile.TemporaryDirectory() as d:
+        C.save(d, 3, {"a": jnp.ones(2)})
+        tmp = os.path.join(d, "step_000000009.tmp")
+        os.makedirs(tmp)
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            f.write("{}")
+        assert C.all_steps(d) == [3]
+        assert C.latest_step(d) == 3
+
+
+def test_bf16_leaves_survive_raw_bytes_roundtrip():
+    tree = {"w": jnp.arange(8, dtype=jnp.bfloat16) / 4,
+            "b": jnp.float32(1.5)}
+    with tempfile.TemporaryDirectory() as d:
+        C.save(d, 1, tree)
+        restored, _ = C.restore(d, 1, tree)
+        assert restored["w"].dtype == jnp.bfloat16
+        np.testing.assert_array_equal(
+            np.asarray(restored["w"], np.float32),
+            np.asarray(tree["w"], np.float32))
+
+
+def test_gc_retains_newest_n():
+    with tempfile.TemporaryDirectory() as d:
+        for s in range(1, 6):
+            C.save(d, s, {"a": jnp.int32(s)}, keep=3)
+        assert C.all_steps(d) == [3, 4, 5]
+
+
+def test_manifest_meta_roundtrip():
+    meta = {"workload": "boolean", "edges_sha": "abc123", "chunks": 7}
+    with tempfile.TemporaryDirectory() as d:
+        C.save(d, 2, {"a": jnp.ones(3)}, meta=meta)
+        assert C.read_manifest(d, 2)["meta"] == meta
+        C.save(d, 4, {"a": jnp.ones(3)})
+        assert "meta" not in C.read_manifest(d, 4)
+
+
+def test_async_save_snapshots_buffers_before_returning():
+    """save(blocking=False) must deep-copy host buffers before the
+    writer thread starts: mutating the array right after submit may not
+    tear the checkpoint (np.asarray on a host ndarray is a view)."""
+    arr = np.arange(4096, dtype=np.int32)
+    with tempfile.TemporaryDirectory() as d:
+        t = C.save(d, 1, {"a": arr}, blocking=False)
+        arr[:] = -1                      # caller reuses its buffer
+        t.join()
+        restored, _ = C.restore(d, 1, {"a": arr})
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.arange(4096, dtype=np.int32))
+
+
+def test_checkpoint_hook_join_and_skip_policies(monkeypatch):
+    import threading
+
+    release = threading.Event()
+    joined = []
+
+    def fake_save(ckpt_dir, step, tree, *, blocking=True, keep=3,
+                  meta=None):
+        t = threading.Thread(target=release.wait, daemon=True)
+        orig_join = t.join
+
+        def join(*a):
+            joined.append(step)
+            release.set()
+            orig_join(*a)
+        t.join = join
+        t.start()
+        return t
+
+    monkeypatch.setattr(C, "save", fake_save)
+    hook = C.CheckpointHook("/nonexistent", keep=2, policy="skip")
+    assert hook.submit(1, {}) is True
+    assert hook.submit(2, {}) is False       # first write still in flight
+    assert hook.skipped == 1 and hook.written == 1
+    assert hook.pending is not None and hook.pending.is_alive()
+    hook.flush()
+    assert hook.pending is None
+
+    release.clear()
+    joined.clear()
+    hook = C.CheckpointHook("/nonexistent", keep=2)   # policy="join"
+    hook.submit(1, {})
+    hook.submit(2, {})                       # must join write 1 first
+    assert joined == [1]
+    assert hook.written == 2 and hook.skipped == 0
+    hook.flush()
+    with pytest.raises(ValueError):
+        C.CheckpointHook("/x", policy="overlap")
+
+
 def test_int8_compression_error_feedback():
     """With error feedback, compressed-grad SGD still converges."""
     p = {"w": jnp.ones((8,)) * 4}
@@ -130,6 +241,53 @@ def test_topk_compression_shapes_and_bytes():
     assert nz <= int(64 * 64 * 0.05) + 1
     raw, wire = CP.compressed_bytes(g, "topk", 0.05)
     assert wire < raw / 10
+
+
+def test_first_sweep_does_not_declare_hosts_dead():
+    """Regression: last_beat used to initialize to 0.0 while sweep()
+    defaulted to time.monotonic(), so a fresh monitor declared every
+    host dead before any beat could arrive."""
+    mon = FT.HeartbeatMonitor(4, interval_s=10.0, dead_after=3)
+    assert mon.sweep() == []
+    assert mon.alive_hosts == [0, 1, 2, 3]
+
+
+def test_heartbeat_injected_clock_never_mixes_time_scales():
+    """With clock=, construction / beat / sweep all read the same
+    virtual time: hosts die exactly when the virtual clock says so."""
+    t = [1000.0]
+    mon = FT.HeartbeatMonitor(3, interval_s=10.0, dead_after=3,
+                              clock=lambda: t[0])
+    assert mon.sweep() == []
+    for step in range(1, 8):
+        t[0] = 1000.0 + 10.0 * step
+        mon.beat(0)
+        mon.beat(1)
+    assert mon.sweep() == [2]          # never beat since construction
+    assert mon.alive_hosts == [0, 1]
+
+
+def test_straggler_stale_hosts_drop_out_of_the_window():
+    """A dead host's final step time must not pollute the median
+    forever: with stale_after=, classify() only considers hosts whose
+    last sample is recent on the injected clock."""
+    t = [0.0]
+    det = FT.StragglerDetector(window=8, threshold=3.0, evict_after=2,
+                               clock=lambda: t[0], stale_after=5.0)
+    for step in range(4):
+        t[0] = float(step)
+        for h in range(4):
+            det.record(h, 10.0 if h == 3 else 1.0)
+    strag, _ = det.classify()
+    assert strag == [3]
+    # host 3 dies; the others keep stepping past the staleness horizon
+    for step in range(4, 12):
+        t[0] = float(step)
+        for h in range(3):
+            det.record(h, 1.0)
+    strag, _ = det.classify()
+    assert 3 not in strag
+    assert det.classify(now=t[0]) == det.classify()
 
 
 def test_heartbeat_and_remesh():
