@@ -31,6 +31,7 @@ shrink), again bit-identity first.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 from typing import Callable, Dict, List, Optional
 
@@ -39,6 +40,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import EngineConfig, pack_bits, prepare_graph
+from repro.core.autotune import build_plan
 from repro.core.engine import apsp_engine
 from repro.graph import generators as gen
 from repro.kernels.bovm import fused_sweep, packed_push_sweep
@@ -156,6 +158,32 @@ def run(quick: bool = False, n_sources: int = 64, repeats: int = 10,
                 repeats).items():
             row[f"t_{mode}"] = st["best"]
             row[f"t_{mode}_median"] = st["median"]
+
+        # --- autotuned vs default config.  The roofline plan may change
+        # tiles, the fused gate and the auto-direction pin, but never
+        # results: dist bit-identity is asserted before anything is
+        # timed.  ``tuning_plan_checksum`` rides the hard regression
+        # gate — the static plan is a pure function of graph shape and
+        # backend, so a checksum change means the tuner (or the VMEM
+        # budget math behind it) decided differently, not that the
+        # machine was slow.  ``autotuned_beats_default`` is advisory
+        # (timing-derived).
+        plan = build_plan(pg, use_hlo=False)
+        row["tuning_plan_checksum"] = plan.checksum()
+        cfg_default = EngineConfig(mode="auto", source_batch=64)
+        cfg_tuned = dataclasses.replace(cfg_default, tuning=plan)
+        res_t = apsp_engine(pg, sources, config=cfg_tuned)
+        np.testing.assert_array_equal(np.asarray(res_t.dist),
+                                      np.asarray(res.dist))
+        row["autotuned_matches_default"] = True
+        for mode, st in time_interleaved_stats(
+                {"auto_default": make_go("auto"),
+                 "auto_tuned": make_kernel_go(cfg_tuned)},
+                max(2, repeats // 3)).items():
+            row[f"t_{mode}"] = st["best"]
+            row[f"t_{mode}_median"] = st["median"]
+        row["autotuned_beats_default"] = (
+            row["t_auto_tuned"] <= row["t_auto_default"] * TOLERANCE)
 
         families[name] = row
         if csv is not None:

@@ -67,7 +67,13 @@ _HARD_FAMILY_FIELDS = ("n_nodes", "n_edges", "n_sources", "sweeps",
                        # in-bench before the JSON is written)
                        "chunks_total", "dist_checksum",
                        "checkpoints_written", "resumed_chunks",
-                       "recomputed_chunks", "resume_equals_full")
+                       "recomputed_chunks", "resume_equals_full",
+                       # autotuner: the static roofline plan is a pure
+                       # function of graph shape + backend profile, so
+                       # its checksum changing means the tuner decided
+                       # differently (tiles / fused gate / direction
+                       # pins), never that the machine was slow
+                       "tuning_plan_checksum")
 _BENCHES = ("bench_apsp", "bench_weighted", "bench_sharded",
             "bench_centrality", "bench_batching", "bench_serving",
             "bench_dynamic", "bench_resume")
@@ -139,7 +145,8 @@ def compare(current: Dict, baseline: Dict
             for flag in ("auto_no_slower_than_best", "auto_beats_worse",
                          "fused_equals_per_sweep",
                          "packed_push_matches_f32",
-                         "oracle_p50_beats_exact"):
+                         "oracle_p50_beats_exact",
+                         "autotuned_beats_default"):
                 if brow.get(flag) and not crow.get(flag, True):
                     warnings.append(f"{bench}/{fam}: {flag} flipped "
                                     f"True -> False (timing-derived; "

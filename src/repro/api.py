@@ -33,10 +33,13 @@ same call.
 """
 from __future__ import annotations
 
+import dataclasses
+import os
 from typing import Optional, Sequence, Union
 
 import numpy as np
 
+from .core.autotune import TuningPlan, build_plan
 from .core.centrality import (MEASURES, CentralityConfig, CentralityResult,
                               centrality as _centrality)
 from .core.centrality import counting_apsp as _counting_apsp
@@ -231,6 +234,28 @@ class DawnGraph:
                 lenient=True)
         return IncrementalSSSP(g, sources, config=config)
 
+    # -- autotuning --------------------------------------------------------
+
+    @property
+    def tuning(self) -> Optional[TuningPlan]:
+        """The TuningPlan cached on this handle (None = untuned)."""
+        return self.options.tuning
+
+    def tune(self, *, use_hlo: bool = True, save=None,
+             profile=None) -> TuningPlan:
+        """Build a roofline :class:`TuningPlan` for this graph, cache it
+        on the handle (every later query consults it — tile sizes, the
+        fused gate, and deterministic ``mode="auto"`` direction pins),
+        and optionally ``save`` it for reproducible reruns
+        (``prepare(g, tuning="plan.json")``)."""
+        plan = build_plan(self.prepared(), weights=self._lane_weights(),
+                          profile=profile, use_hlo=use_hlo)
+        if save is not None:
+            plan.save(save)
+        self.options = dataclasses.replace(self.options, tuning=plan)
+        self._sharded = {}       # baked configs must pick the plan up
+        return plan
+
     def serve(self, *, mesh=None, **kwargs):
         """Construct a tiered :class:`repro.serve.GraphService` over the
         source graph (epoch-guarded when the graph is dynamic).  Keyword
@@ -252,8 +277,13 @@ def prepare(graph: Union[CSRGraph, DynamicCSRGraph], *, weights=None,
     construct one (``prepare(g, source_batch=64, use_kernel=False)``).
     ``weights=`` attaches static edge weights for the tropical semiring
     (a weighted :class:`DynamicCSRGraph` carries its own).
+    ``tuning=`` accepts a :class:`TuningPlan` or the path of a saved one
+    (loaded with the backend-fingerprint check) — the reproducibility
+    lock for ``mode="auto"`` runs; build one with :meth:`DawnGraph.tune`.
     """
     if options is not None and opts:
         raise ValueError("pass options= or plain keywords, not both")
+    if isinstance(opts.get("tuning"), (str, os.PathLike)):
+        opts["tuning"] = TuningPlan.load(opts["tuning"])
     return DawnGraph(graph, weights=weights,
                      options=options or SweepOptions(**opts))

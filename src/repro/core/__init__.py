@@ -31,6 +31,9 @@ from .engine import (EngineConfig, SweepStats, ApspResult, PreparedGraph,
                      choose_direction, measure_sweep_costs, apsp_engine,
                      apsp_engine_blocks)
 from .jobs import (JobMismatchError, JobResult, WORKLOADS, run_sweep_job)
+from .autotune import (BackendProfile, GraphStats, TuningPlan,
+                       backend_profile, build_plan, device_fingerprint,
+                       tune_tiles)
 
 __all__ = [
     "UNREACHED", "pack_bits", "unpack_bits", "popcount", "one_hot_frontier",
@@ -61,6 +64,8 @@ __all__ = [
     "frontier_stats", "sweep_costs", "choose_direction",
     "measure_sweep_costs", "apsp_engine", "apsp_engine_blocks",
     "JobMismatchError", "JobResult", "WORKLOADS", "run_sweep_job",
+    "BackendProfile", "GraphStats", "TuningPlan", "backend_profile",
+    "build_plan", "device_fingerprint", "tune_tiles",
 ]
 
 # --- deprecated caller-facing entry points --------------------------------

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph.csr import CSRGraph
+from . import autotune
 from . import sweep as S
 from .engine import (PreparedGraph, _resolve_kernel, frontier_stats,
                      prepare_graph)
@@ -180,12 +181,19 @@ def measure_counting_costs(pg: PreparedGraph, s: int,
 def _resolve_counting_direction(pg: PreparedGraph, s: int,
                                 cfg: CentralityConfig, use_kernel: bool,
                                 interpret: bool) -> Optional[int]:
-    """None -> per-sweep dynamic switch; int -> form fixed per batch."""
+    """None -> per-sweep dynamic switch; int -> form fixed per batch.
+    Pin precedence: explicit mode > TuningPlan argmin > wall-clock
+    calibration (see engine._resolve_direction)."""
     if cfg.mode != "auto":
         return COUNTING_FORM_NAMES.index(cfg.mode)
     dynamic = use_kernel if cfg.dynamic is None else cfg.dynamic
     if dynamic:
         return None
+    if cfg.tuning is not None:
+        pinned = cfg.tuning.pinned_direction(
+            "counting", s=s, n_pad=pg.n_pad, m_pad=pg.graph.m_pad)
+        if pinned is not None:
+            return pinned
     return int(np.argmin(measure_counting_costs(
         pg, s, cfg, use_kernel=use_kernel, interpret=interpret)))
 
@@ -196,6 +204,7 @@ def counting_apsp_blocks(g: Union[CSRGraph, PreparedGraph],
     """Stream (source_ids, dist_rows, sigma_rows, raw_state) one source
     tile at a time through the counting engine."""
     pg = g if isinstance(g, PreparedGraph) else prepare_graph(g)
+    config = autotune.apply(config, semiring="counting", n_pad=pg.n_pad)
     graph = pg.graph
     n = graph.n_nodes
     srcs = np.arange(n, dtype=np.int32) if sources is None else \
@@ -216,7 +225,9 @@ def counting_apsp_blocks(g: Union[CSRGraph, PreparedGraph],
         fused_steps = S.resolve_fused_steps(
             "counting", "push", fused_steps=config.fused_steps,
             max_steps=max_steps, use_kernel=use_kernel, n_pad=pg.n_pad,
-            bs=min(B, 128)) or 0
+            bs=min(B, 128),
+            budget=None if config.tuning is None
+            else config.tuning.vmem_budget) or 0
         if fused_steps:
             forced = PUSH       # fused blocks pin the push form
     # the dense operand only materializes when push can dispatch

@@ -50,6 +50,7 @@ from .. import compat
 from ..graph.csr import CSRGraph, _round_up
 from ..graph.partition import edge_partition_global
 from ..kernels import registry as kernel_registry
+from . import autotune
 from . import sweep as S
 from .engine import _resolve_kernel, frontier_stats
 from .frontier import (UNREACHED, one_hot_frontier, pack_bits,
@@ -182,6 +183,9 @@ def prepare_sharded(g: CSRGraph, mesh: Mesh, *, weights=None,
     meshes without vertex sharding."""
     C = dict(mesh.shape).get(MODEL_AXIS, 1)
     n_pad = g.n_padded(128 * C)
+    # TuningPlan overlay happens here, where the config is baked into the
+    # prepared operands (sharded_apsp refuses config= on a ShardedOperands)
+    config = autotune.apply(config, semiring=config.semiring, n_pad=n_pad)
     tropical = config.tropical
 
     lanes = None
@@ -392,7 +396,9 @@ def _make_runner(mesh: Mesh, cfg: ShardedConfig, n_pad: int, n_real: int,
                             fused_steps=cfg.fused_steps,
                             max_steps=cfg.max_sweeps or n_real,
                             use_kernel=True, n_pad=n_pad,
-                            bs=min(s_l, 128)) or 0
+                            bs=min(s_l, 128),
+                            budget=None if cfg.tuning is None
+                            else cfg.tuning.vmem_budget) or 0
                     if fused_steps_l:
                         fused = S.fused_form(
                             "boolean", adj_pull_l, "push",

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph.csr import CSRGraph
+from . import autotune
 from . import sweep as S
 from .frontier import UNREACHED, one_hot_frontier
 from .options import SweepOptions
@@ -317,12 +318,22 @@ def _resolve_kernel(cfg: EngineConfig) -> Tuple[bool, bool]:
 
 def _resolve_direction(pg: "PreparedGraph", s: int, cfg: EngineConfig,
                        use_kernel: bool, interpret: bool) -> Optional[int]:
-    """None -> per-sweep dynamic switch; int -> direction fixed per batch."""
+    """None -> per-sweep dynamic switch; int -> direction fixed per batch.
+
+    Precedence on the pinned path: an explicit ``mode=`` wins, then a
+    :class:`~repro.core.autotune.TuningPlan` (deterministic roofline
+    argmin), then wall-clock calibration (the legacy fallback — the only
+    non-deterministic regime, kept for plan-less runs)."""
     if cfg.mode != "auto":
         return DIRECTION_NAMES.index(cfg.mode)
     dynamic = use_kernel if cfg.dynamic is None else cfg.dynamic
     if dynamic:
         return None
+    if cfg.tuning is not None:
+        pinned = cfg.tuning.pinned_direction(
+            "boolean", s=s, n_pad=pg.n_pad, m_pad=pg.graph.m_pad)
+        if pinned is not None:
+            return pinned
     costs = measure_sweep_costs(pg, s, cfg, use_kernel=use_kernel,
                                 interpret=interpret)
     return int(np.argmin(costs))
@@ -336,6 +347,9 @@ def apsp_engine_blocks(
     """Stream (source_ids, dist_rows, raw_sweep_state) one source tile at a
     time — the non-materializing form for large n."""
     pg = g if isinstance(g, PreparedGraph) else prepare_graph(g)
+    # TuningPlan overlay (no-op without one): tiles clamped to this
+    # graph's padding, fused gate, cost constants
+    config = autotune.apply(config, semiring="boolean", n_pad=pg.n_pad)
     graph = pg.graph
     n = graph.n_nodes
     srcs = np.arange(n, dtype=np.int32) if sources is None else \
@@ -358,7 +372,9 @@ def apsp_engine_blocks(
         fused_steps = S.resolve_fused_steps(
             "boolean", "push", fused_steps=config.fused_steps,
             max_steps=max_steps, use_kernel=use_kernel, n_pad=pg.n_pad,
-            bs=min(B, 128)) or 0
+            bs=min(B, 128),
+            budget=None if config.tuning is None
+            else config.tuning.vmem_budget) or 0
         if fused_steps:
             forced_dir = PUSH   # fused blocks pin one direction
     # only materialize the O(n_pad^2) operands the resolved direction can

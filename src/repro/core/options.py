@@ -28,7 +28,10 @@ either sets both).
 from __future__ import annotations
 
 import dataclasses
-from typing import ClassVar, Optional, Tuple
+from typing import TYPE_CHECKING, ClassVar, Optional, Tuple
+
+if TYPE_CHECKING:  # import cycle: autotune builds ON options
+    from .autotune import TuningPlan
 
 __all__ = ["SweepOptions"]
 
@@ -54,6 +57,12 @@ class SweepOptions:
     # kernel tiles (bs adapts to the source batch)
     bn: int = 128
     bk: int = 128
+    # optional roofline TuningPlan (core/autotune.py): every engine
+    # overlays it via autotune.apply (tiles, fused gate, cost constants)
+    # and, on the calibrated mode="auto" path, pins the direction from
+    # plan.pinned_direction instead of wall-clock timing — the
+    # determinism lock.  Frozen/hashable, so it rides the jit static arg.
+    tuning: Optional["TuningPlan"] = None
 
     # subclasses pin the form names they dispatch; () = accept anything
     _mode_names: ClassVar[Tuple[str, ...]] = ()

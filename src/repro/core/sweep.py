@@ -231,7 +231,8 @@ def sweep_loop(forms: Sequence[SweepForm], state: SweepState, *,
 
 def resolve_fused_steps(semiring, form: str, *, fused_steps: int,
                         max_steps: int, use_kernel: bool, n_pad: int,
-                        bs: int) -> Optional[int]:
+                        bs: int, budget: Optional[int] = None
+                        ) -> Optional[int]:
     """Static fused-block length for an engine run, or ``None`` for the
     per-sweep path.  ``fused_steps`` is the engine config's request: 0 =
     off, -1 = whole fixpoint per invocation, K > 0 = K-sweep blocks.
@@ -239,14 +240,15 @@ def resolve_fused_steps(semiring, form: str, *, fused_steps: int,
     registers a fused form for ``form``, and only when the fused kernel's
     whole-operand VMEM residency (``vmem_bytes(form="fused")``) fits the
     per-core budget — oversized graphs silently fall back to per-sweep
-    dispatch rather than blowing VMEM."""
+    dispatch rather than blowing VMEM.  ``budget`` overrides the static
+    default (engines pass their TuningPlan's per-device figure)."""
     if not fused_steps or not use_kernel or not kernel_registry.has(semiring):
         return None
     ks = kernel_registry.get(semiring)
     if form not in ks.fused_forms:
         return None
     if ks.vmem_bytes(form="fused", bs=bs, n=n_pad) > \
-            kernel_common.VMEM_BUDGET_BYTES:
+            kernel_common.vmem_limit(budget):
         return None
     return max_steps if fused_steps < 0 else min(fused_steps, max_steps)
 

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph.csr import CSRGraph
+from . import autotune
 from . import sweep as S
 from .engine import _resolve_kernel, frontier_stats
 from .frontier import one_hot_frontier
@@ -262,12 +263,19 @@ def measure_weighted_costs(pw: PreparedWeightedGraph, s: int,
 def _resolve_weighted_direction(pw: PreparedWeightedGraph, s: int,
                                 cfg: WeightedConfig, use_kernel: bool,
                                 interpret: bool) -> Optional[int]:
-    """None -> per-sweep dynamic switch; int -> form fixed per batch."""
+    """None -> per-sweep dynamic switch; int -> form fixed per batch.
+    Pin precedence: explicit mode > TuningPlan argmin > wall-clock
+    calibration (see engine._resolve_direction)."""
     if cfg.mode != "auto":
         return WEIGHTED_FORM_NAMES.index(cfg.mode)
     dynamic = use_kernel if cfg.dynamic is None else cfg.dynamic
     if dynamic:
         return None
+    if cfg.tuning is not None:
+        pinned = cfg.tuning.pinned_direction(
+            "tropical", s=s, n_pad=pw.n_pad, m_pad=pw.graph.m_pad)
+        if pinned is not None:
+            return pinned
     return int(np.argmin(measure_weighted_costs(
         pw, s, cfg, use_kernel=use_kernel, interpret=interpret)))
 
@@ -285,6 +293,7 @@ def weighted_apsp(g: Union[CSRGraph, PreparedWeightedGraph],
     """
     pw = g if isinstance(g, PreparedWeightedGraph) else \
         prepare_weighted(g, weights)
+    config = autotune.apply(config, semiring="tropical", n_pad=pw.n_pad)
     graph = pw.graph
     n = graph.n_nodes
     srcs = np.arange(n, dtype=np.int32) if sources is None else \
@@ -307,7 +316,9 @@ def weighted_apsp(g: Union[CSRGraph, PreparedWeightedGraph],
         fused_steps = S.resolve_fused_steps(
             "tropical", "dense", fused_steps=config.fused_steps,
             max_steps=max_sweeps, use_kernel=use_kernel, n_pad=pw.n_pad,
-            bs=min(B, 128)) or 0
+            bs=min(B, 128),
+            budget=None if config.tuning is None
+            else config.tuning.vmem_budget) or 0
         if fused_steps:
             forced = DENSE      # fused blocks pin the dense form
     # only materialize the O(n_pad^2) dense operand when it can dispatch

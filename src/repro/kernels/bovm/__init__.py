@@ -8,14 +8,16 @@ from .. import common, registry
 
 
 def vmem_bytes(*, form: str = "push", bs: int | None = None, bn: int = 128,
-               bk: int = 512, wk: int = 128, n: int = 1152) -> int:
+               bk: int = 512, wk: int = 128, n: int = 1152, **_) -> int:
     """Resident VMEM of one grid step (docs/ARCHITECTURE.md table).
 
     ``bs`` defaults to the tile the engine actually dispatches: 128 for
     the push forms, 8 for the bit-packed pull form (``sweep.boolean_forms``
     caps the pull source tile at ``min(s, 8)``).  ``form="fused"`` prices
     the multi-sweep persistent kernel, whose whole packed operand stays
-    resident — pass the padded node count ``n``.
+    resident — pass the padded node count ``n``.  Extra keywords are
+    ignored so the autotuner can price every KernelSet with one uniform
+    call (core/autotune.py).
     """
     if form == "push":   # packed words + i32 dist/acc, i8+i32 out
         return common.pull_vmem_bytes(128 if bs is None else bs, bn, wk,

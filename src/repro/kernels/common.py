@@ -33,7 +33,28 @@ CompilerParams = getattr(pltpu, "CompilerParams", None) or \
     pltpu.TPUCompilerParams
 
 MXU_ALIGN = 128                      # matmul dims must be multiples of this
-VMEM_BUDGET_BYTES = 16 * 2 ** 20     # ~16 MB/core; tiles must sit well under
+# default per-core budget when no TuningPlan overrides it (the historical
+# hard-coded table value; core/autotune.py BackendProfile carries the
+# per-device figure and threads it through vmem_limit())
+VMEM_BUDGET_BYTES = 16 * 2 ** 20
+
+# tile-edge candidates the autotuner searches, largest first (all
+# MXU-aligned; 128 is always a candidate so every padded n divides one)
+TILE_CANDIDATES = (512, 256, 128)
+
+
+def vmem_limit(budget: int | None = None) -> int:
+    """The per-core VMEM byte budget tile plans must fit: ``budget``
+    when a BackendProfile/TuningPlan supplies one, else the static
+    default."""
+    return VMEM_BUDGET_BYTES if budget is None else int(budget)
+
+
+def tile_candidates(n_pad: int) -> tuple[int, ...]:
+    """MXU-aligned tile edges that divide ``n_pad``, largest first."""
+    cands = tuple(c for c in TILE_CANDIDATES
+                  if c <= n_pad and n_pad % c == 0)
+    return cands or (MXU_ALIGN,)
 
 
 def default_interpret() -> bool:

@@ -5,12 +5,12 @@ from .. import common, registry
 
 
 def vmem_bytes(*, form: str = "push", bs: int = 128, bn: int = 128,
-               bk: int = 128, n: int = 1152) -> int:
+               bk: int = 128, n: int = 1152, **_) -> int:
     """Resident VMEM of one grid step (docs/ARCHITECTURE.md table):
     f32 fsigma tile + int8 adj tile + the (dist i32, sigma f32) state
     pair + f32 acc + (i8, i32, f32) outputs.  ``form="fused"`` prices the
     multi-sweep persistent kernel (whole int8 adjacency resident plus the
-    carried pair)."""
+    carried pair).  Extra keywords are ignored (uniform autotuner call)."""
     if form == "fused":
         return common.fused_vmem_bytes(
             bs=bs, n=n, operand_bytes=n * n * 1,

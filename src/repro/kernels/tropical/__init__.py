@@ -7,8 +7,9 @@ from .. import common, registry
 
 def vmem_bytes(*, form: str = "dense", bs: int = 128, bn: int = 128,
                bk: int = 128, s: int = 64, n_pad: int = 1152,
-               eb: int = 128, n: int = 1152) -> int:
-    """Resident VMEM of one grid step (docs/ARCHITECTURE.md table)."""
+               eb: int = 128, n: int = 1152, **_) -> int:
+    """Resident VMEM of one grid step (docs/ARCHITECTURE.md table).
+    Extra keywords are ignored (uniform autotuner call)."""
     if form == "dense":  # f32 fdist + f32 W + f32 dist/acc, i8+f32 out
         return common.push_vmem_bytes(bs, bn, bk, f_itemsize=4, a_itemsize=4,
                                       d_itemsize=4, acc_itemsize=4,

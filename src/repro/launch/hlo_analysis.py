@@ -301,9 +301,12 @@ def analyze(hlo: str) -> HloStats:
     nbytes = 0.0
     wire = 0.0
     coll_ops: List[dict] = []
-    for comp in comps.values():
+    for key, comp in comps.items():
         m = mult.get(comp.name, 0.0)
-        if m <= 0 or comp.name == "__entry__":
+        # skip the "__entry__" alias key: it holds the same object as the
+        # entry's real name, and iterating both double-counts entry-level
+        # instructions (dots outside any loop body)
+        if m <= 0 or key == "__entry__":
             continue
         is_sched = comp.name in scheduled or comp.name == entry_name
         for ins in comp.instrs:
@@ -335,3 +338,13 @@ def analyze_file(path: str) -> HloStats:
     opener = gzip.open if path.endswith(".gz") else open
     with opener(path, "rt") as f:
         return analyze(f.read())
+
+
+def analyze_jitted(fn, *args, **kwargs) -> HloStats:
+    """Lower + compile a callable and :func:`analyze` its optimized HLO —
+    the convenience behind the autotuner's per-form pricing
+    (core/autotune.py).  ``fn`` may already be jitted (anything with
+    ``.lower``); a plain callable is wrapped in ``jax.jit`` first."""
+    import jax
+    jitted = fn if hasattr(fn, "lower") else jax.jit(fn)
+    return analyze(jitted.lower(*args, **kwargs).compile().as_text())

@@ -30,19 +30,44 @@ from .hlo_analysis import analyze_file
 from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
 
+def roofline_terms(flops: float, bytes_accessed: float,
+                   wire_bytes: float = 0.0, *,
+                   peak_flops: float = PEAK_FLOPS_BF16,
+                   hbm_bw: float = HBM_BW, ici_bw: float = ICI_BW) -> dict:
+    """The three roofline terms in seconds plus the dominant one — the
+    reusable core of :func:`analyze_cell` (the autotuner prices sweep
+    forms with it, core/autotune.py)."""
+    t_comp = flops / peak_flops
+    t_mem = bytes_accessed / hbm_bw
+    t_coll = wire_bytes / ici_bw
+    dominant = max((("compute", t_comp), ("memory", t_mem),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {"t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll, "dominant": dominant}
+
+
+_REQUIRED_CELL_KEYS = ("arch", "shape", "mesh", "kind", "n_devices",
+                       "meta", "memory")
+
+
 def analyze_cell(json_path: str) -> dict:
     with open(json_path) as f:
         rec = json.load(f)
+    missing = [k for k in _REQUIRED_CELL_KEYS if k not in rec]
+    if missing:
+        raise ValueError(
+            f"{json_path}: dry-run record missing keys {missing}")
+    if "peak_bytes" not in rec["memory"]:
+        raise ValueError(f"{json_path}: memory record has no peak_bytes")
     hlo_path = json_path.replace(".json", ".hlo.gz")
     st = analyze_file(hlo_path)
 
     chips = rec["n_devices"]
     meta = rec["meta"]
-    t_comp = st.flops / PEAK_FLOPS_BF16
-    t_mem = st.bytes_accessed / HBM_BW
-    t_coll = st.wire_bytes / ICI_BW
-    dominant = max((("compute", t_comp), ("memory", t_mem),
-                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    terms = roofline_terms(st.flops, st.bytes_accessed, st.wire_bytes)
+    t_comp, t_mem, t_coll = (terms["t_compute_s"], terms["t_memory_s"],
+                             terms["t_collective_s"])
+    dominant = terms["dominant"]
     model_flops_dev = meta.get("model_flops", 0.0) / chips
     bound = max(t_comp, t_mem, t_coll, 1e-30)
     t_model = model_flops_dev / PEAK_FLOPS_BF16

@@ -22,6 +22,7 @@ from oracles import adversarial_families, bfs_dists
 
 import repro as dawn
 from repro.core import SweepOptions
+from repro.core.autotune import build_plan
 from repro.core.engine import EngineConfig, apsp_engine
 from repro.core.centrality import CentralityConfig, counting_apsp
 from repro.core.jobs import JobMismatchError, JobResult, run_sweep_job
@@ -47,12 +48,15 @@ def _graphs():
             if name in keep}
 
 
-# Pin the sweep form: mode="auto" on the reference (CPU) path picks the
-# direction by wall-clock calibration, so direction_counts are not
-# reproducible across invocations (dist / sigma / sweeps / edges_touched
-# are form-invariant and stay bit-identical under any mode).  "sparse"
-# is a valid form for all three workloads.
-OPTS = SweepOptions(source_batch=8, mode="sparse")
+# mode="auto" used to need a pinned form here: the reference (CPU) path
+# picked the direction by wall-clock calibration, so direction_counts
+# were not reproducible across invocations.  A TuningPlan replaces the
+# calibration with an analytic roofline argmin (core/autotune.py), which
+# makes auto deterministic — the very property these resume tests
+# compare.  One static plan serves every family: the direction pin uses
+# per-call (s, n_pad, m_pad) and tiles clamp per graph.
+_PLAN = build_plan(_graphs()["random_ragged"], use_hlo=False)
+OPTS = SweepOptions(source_batch=8, mode="auto", tuning=_PLAN)
 
 
 def _assert_results_equal(a: JobResult, b: JobResult):

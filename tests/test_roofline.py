@@ -1,0 +1,222 @@
+"""launch/roofline.py: the roofline terms, dry-run cell analysis on a
+real compiled-HLO fixture, malformed-input rejection, and a golden-file
+check of the markdown report.
+
+The HLO fixture is produced in-process (jit a matmul, gzip its optimized
+HLO) so the numbers ``analyze_cell`` reports can be cross-checked against
+an independent ``analyze_file`` pass over the same artifact — no stored
+HLO blobs to rot.
+"""
+import gzip
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import roofline
+from repro.launch.hlo_analysis import analyze_file, analyze_jitted
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.roofline import analyze_cell, markdown_table, roofline_terms
+
+_GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                       "roofline_golden.md")
+
+
+# --------------------------------------------------------------------------
+# roofline_terms: the reusable core
+# --------------------------------------------------------------------------
+
+def test_roofline_terms_exact():
+    t = roofline_terms(flops=197e12, bytes_accessed=819e9 / 2,
+                       wire_bytes=0.0)
+    assert t["t_compute_s"] == pytest.approx(1.0)
+    assert t["t_memory_s"] == pytest.approx(0.5)
+    assert t["t_collective_s"] == 0.0
+    assert t["dominant"] == "compute"
+
+
+@pytest.mark.parametrize("flops,mem,wire,want", [
+    (1e12, 1e9, 0.0, "compute"),      # 5ms compute vs 1.2ms memory
+    (1e9, 1e12, 0.0, "memory"),       # 1.2s memory dominates
+    (1e9, 1e9, 1e12, "collective"),   # 20s on the wire
+    (0.0, 0.0, 0.0, "compute"),       # tie → first term wins, no crash
+])
+def test_roofline_terms_dominant(flops, mem, wire, want):
+    assert roofline_terms(flops, mem, wire)["dominant"] == want
+
+
+def test_roofline_terms_custom_peaks():
+    t = roofline_terms(100.0, 100.0, 100.0, peak_flops=10.0, hbm_bw=20.0,
+                       ici_bw=50.0)
+    assert t["t_compute_s"] == pytest.approx(10.0)
+    assert t["t_memory_s"] == pytest.approx(5.0)
+    assert t["t_collective_s"] == pytest.approx(2.0)
+    assert t["dominant"] == "compute"
+
+
+# --------------------------------------------------------------------------
+# analyze_cell on a real compiled-HLO fixture
+# --------------------------------------------------------------------------
+
+def _write_cell(tmp_path, name="cell", *, record=None, with_hlo=True):
+    """A dry-run cell: crafted JSON + the gzipped optimized HLO of a
+    512×512 matmul (real compiler output, built in-process)."""
+    rec = {
+        "arch": "dawn-sweep", "shape": "n512", "mesh": "1x1",
+        "kind": "apsp", "n_devices": 1,
+        "meta": {"model_flops": 2.0 * 512 ** 3},
+        "memory": {"peak_bytes": 3 * 512 * 512 * 4,
+                   "bf16_promotion_bytes": 0},
+        "compile_s": 0.25,
+    }
+    if record is not None:
+        rec = record
+    json_path = str(tmp_path / f"{name}.json")
+    with open(json_path, "w") as f:
+        json.dump(rec, f)
+    if with_hlo:
+        a = jnp.zeros((512, 512), jnp.float32)
+        text = jax.jit(lambda x, y: x @ y).lower(a, a).compile().as_text()
+        with gzip.open(json_path.replace(".json", ".hlo.gz"), "wt") as f:
+            f.write(text)
+    return json_path
+
+
+def test_analyze_cell_matches_independent_hlo_pass(tmp_path):
+    json_path = _write_cell(tmp_path)
+    row = analyze_cell(json_path)
+    st = analyze_file(json_path.replace(".json", ".hlo.gz"))
+    assert row["hlo_flops_dev"] == st.flops
+    assert row["t_compute_s"] == pytest.approx(st.flops / PEAK_FLOPS_BF16)
+    assert row["t_memory_s"] == pytest.approx(st.bytes_accessed / HBM_BW)
+    assert row["t_collective_s"] == pytest.approx(st.wire_bytes / ICI_BW)
+    # a single-device matmul moves no collective traffic
+    assert row["wire_bytes_dev"] == 0.0
+    assert row["n_collective_sites"] == 0
+    # the matmul's 2N³ model flops are all real HLO flops
+    assert row["useful_flops_ratio"] == pytest.approx(
+        (2.0 * 512 ** 3) / st.flops)
+    assert 0.0 < row["roofline_fraction"] <= 1.0 + 1e-9
+    assert row["dominant"] in ("compute", "memory", "collective")
+    assert row["peak_bytes_dev"] == 3 * 512 * 512 * 4
+    assert row["compile_s"] == 0.25
+
+
+def test_analyze_cell_divides_model_flops_by_chips(tmp_path):
+    base = json.loads(json.dumps({
+        "arch": "a", "shape": "s", "mesh": "m", "kind": "k",
+        "n_devices": 4, "meta": {"model_flops": 8.0 * 512 ** 3},
+        "memory": {"peak_bytes": 1}}))
+    json_path = _write_cell(tmp_path, "multi", record=base)
+    row = analyze_cell(json_path)
+    st = analyze_file(json_path.replace(".json", ".hlo.gz"))
+    assert row["chips"] == 4
+    assert row["useful_flops_ratio"] == pytest.approx(
+        (8.0 * 512 ** 3 / 4) / st.flops)
+
+
+@pytest.mark.parametrize("drop", ["arch", "mesh", "n_devices", "memory"])
+def test_analyze_cell_rejects_missing_keys(tmp_path, drop):
+    rec = {"arch": "a", "shape": "s", "mesh": "m", "kind": "k",
+           "n_devices": 1, "meta": {}, "memory": {"peak_bytes": 1}}
+    del rec[drop]
+    json_path = _write_cell(tmp_path, f"missing_{drop}", record=rec,
+                            with_hlo=False)
+    with pytest.raises(ValueError, match=f"missing keys.*{drop}"):
+        analyze_cell(json_path)
+
+
+def test_analyze_cell_rejects_memory_without_peak_bytes(tmp_path):
+    rec = {"arch": "a", "shape": "s", "mesh": "m", "kind": "k",
+           "n_devices": 1, "meta": {}, "memory": {"live_bytes": 7}}
+    json_path = _write_cell(tmp_path, "nopeak", record=rec, with_hlo=False)
+    with pytest.raises(ValueError, match="peak_bytes"):
+        analyze_cell(json_path)
+
+
+def test_analyze_cell_requires_hlo_artifact(tmp_path):
+    json_path = _write_cell(tmp_path, "nohlo", with_hlo=False)
+    with pytest.raises(FileNotFoundError):
+        analyze_cell(json_path)
+
+
+def test_analyze_cell_rejects_malformed_json(tmp_path):
+    path = tmp_path / "broken.json"
+    path.write_text("{not json")
+    with pytest.raises(json.JSONDecodeError):
+        analyze_cell(str(path))
+
+
+# --------------------------------------------------------------------------
+# markdown_table: golden file
+# --------------------------------------------------------------------------
+
+def _golden_rows():
+    """Crafted rows (deliberately unsorted — the table must sort by
+    arch/shape/mesh)."""
+    def row(arch, shape, mesh, dominant, tc, tm, tcl, useful, frac, gib):
+        return {"arch": arch, "shape": shape, "mesh": mesh,
+                "dominant": dominant, "t_compute_s": tc, "t_memory_s": tm,
+                "t_collective_s": tcl, "useful_flops_ratio": useful,
+                "roofline_fraction": frac,
+                "peak_bytes_dev": gib * 2 ** 30}
+    return [
+        row("sweep", "n8192", "4x2", "collective",
+            0.0041, 0.0023, 0.0087, 0.62, 0.291, 5.5),
+        row("sweep", "n1152", "1x1", "compute",
+            0.00125, 0.0004, 0.0, 0.97, 0.968, 0.4),
+        row("bfs-baseline", "n1152", "1x1", "memory",
+            0.0002, 0.0051, 0.0, 0.18, 0.039, 1.2),
+    ]
+
+
+def test_markdown_table_golden():
+    got = markdown_table(_golden_rows())
+    with open(_GOLDEN) as f:
+        want = f.read().rstrip("\n")
+    assert got == want, (
+        "markdown_table output drifted from tests/data/roofline_golden.md "
+        "— if the format change is intentional, regenerate the golden "
+        "file from this test's _golden_rows()")
+
+
+def test_markdown_table_sorts_rows():
+    lines = markdown_table(_golden_rows()).splitlines()
+    body = [ln.split("|")[1].strip() for ln in lines[2:]]
+    assert body == sorted(body)
+
+
+def test_markdown_table_empty_is_header_only():
+    table = markdown_table([])
+    assert len(table.rstrip("\n").splitlines()) == 2  # header + separator
+    assert table.startswith("| arch |")
+
+
+def test_markdown_table_renders_analyze_cell_row(tmp_path):
+    """The two halves actually compose: a real analyzed cell renders."""
+    table = markdown_table([analyze_cell(_write_cell(tmp_path))])
+    assert "| dawn-sweep | n512 | 1x1 |" in table
+
+
+# --------------------------------------------------------------------------
+# analyze_jitted: the autotuner's pricing entry point
+# --------------------------------------------------------------------------
+
+def test_analyze_jitted_counts_matmul():
+    a = jnp.zeros((256, 128), jnp.float32)
+    b = jnp.zeros((128, 128), jnp.float32)
+    st = analyze_jitted(lambda x, y: x @ y, a, b)
+    # 2·M·N·K exactly (dims MXU-aligned so the compiler can't pad them)
+    assert st.flops == pytest.approx(2 * 256 * 128 * 128)
+    assert st.bytes_accessed > 0
+    assert st.wire_bytes == 0.0
+
+
+def test_analyze_jitted_accepts_prejitted():
+    a = jnp.zeros((64, 64), jnp.float32)
+    jitted = jax.jit(lambda x: x @ x)
+    st = analyze_jitted(jitted, a)
+    assert st.flops > 0
